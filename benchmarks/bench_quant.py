@@ -1,0 +1,61 @@
+"""Figs. 5/6 — the 3-phase quantization-aware training for several QLFs:
+course of the average bit width and of the BER, final learned formats, and
+the TPU deployment-dtype mapping."""
+from __future__ import annotations
+
+import jax
+
+from repro.channels import imdd
+from repro.core import qat as qat_lib
+from repro.core.equalizer import CNNEqConfig
+from repro.core.train_eq import EqTrainConfig, train_equalizer
+from repro.data.equalizer_data import channel_fn
+
+from .common import Bench
+
+QLFS = (5e-2, 5e-3, 5e-4)         # paper sweeps 0.5 … 0.0005
+
+
+def run(steps: int = 600) -> dict:
+    bench = Bench("quantization", "Figs. 5/6 / §4")
+    fn = channel_fn("imdd", imdd.IMDDConfig())
+    cfg = CNNEqConfig()
+    tcfg = EqTrainConfig(steps=steps, batch=8, seq_syms=256, lr=3e-3,
+                         eval_syms=1 << 14)
+    key = jax.random.PRNGKey(0)
+
+    _, _, fp = train_equalizer(key, "cnn", cfg, fn, tcfg)
+    bench.record("fp32", {"ber": fp["ber"]})
+    print(f"[bench_quant] fp32 BER {fp['ber']:.3e}")
+
+    curves = {}
+    for qlf in QLFS:
+        qcfg = qat_lib.QATConfig(qlf=qlf, init_int_bits=8.0,
+                                 init_frac_bits=8.0)
+        params, _, info = train_equalizer(key, "cnn", cfg, fn, tcfg,
+                                          qat_cfg=qcfg, record_every=25)
+        dep = {name: qat_lib.deployment_dtype(q)
+               for name, q in params["qat"].items()}
+        curves[f"qlf_{qlf:g}"] = {
+            "ber": info["ber"],
+            "bits_params": info["bits_params"],
+            "bits_acts": info["bits_acts"],
+            "deployment_dtypes": dep,
+            "history": info["history"],
+        }
+        print(f"[bench_quant] qlf={qlf:g}: {info['bits_params']:.1f}b w / "
+              f"{info['bits_acts']:.1f}b a, BER {info['ber']:.3e} → {dep}")
+    bench.record("qlf_curves", curves)
+    # paper claim: a moderate QLF reaches ≈13b weights / ≈10b activations
+    # at ~fp32 BER; aggressive QLFs sacrifice BER (Fig. 6)
+    mid = curves["qlf_0.005"]
+    bench.record("claim_moderate_qlf_near_fp32",
+                 bool(mid["ber"] < max(3 * fp["ber"], fp["ber"] + 0.02)))
+    bench.record("claim_aggressive_qlf_fewer_bits", bool(
+        curves["qlf_0.05"]["bits_params"]
+        <= curves["qlf_0.0005"]["bits_params"]))
+    return bench.finish()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,84 @@
+"""Table 1 analogue + §Roofline — aggregate the dry-run JSONs into the
+roofline table (one row per architecture × shape at 256 chips), identify
+each cell's bottleneck, and emit the markdown table EXPERIMENTS.md embeds."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from .common import REPORT_DIR, Bench
+
+DRYRUN_DIR = REPORT_DIR / "dryrun"
+
+
+def load_cells(tag: str = "sp"):
+    cells = []
+    for f in sorted(DRYRUN_DIR.glob(f"*_{tag}.json")):
+        d = json.loads(f.read_text())
+        cells.append(d)
+    return cells
+
+
+def markdown_table(cells) -> str:
+    hdr = ("| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | "
+           "bottleneck | useful/HLO | MFU@roof | fits HBM |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for c in cells:
+        if c.get("status") == "skipped":
+            rows.append(f"| {c['arch']} | {c['shape']} | — | — | — | "
+                        f"skipped | — | — | — |")
+            continue
+        if c.get("status") != "ok":
+            rows.append(f"| {c['arch']} | {c['shape']} | — | — | — | "
+                        f"FAILED | — | — | — |")
+            continue
+        r = c["roofline"]
+        mem = c.get("memory", {})
+        rows.append(
+            f"| {c['arch']} | {c['shape']} "
+            f"| {r['t_compute_s']*1e3:.2f} | {r['t_memory_s']*1e3:.2f} "
+            f"| {r['t_collective_s']*1e3:.2f} | {r['bottleneck']} "
+            f"| {r['useful_flops_ratio']:.2f} "
+            f"| {r['mfu_at_roofline']*100:.1f}% "
+            f"| {mem.get('fits_hbm', '—')} |")
+    return hdr + "\n".join(rows)
+
+
+def run() -> dict:
+    bench = Bench("roofline_table", "Table 1 / §Roofline")
+    cells = load_cells("sp")
+    if not cells:
+        print("[bench_roofline] no dry-run artifacts under", DRYRUN_DIR,
+              "— run `python -m repro.launch.dryrun --all` first")
+        bench.record("cells", 0)
+        return bench.finish()
+    ok = [c for c in cells if c.get("status") == "ok"]
+    bench.record("n_cells", len(cells))
+    bench.record("n_ok", len(ok))
+    bench.record("n_skipped",
+                 len([c for c in cells if c.get("status") == "skipped"]))
+    table = markdown_table(cells)
+    (REPORT_DIR / "roofline_table.md").write_text(table)
+    bench.record("table_path", str(REPORT_DIR / "roofline_table.md"))
+
+    # bottleneck census + hillclimb candidates
+    census = {}
+    for c in ok:
+        b = c["roofline"]["bottleneck"]
+        census[b] = census.get(b, 0) + 1
+    bench.record("bottleneck_census", census)
+    worst = min(ok, key=lambda c: c["roofline"]["mfu_at_roofline"]
+                if c["kind"] == "train" else 1.0)
+    most_coll = max(ok, key=lambda c: c["roofline"]["t_collective_s"]
+                    / max(c["roofline"]["t_step_s"], 1e-12))
+    bench.record("hillclimb_candidates", {
+        "worst_mfu_train": f"{worst['arch']}×{worst['shape']}",
+        "most_collective_bound": f"{most_coll['arch']}×{most_coll['shape']}",
+    })
+    print(f"[bench_roofline] {len(ok)} cells ok; census {census}")
+    return bench.finish()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""§7.2 — the 64-instance high-throughput configuration: multi-instance
+halo-partitioned equalization ≡ the single-instance output, overlap
+accounting at N_i = 64, and the end-to-end stream path (OGM → split →
+64 × CNN → merge → ORM) in its pure-JAX reference form (the shard_map
+version runs in tests/test_halo.py on 8 fake devices)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.channels import imdd
+from repro.configs import equalizer_ht as HT
+from repro.core import equalizer as eq
+from repro.core import stream_partition as sp
+from repro.core import timing_model as tm
+
+from .common import Bench
+
+
+def run(n_syms_per_inst: int = 1024) -> dict:
+    bench = Bench("stream_64inst", "§7.2 / Fig. 9")
+    cfg = HT.CNN
+    n_inst = HT.N_INSTANCES
+    key = jax.random.PRNGKey(0)
+    params = eq.init(key, cfg)
+    folded = eq.fold_bn(params, eq.init_bn_state(cfg), cfg)
+    apply_fn = lambda chunks: eq.apply_folded(folded, chunks, cfg)
+
+    n_syms = n_syms_per_inst * n_inst
+    rx, _ = imdd.simulate(key, imdd.IMDDConfig(), n_syms)
+
+    y_split = sp.partitioned_apply(apply_fn, rx, n_inst, cfg)
+    y_ref = apply_fn(rx[None])[0]
+    o = sp.overlap_symbols(cfg)
+    interior_err = float(jnp.max(jnp.abs(y_split[o:-o] - y_ref[o:-o])))
+
+    o_act = sp.actual_overlap(cfg, n_inst)
+    overhead = 2.0 * o_act / n_syms_per_inst
+    bench.record("n_instances", n_inst)
+    bench.record("o_sym", o)
+    bench.record("o_act", o_act)                      # paper: 1024 @ N_i=64
+    bench.record("interior_max_abs_err", interior_err)
+    bench.record("overlap_overhead_at_l_inst",
+                 {"l_inst": n_syms_per_inst, "overhead": overhead})
+
+    hw = tm.fpga_profile(cfg, f_clk=HT.F_CLK)
+    bench.record("t_max_gsyms", tm.max_throughput(hw, n_inst) / 1e9)
+    bench.record("t_net_at_paper_l_inst_gsyms",
+                 tm.net_throughput(cfg, hw, n_inst, HT.L_INST) / 1e9)
+    ok = interior_err < 1e-4
+    bench.record("equal_on_interior", bool(ok))
+    print(f"[bench_stream] 64-instance interior err {interior_err:.2e} "
+          f"(≡ single-instance: {ok}); o_act={o_act}, "
+          f"T_net(7320)={bench.results['t_net_at_paper_l_inst_gsyms']:.1f}"
+          " GSa/s")
+    return bench.finish()
+
+
+if __name__ == "__main__":
+    run()

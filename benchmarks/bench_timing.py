@@ -1,0 +1,86 @@
+"""Fig. 12 + §7.1 — timing-model validation: λ_sym and T_net vs ℓ_inst for
+N_i ∈ {16, 32, 64}, model vs SIMULATED measurement (a cycle-accurate-at-the-
+granularity-of-the-model event simulation of the SSM/MSM tree), plus the
+paper's headline numbers (64 instances → 102.4 GSa/s, ℓ_inst 7320 →
+17.5 µs)."""
+from __future__ import annotations
+
+import math
+
+from repro.configs import equalizer_ht as HT
+from repro.core import seqlen_opt, timing_model as tm
+from repro.core.stream_partition import actual_overlap
+
+from .common import Bench
+
+
+def simulate_stream(cfg, hw, n_inst: int, l_inst: int, l_in: int):
+    """Discrete-event walk of the split tree (the 'measurement' the paper
+    compares its closed-form model against)."""
+    o_act = actual_overlap(cfg, n_inst)
+    l_ol = l_inst + 2 * o_act
+    # t_init: each SSM level halves the stream width; writing to the second
+    # output starts after ℓ_ol/(2·V_p) cycles per level
+    levels = int(math.log2(n_inst)) if n_inst > 1 else 0
+    f_clk = hw.sym_rate_per_inst / cfg.v_parallel
+    t_init = levels * (l_ol / (2 * cfg.v_parallel)) / f_clk
+    # processing: n_seq sequences of ℓ_ol, one per instance slot
+    n_seq = l_in / (l_inst * n_inst)
+    t_p = n_seq * l_ol / (cfg.v_parallel * f_clk)
+    return t_init, l_in / t_p
+
+
+def run() -> dict:
+    bench = Bench("timing_model", "Fig. 12 / §6.1 / §7.1")
+    cfg = HT.CNN
+    hw = tm.fpga_profile(cfg, f_clk=HT.F_CLK)
+
+    curves = {}
+    max_err_lat, max_err_tp = 0.0, 0.0
+    for n_inst in (16, 32, 64):
+        pts = []
+        for l_inst in (1024, 2048, 4096, 8192, 16384, 32768):
+            lam = tm.symbol_latency(cfg, hw, n_inst, l_inst)
+            tnet = tm.net_throughput(cfg, hw, n_inst, l_inst)
+            lam_sim, tnet_sim = simulate_stream(cfg, hw, n_inst, l_inst,
+                                                l_in=l_inst * n_inst * 8)
+            pts.append({"l_inst": l_inst, "lat_model_us": lam * 1e6,
+                        "lat_sim_us": lam_sim * 1e6,
+                        "tput_model_gsyms": tnet / 1e9,
+                        "tput_sim_gsyms": tnet_sim / 1e9})
+            if lam_sim:
+                max_err_lat = max(max_err_lat, abs(lam - lam_sim) / lam_sim)
+            max_err_tp = max(max_err_tp, abs(tnet - tnet_sim) / tnet_sim)
+        curves[f"n_inst_{n_inst}"] = {
+            "t_max_gsyms": tm.max_throughput(hw, n_inst) / 1e9,
+            "points": pts,
+        }
+    bench.record("curves", curves)
+    bench.record("model_vs_sim_max_err",
+                 {"latency": max_err_lat, "throughput": max_err_tp})
+
+    # §7.1/7.2 headline numbers
+    t_max64 = tm.max_throughput(hw, 64)
+    l_pick = seqlen_opt.optimal_l_inst(cfg, hw, 64, HT.T_REQ_SAMPLES)
+    lam_pick = tm.symbol_latency(cfg, hw, 64, l_pick)
+    # 64 is the MINIMAL instance count reaching 80 GSa/s
+    n_min = next(n for n in (16, 32, 64, 128)
+                 if tm.max_throughput(hw, n) > HT.T_REQ_SAMPLES)
+    bench.record("headline", {
+        "t_max_64_gsyms": t_max64 / 1e9,          # paper: 102.4
+        "n_instances_min": n_min,                  # paper: 64
+        "l_inst_selected": l_pick,                 # paper: 7320
+        "latency_at_selected_us": lam_pick * 1e6,  # paper: 17.5 µs
+        "paper_l_inst": HT.L_INST,
+        "t_net_at_selected_gsyms":
+            tm.net_throughput(cfg, hw, 64, l_pick) / 1e9,
+    })
+    print(f"[bench_timing] T_max(64)={t_max64/1e9:.1f} GSa/s, "
+          f"ℓ_inst={l_pick} (paper 7320), λ={lam_pick*1e6:.2f} µs "
+          f"(paper 17.5), model-vs-sim err: lat {max_err_lat:.1%}, "
+          f"tput {max_err_tp:.2%}")
+    return bench.finish()
+
+
+if __name__ == "__main__":
+    run()

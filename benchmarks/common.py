@@ -1,0 +1,39 @@
+"""Shared benchmark machinery: result registry + JSON/markdown emission."""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Any, Callable, Dict, List
+
+REPORT_DIR = pathlib.Path(__file__).resolve().parent.parent / "reports"
+
+
+class Bench:
+    """One benchmark = one paper table/figure."""
+
+    def __init__(self, name: str, paper_ref: str):
+        self.name = name
+        self.paper_ref = paper_ref
+        self.results: Dict[str, Any] = {}
+        self.t0 = time.time()
+
+    def record(self, key: str, value: Any) -> None:
+        self.results[key] = value
+
+    def finish(self) -> Dict[str, Any]:
+        out = {
+            "bench": self.name,
+            "paper_ref": self.paper_ref,
+            "elapsed_s": round(time.time() - self.t0, 1),
+            "results": self.results,
+        }
+        d = REPORT_DIR / "benchmarks"
+        d.mkdir(parents=True, exist_ok=True)
+        (d / f"{self.name}.json").write_text(json.dumps(out, indent=2,
+                                                        default=str))
+        return out
+
+
+def fmt_ber(b: float) -> str:
+    return f"{b:.2e}"

@@ -1,0 +1,75 @@
+"""Benchmark orchestrator: `PYTHONPATH=src python -m benchmarks.run`.
+
+One benchmark per paper table/figure (see DESIGN.md §6):
+
+    bench_dse       Fig. 2   DSE: CNN vs FIR vs Volterra on IM/DD
+    bench_proakis   Fig. 4   the same on the magnetic-recording channel
+    bench_quant     Fig. 5/6 3-phase QAT bit-width/BER curves per QLF
+    bench_dop       Fig. 8   flexible-DOP study (TPU tile-utilization axis)
+    bench_stream    Fig. 9/§7.2  64-instance stream partitioning
+    bench_timing    Fig. 12  timing model vs simulated measurement
+    bench_platform  Fig. 13-15  CPU measured / TPU roofline-projected
+    bench_roofline  Table 1 / §Roofline  aggregate the dry-run artifacts
+
+`--full` runs paper-scale sweeps (hours); the default is a reduced pass
+whose orderings (not absolute BERs) carry the claims.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+from . import (bench_dop, bench_dse, bench_platform, bench_proakis,
+               bench_quant, bench_roofline, bench_stream, bench_timing)
+from .common import REPORT_DIR
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sweeps (hours)")
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args(argv)
+
+    steps = 700 if not args.full else 10_000
+    jobs = [
+        ("timing", lambda: bench_timing.run()),
+        ("stream", lambda: bench_stream.run()),
+        ("dop", lambda: bench_dop.run()),
+        ("roofline", lambda: bench_roofline.run()),
+        ("platform", lambda: bench_platform.run()),
+        ("proakis", lambda: bench_proakis.run(steps=min(steps, 800))),
+        ("quant", lambda: bench_quant.run(steps=min(steps, 600))),
+        ("dse", lambda: bench_dse.run(full=args.full, steps=steps)),
+    ]
+    if args.only:
+        jobs = [(n, f) for n, f in jobs if n in args.only]
+
+    t0 = time.time()
+    failures = []
+    summary = {}
+    for name, fn in jobs:
+        print(f"\n=== bench:{name} " + "=" * 50)
+        try:
+            out = fn()
+            summary[name] = {"status": "ok",
+                             "elapsed_s": out.get("elapsed_s")}
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append(name)
+            summary[name] = {"status": f"failed: {e}"}
+    summary["total_elapsed_s"] = round(time.time() - t0, 1)
+    REPORT_DIR.mkdir(parents=True, exist_ok=True)
+    (REPORT_DIR / "benchmarks_summary.json").write_text(
+        json.dumps(summary, indent=2))
+    print("\n=== benchmark summary ===")
+    for k, v in summary.items():
+        print(f"  {k}: {v}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,4 @@
+"""repro — CNN-based equalization at gigabit throughput, as a multi-pod
+JAX/TPU framework (reproduction + extension of Ney et al., 2024)."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,9 @@
+from . import common, imdd, proakis
+from .common import awgn, ber, ber_from_soft, bits_to_pam, pam_decision
+from .imdd import IMDDConfig
+from .proakis import ProakisConfig
+
+__all__ = [
+    "common", "imdd", "proakis", "awgn", "ber", "ber_from_soft",
+    "bits_to_pam", "pam_decision", "IMDDConfig", "ProakisConfig",
+]

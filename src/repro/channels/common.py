@@ -1,0 +1,117 @@
+"""Shared DSP building blocks for the simulated communication channels.
+
+Everything is pure JAX so channel simulation can be jitted, vmapped and run
+on-device as part of the data pipeline (`repro.data.equalizer_data`).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Symbol mapping
+# ---------------------------------------------------------------------------
+
+def pam_constellation(levels: int) -> jnp.ndarray:
+    """Gray-free PAM-`levels` constellation, unit average power."""
+    pts = jnp.arange(levels, dtype=jnp.float32)
+    pts = 2.0 * pts - (levels - 1)
+    pts = pts / jnp.sqrt(jnp.mean(pts**2))
+    return pts
+
+
+def bits_to_pam(bits: jnp.ndarray, levels: int = 2) -> jnp.ndarray:
+    """Map integer symbols in [0, levels) to PAM amplitudes."""
+    return pam_constellation(levels)[bits]
+
+
+def pam_decision(y: jnp.ndarray, levels: int = 2) -> jnp.ndarray:
+    """Hard decision: nearest constellation point, returns symbol indices."""
+    const = pam_constellation(levels)
+    d = jnp.abs(y[..., None] - const[None, :] if y.ndim == 1 else
+                y[..., None] - const)
+    return jnp.argmin(d, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Pulse shaping
+# ---------------------------------------------------------------------------
+
+def rrc_taps(n_taps: int, beta: float, sps: int) -> np.ndarray:
+    """Root-raised-cosine filter taps (numpy; built once at trace time)."""
+    assert n_taps % 2 == 1, "use an odd number of taps"
+    t = (np.arange(n_taps) - (n_taps - 1) / 2) / sps
+    taps = np.zeros_like(t)
+    for i, ti in enumerate(t):
+        if abs(ti) < 1e-9:
+            taps[i] = 1.0 - beta + 4 * beta / np.pi
+        elif beta > 0 and abs(abs(ti) - 1 / (4 * beta)) < 1e-9:
+            taps[i] = (beta / np.sqrt(2)) * (
+                (1 + 2 / np.pi) * np.sin(np.pi / (4 * beta))
+                + (1 - 2 / np.pi) * np.cos(np.pi / (4 * beta)))
+        else:
+            num = (np.sin(np.pi * ti * (1 - beta))
+                   + 4 * beta * ti * np.cos(np.pi * ti * (1 + beta)))
+            den = np.pi * ti * (1 - (4 * beta * ti) ** 2)
+            taps[i] = num / den
+    taps = taps / np.sqrt(np.sum(taps**2))
+    return taps.astype(np.float32)
+
+
+def rc_taps(n_taps: int, beta: float, sps: int) -> np.ndarray:
+    """Raised-cosine filter taps."""
+    assert n_taps % 2 == 1
+    t = (np.arange(n_taps) - (n_taps - 1) / 2) / sps
+    taps = np.sinc(t) * np.cos(np.pi * beta * t)
+    den = 1.0 - (2.0 * beta * t) ** 2
+    # limit at the singular points
+    sing = np.abs(den) < 1e-8
+    taps = np.where(sing, (np.pi / 4) * np.sinc(1 / (2 * beta)), taps / np.where(sing, 1.0, den))
+    taps = taps / np.max(np.abs(taps))
+    return taps.astype(np.float32)
+
+
+def upsample(x: jnp.ndarray, sps: int) -> jnp.ndarray:
+    """Insert sps-1 zeros between samples (expander)."""
+    out = jnp.zeros((x.shape[0] * sps,), dtype=x.dtype)
+    return out.at[::sps].set(x)
+
+
+def fir_same(x: jnp.ndarray, taps: jnp.ndarray) -> jnp.ndarray:
+    """'same'-mode FIR filtering of a 1-D sequence."""
+    k = taps.shape[0]
+    pad = k // 2
+    xp = jnp.pad(x, (pad, k - 1 - pad))
+    return jnp.convolve(xp, taps, mode="valid")
+
+
+# ---------------------------------------------------------------------------
+# Noise
+# ---------------------------------------------------------------------------
+
+def awgn(key: jax.Array, x: jnp.ndarray, snr_db: float,
+         signal_power: float | None = None) -> jnp.ndarray:
+    """Add white Gaussian noise at the given SNR (per-sample, real signal)."""
+    p_sig = jnp.mean(x**2) if signal_power is None else signal_power
+    p_noise = p_sig / (10.0 ** (snr_db / 10.0))
+    return x + jnp.sqrt(p_noise) * jax.random.normal(key, x.shape, x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# BER
+# ---------------------------------------------------------------------------
+
+def ber(pred_syms: jnp.ndarray, true_syms: jnp.ndarray,
+        bits_per_sym: int = 1) -> jnp.ndarray:
+    """Symbol-error-based BER (PAM2 ⇒ symbol errors == bit errors)."""
+    errs = jnp.sum(pred_syms != true_syms)
+    return errs / (pred_syms.size * bits_per_sym)
+
+
+@functools.partial(jax.jit, static_argnames=("levels",))
+def ber_from_soft(y: jnp.ndarray, true_syms: jnp.ndarray, levels: int = 2):
+    return ber(pam_decision(y, levels), true_syms)

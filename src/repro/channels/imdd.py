@@ -1,0 +1,118 @@
+"""Simulated 40 GBd IM/DD optical fiber channel (paper §2.1).
+
+The paper captures data from an experimental link; we reproduce the link in
+simulation with the same parameters:
+
+    * 40 GBd PAM-2 (OOK), Mersenne-Twister pseudo-random pattern
+    * RRC pulse shaping, N_os = 2 samples/symbol
+    * MZM biased at quadrature → field amplitude modulation
+    * 31.5 km SSMF, CD coefficient 16 ps/(nm km) @ 1550 nm
+    * square-law photodetection (|E|²) — the CD × direct-detection interplay
+      is what makes the effective channel NONLINEAR
+    * receiver AWGN (transceiver noise)
+
+Chromatic dispersion is applied in the frequency domain on the optical field:
+    H(f) = exp(+j · (π λ² D L / c) · f²)
+Square-law detection afterwards yields nonlinear ISI that a linear FIR cannot
+invert — the motivation for the CNN equalizer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import awgn, bits_to_pam, fir_same, rrc_taps, upsample
+
+C_LIGHT = 299_792_458.0  # m/s
+
+
+@dataclasses.dataclass(frozen=True)
+class IMDDConfig:
+    baud_rate: float = 40e9          # 40 GBd
+    n_os: int = 2                    # oversampling at the equalizer input
+    sim_os: int = 4                  # internal simulation oversampling
+    fiber_km: float = 31.5
+    cd_ps_nm_km: float = 16.0
+    wavelength_nm: float = 1550.0
+    rrc_beta: float = 0.2
+    rrc_taps: int = 129
+    snr_db: float = 20.0             # electrical (post-PD) SNR
+    osnr_db: float = 28.0            # optical SNR (ASE before the PD):
+    #   signal×ASE beat noise after |·|² is SIGNAL-DEPENDENT — the level-
+    #   dependent decision statistics a nonlinear equalizer exploits
+    mzm_vpi_frac: float = 1.0        # drive swing as fraction of Vpi (OOK)
+    pd_bw_hz: float = 40e9           # photodetector bandwidth (paper: 40 GHz)
+    levels: int = 2                  # PAM2
+
+
+def _cd_phase(n_fft: int, fs: float, cfg: IMDDConfig) -> np.ndarray:
+    """Frequency-domain chromatic-dispersion all-pass phase response."""
+    lam = cfg.wavelength_nm * 1e-9
+    d = cfg.cd_ps_nm_km * 1e-12 / 1e-9 / 1e3          # s/m/m
+    length = cfg.fiber_km * 1e3
+    f = np.fft.fftfreq(n_fft, d=1.0 / fs)
+    phase = np.pi * lam**2 * d * length / C_LIGHT * f**2
+    return phase.astype(np.float64)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "n_syms"))
+def simulate(key: jax.Array, cfg: IMDDConfig, n_syms: int):
+    """Simulate one frame.
+
+    Returns:
+      rx:   received electrical waveform at N_os samples/symbol, length
+            n_syms * n_os, normalized to zero mean / unit variance.
+      syms: transmitted symbol indices (n_syms,), aligned with rx (timing
+            recovery is exact in simulation).
+    """
+    kbits, knoise = jax.random.split(key)
+    syms = jax.random.randint(kbits, (n_syms,), 0, cfg.levels)
+    amps = bits_to_pam(syms, cfg.levels)
+
+    # --- transmitter: upsample + RRC shape (at simulation oversampling) ---
+    taps = jnp.asarray(rrc_taps(cfg.rrc_taps, cfg.rrc_beta, cfg.sim_os))
+    x = upsample(amps, cfg.sim_os)
+    x = fir_same(x, taps) * jnp.sqrt(float(cfg.sim_os))
+
+    # --- MZM at quadrature: field E ∝ cos(π/4 + drive) ------------------
+    # (intensity is then sin-shaped; small-signal ≈ linear intensity mod)
+    drive = cfg.mzm_vpi_frac * (np.pi / 2.0) * x
+    field = jnp.cos(np.pi / 4.0 - drive / 2.0)  # complex envelope, real here
+
+    # --- fiber: chromatic dispersion on the optical field ---------------
+    fs = cfg.baud_rate * cfg.sim_os
+    phase = jnp.asarray(_cd_phase(int(field.shape[0]), fs, cfg))
+    spec = jnp.fft.fft(field.astype(jnp.complex64))
+    field_out = jnp.fft.ifft(spec * jnp.exp(1j * phase))
+
+    # --- amplifier ASE: complex AWGN on the FIELD (pre-detection) -------
+    knoise, kase = jax.random.split(knoise)
+    p_sig = jnp.mean(jnp.abs(field_out) ** 2)
+    p_ase = p_sig / (10.0 ** (cfg.osnr_db / 10.0))
+    ase = jnp.sqrt(p_ase / 2.0) * (
+        jax.random.normal(kase, field_out.shape)
+        + 1j * jax.random.normal(jax.random.fold_in(kase, 1),
+                                 field_out.shape))
+    field_out = field_out + ase.astype(field_out.dtype)
+
+    # --- receiver: square-law photodetector + AWGN ----------------------
+    # |E|² doubles the signal bandwidth; the photodetector's finite analog
+    # bandwidth (paper: 40 GHz PD) low-passes it BEFORE sampling — without
+    # this the later 2× decimation aliases the nonlinear mixing products
+    # into band, turning deterministic (equalizable) ISI into noise.
+    current = jnp.abs(field_out) ** 2
+    f = np.fft.fftfreq(int(current.shape[0]), d=1.0 / fs)
+    pd_lpf = jnp.asarray(1.0 / np.sqrt(1.0 + (f / cfg.pd_bw_hz) ** 8))
+    current = jnp.real(jnp.fft.ifft(jnp.fft.fft(current.astype(jnp.complex64))
+                                    * pd_lpf))
+    current = awgn(knoise, current.astype(jnp.float32), cfg.snr_db)
+
+    # --- resample to N_os samples/symbol + normalize --------------------
+    step = cfg.sim_os // cfg.n_os
+    rx = current[::step]
+    rx = (rx - jnp.mean(rx)) / (jnp.std(rx) + 1e-9)
+    return rx, syms

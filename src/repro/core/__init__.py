@@ -1,0 +1,11 @@
+from . import dse, equalizer, fir, qat, seqlen_opt, stream_partition, timing_model, train_eq, volterra
+from .equalizer import CNNEqConfig
+from .fir import FIRConfig
+from .qat import QATConfig
+from .volterra import VolterraConfig
+
+__all__ = [
+    "dse", "equalizer", "fir", "qat", "seqlen_opt", "stream_partition",
+    "timing_model", "train_eq", "volterra",
+    "CNNEqConfig", "FIRConfig", "QATConfig", "VolterraConfig",
+]

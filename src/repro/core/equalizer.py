@@ -1,0 +1,196 @@
+"""The paper's CNN equalizer topology template (§3.1, Fig. 1/3).
+
+Topology (for L layers, kernel K, channels C, parallel symbols V_p, oversampling
+N_os):
+
+    conv1  : 1   → C     stride V_p   + BN + ReLU
+    conv i : C   → C     stride 1     + BN + ReLU      (i = 2 … L-1)
+    conv L : C   → V_p   stride N_os  (linear output)
+    flatten: (width, V_p) → width · V_p output symbols
+
+Input is a real waveform at N_os samples/symbol of length S·N_os; output is S
+soft symbol estimates which are sliced to the nearest constellation point.
+
+The module is pure JAX (init/apply), supports batched input, optional
+learned-bit-width QAT (core/qat.py) and exposes `fold_bn()` so the inference
+path matches the FPGA deployment (BN folded into conv weights).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import qat as qat_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNEqConfig:
+    layers: int = 3          # L
+    kernel: int = 9          # K
+    channels: int = 5        # C
+    v_parallel: int = 8      # V_p — symbols per network pass
+    n_os: int = 2            # oversampling of the input waveform
+    levels: int = 2          # PAM order
+    bn_momentum: float = 0.9
+
+    @property
+    def receptive_field_syms(self) -> int:
+        """Overlap formula of paper §6.1 (after Araujo et al.):
+        o_sym = (K-1)(1 + V_p(L-1)) / 2 symbols on EACH side."""
+        return (self.kernel - 1) * (1 + self.v_parallel * (self.layers - 1)) // 2
+
+    def mac_per_symbol(self) -> float:
+        """Paper's complexity metric MAC_sym (§3.5)."""
+        k, c, l, vp, nos = (self.kernel, self.channels, self.layers,
+                            self.v_parallel, self.n_os)
+        return k * c / vp + (l - 2) * k * c * c / vp + k * c / nos
+
+    def layer_specs(self):
+        """[(c_in, c_out, stride), ...] for each conv layer."""
+        specs = [(1, self.channels, self.v_parallel)]
+        for _ in range(self.layers - 2):
+            specs.append((self.channels, self.channels, 1))
+        specs.append((self.channels, self.v_parallel, self.n_os))
+        return specs
+
+
+# ---------------------------------------------------------------------------
+# init / apply
+# ---------------------------------------------------------------------------
+
+def init(key: jax.Array, cfg: CNNEqConfig,
+         qat: Optional[qat_lib.QATConfig] = None) -> Dict[str, Any]:
+    """He-initialized parameters. Layout: w[l] has shape (C_out, C_in, K)."""
+    params: Dict[str, Any] = {"conv": [], "bn": []}
+    keys = jax.random.split(key, cfg.layers)
+    for i, (c_in, c_out, _) in enumerate(cfg.layer_specs()):
+        fan_in = c_in * cfg.kernel
+        w = jax.random.normal(keys[i], (c_out, c_in, cfg.kernel),
+                              jnp.float32) * jnp.sqrt(2.0 / fan_in)
+        b = jnp.zeros((c_out,), jnp.float32)
+        params["conv"].append({"w": w, "b": b})
+        if i < cfg.layers - 1:
+            params["bn"].append({"scale": jnp.ones((c_out,), jnp.float32),
+                                 "bias": jnp.zeros((c_out,), jnp.float32)})
+    if qat is not None and qat.enabled:
+        params["qat"] = qat_lib.init_qparams(
+            [f"layer{i}" for i in range(cfg.layers)], qat)
+    return params
+
+
+def init_bn_state(cfg: CNNEqConfig) -> Dict[str, Any]:
+    """Running statistics for BN (non-trainable state)."""
+    state = []
+    for i, (_, c_out, _) in enumerate(cfg.layer_specs()):
+        if i < cfg.layers - 1:
+            state.append({"mean": jnp.zeros((c_out,), jnp.float32),
+                          "var": jnp.ones((c_out,), jnp.float32)})
+    return {"bn": state}
+
+
+def _conv1d(x: jnp.ndarray, w: jnp.ndarray, stride: int,
+            padding: str | Tuple[int, int] = "SAME_LOWER") -> jnp.ndarray:
+    """x: (N, C_in, W), w: (C_out, C_in, K) → (N, C_out, W_out)."""
+    k = w.shape[-1]
+    if padding == "SAME_LOWER":
+        pad = (k // 2, k - 1 - k // 2)
+    else:
+        pad = padding
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride,), padding=[pad],
+        dimension_numbers=("NCH", "OIH", "NCH"))
+
+
+def apply(params: Dict[str, Any], x: jnp.ndarray, cfg: CNNEqConfig,
+          *, train: bool = False, bn_state: Optional[Dict[str, Any]] = None,
+          qat_enabled: bool = False):
+    """Forward pass.
+
+    Args:
+      x: waveform, shape (S·N_os,) or (batch, S·N_os).
+    Returns:
+      (soft_symbols[(batch,) S], new_bn_state)
+    """
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[None]
+    h = x[:, None, :]  # (N, 1, W)
+    new_bn = {"bn": []}
+    qp = params.get("qat")
+
+    for i, (c_in, c_out, stride) in enumerate(cfg.layer_specs()):
+        w = params["conv"][i]["w"]
+        b = params["conv"][i]["b"]
+        if qat_enabled and qp is not None:
+            q = qp[f"layer{i}"]
+            w = qat_lib.apply_weight_quant(w, q)
+            h = qat_lib.apply_act_quant(h, q)
+        h = _conv1d(h, w, stride) + b[None, :, None]
+        if i < cfg.layers - 1:
+            bn_p = params["bn"][i]
+            if train or bn_state is None:
+                mean = jnp.mean(h, axis=(0, 2))
+                var = jnp.var(h, axis=(0, 2))
+            else:
+                mean = bn_state["bn"][i]["mean"]
+                var = bn_state["bn"][i]["var"]
+            if train and bn_state is not None:
+                m = cfg.bn_momentum
+                new_bn["bn"].append({
+                    "mean": m * bn_state["bn"][i]["mean"] + (1 - m) * mean,
+                    "var": m * bn_state["bn"][i]["var"] + (1 - m) * var,
+                })
+            h = (h - mean[None, :, None]) / jnp.sqrt(var[None, :, None] + 1e-5)
+            h = h * bn_p["scale"][None, :, None] + bn_p["bias"][None, :, None]
+            h = jax.nn.relu(h)
+
+    # flatten (N, V_p, W_L) → (N, W_L · V_p): feature-map elements ARE the
+    # output symbols (paper: "the feature map is flattened so that each
+    # element corresponds to one output symbol")
+    y = jnp.swapaxes(h, 1, 2).reshape(h.shape[0], -1)
+    if squeeze:
+        y = y[0]
+    if not new_bn["bn"]:
+        new_bn = bn_state
+    return y, new_bn
+
+
+def fold_bn(params: Dict[str, Any], bn_state: Dict[str, Any],
+            cfg: CNNEqConfig) -> Dict[str, Any]:
+    """Fold BN running stats into conv weights (FPGA-style deployment).
+
+    After folding, `apply_folded` needs no BN state and matches eval-mode
+    `apply` exactly — this is what the fused Pallas kernel consumes.
+    """
+    folded = {"conv": []}
+    for i, _ in enumerate(cfg.layer_specs()):
+        w = params["conv"][i]["w"]
+        b = params["conv"][i]["b"]
+        if i < cfg.layers - 1:
+            bn_p = params["bn"][i]
+            mean = bn_state["bn"][i]["mean"]
+            var = bn_state["bn"][i]["var"]
+            g = bn_p["scale"] / jnp.sqrt(var + 1e-5)
+            w = w * g[:, None, None]
+            b = (b - mean) * g + bn_p["bias"]
+        folded["conv"].append({"w": w, "b": b})
+    return folded
+
+
+def apply_folded(folded: Dict[str, Any], x: jnp.ndarray, cfg: CNNEqConfig):
+    """Inference with BN pre-folded (ReLU still applied between layers)."""
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[None]
+    h = x[:, None, :]
+    for i, (_, _, stride) in enumerate(cfg.layer_specs()):
+        w = folded["conv"][i]["w"]
+        b = folded["conv"][i]["b"]
+        h = _conv1d(h, w, stride) + b[None, :, None]
+        if i < cfg.layers - 1:
+            h = jax.nn.relu(h)
+    y = jnp.swapaxes(h, 1, 2).reshape(h.shape[0], -1)
+    return y[0] if squeeze else y

@@ -1,0 +1,146 @@
+"""Learnable-bit-width quantization-aware training (paper §4).
+
+The paper learns, per layer, a fixed-point format for weights and activations
+by making the bit width differentiable:
+
+  * integer width  i  and fraction width f are separate continuous parameters
+    (this differs from BitPruning [20], which learns a scale; learning i and f
+    directly means no rescaling is needed at deployment — values ARE their
+    fixed-point representation),
+  * quantization at non-integer width b interpolates between the two adjacent
+    integer widths:  Q_b(x) = (1-α)·Q_⌊b⌋(x) + α·Q_⌈b⌉(x),  α = b - ⌊b⌋,
+  * a straight-through estimator passes gradients through the rounding,
+  * the loss gains  QLF · (B_p + B_a)/2  where B_p/B_a are the average
+    parameter/activation widths.
+
+Three-phase schedule (paper Fig. 5/6):
+  1. full precision, 2. bit-width-aware (widths trained), 3. fine-tune with
+  widths frozen to the next-highest integer.
+
+TPU note (DESIGN.md §2): widths are *learned* exactly as on the FPGA; at
+deployment the learned (i, f) map to the nearest MXU-native dtype (int8 /
+bf16) — `deployment_dtype()` below.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QATConfig:
+    qlf: float = 5e-4             # quantization trade-off factor
+    init_int_bits: float = 16.0   # phase-1 format: Q16.16
+    init_frac_bits: float = 16.0
+    min_bits: float = 1.0
+    enabled: bool = True
+
+
+# ---------------------------------------------------------------------------
+# Fixed-point fake quantization
+# ---------------------------------------------------------------------------
+
+def _round_ste(x: jnp.ndarray) -> jnp.ndarray:
+    """round() with a straight-through gradient."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def quantize_fixed(x: jnp.ndarray, int_bits: jnp.ndarray,
+                   frac_bits: jnp.ndarray) -> jnp.ndarray:
+    """Fixed-point quantization to signed Q(int_bits).(frac_bits).
+
+    Integer widths only — see `quantize_interp` for the differentiable-width
+    version. STE on the rounding; clipping is naturally differentiable at the
+    boundaries (clip gradient).
+    """
+    scale = jnp.exp2(frac_bits)
+    hi = jnp.exp2(int_bits) - 1.0 / scale
+    lo = -jnp.exp2(int_bits)
+    xq = _round_ste(x * scale) / scale
+    return jnp.clip(xq, lo, hi)
+
+
+def quantize_interp(x: jnp.ndarray, int_bits: jnp.ndarray,
+                    frac_bits: jnp.ndarray) -> jnp.ndarray:
+    """Differentiable-width quantization via floor/ceil interpolation.
+
+    Differentiable w.r.t. BOTH int_bits and frac_bits (and x via STE), so the
+    widths can be learned with backprop — the paper's core quantization trick.
+    """
+    f_lo, f_hi = jnp.floor(frac_bits), jnp.ceil(frac_bits)
+    a_f = frac_bits - f_lo
+    i_lo, i_hi = jnp.floor(int_bits), jnp.ceil(int_bits)
+    a_i = int_bits - i_lo
+    q_ll = quantize_fixed(x, i_lo, f_lo)
+    q_lh = quantize_fixed(x, i_lo, f_hi)
+    q_hl = quantize_fixed(x, i_hi, f_lo)
+    q_hh = quantize_fixed(x, i_hi, f_hi)
+    q_l = (1 - a_f) * q_ll + a_f * q_lh
+    q_h = (1 - a_f) * q_hl + a_f * q_hh
+    return (1 - a_i) * q_l + a_i * q_h
+
+
+# ---------------------------------------------------------------------------
+# Per-layer quantizer parameter handling
+# ---------------------------------------------------------------------------
+
+def init_qparams(layer_names, cfg: QATConfig) -> Dict[str, Any]:
+    """One (w_int, w_frac, a_int, a_frac) quadruple per layer."""
+    mk = lambda v: jnp.asarray(v, jnp.float32)
+    return {
+        name: {
+            "w_int": mk(cfg.init_int_bits), "w_frac": mk(cfg.init_frac_bits),
+            "a_int": mk(cfg.init_int_bits), "a_frac": mk(cfg.init_frac_bits),
+        }
+        for name in layer_names
+    }
+
+
+def clip_qparams(qparams: Dict[str, Any], cfg: QATConfig) -> Dict[str, Any]:
+    """Project widths onto the feasible region after an optimizer step."""
+    return jax.tree.map(lambda b: jnp.clip(b, cfg.min_bits, 16.0), qparams)
+
+
+def freeze_qparams(qparams: Dict[str, Any]) -> Dict[str, Any]:
+    """Phase-3: fix widths to the next-highest integer (paper §4 step 3)."""
+    return jax.tree.map(jnp.ceil, qparams)
+
+
+def apply_weight_quant(w: jnp.ndarray, q: Dict[str, jnp.ndarray],
+                       enabled: bool = True) -> jnp.ndarray:
+    if not enabled:
+        return w
+    return quantize_interp(w, q["w_int"], q["w_frac"])
+
+
+def apply_act_quant(a: jnp.ndarray, q: Dict[str, jnp.ndarray],
+                    enabled: bool = True) -> jnp.ndarray:
+    if not enabled:
+        return a
+    return quantize_interp(a, q["a_int"], q["a_frac"])
+
+
+def average_bits(qparams: Dict[str, Any]):
+    """(B_p, B_a): average total width of params / activations (+sign bit)."""
+    w = [q["w_int"] + q["w_frac"] + 1.0 for q in qparams.values()]
+    a = [q["a_int"] + q["a_frac"] + 1.0 for q in qparams.values()]
+    return sum(w) / len(w), sum(a) / len(a)
+
+
+def quant_loss_term(qparams: Dict[str, Any], cfg: QATConfig) -> jnp.ndarray:
+    """QLF · (B_p + B_a) / 2 — the paper's quantization-aware loss term."""
+    bp, ba = average_bits(qparams)
+    return cfg.qlf * (bp + ba) / 2.0
+
+
+def deployment_dtype(q: Dict[str, jnp.ndarray]) -> str:
+    """Map a learned fixed-point format to the nearest TPU-native dtype."""
+    total = float(q["w_int"] + q["w_frac"]) + 1.0
+    if total <= 8:
+        return "int8"
+    if total <= 16:
+        return "bfloat16"   # 8-bit exponent covers the int range; 8-bit mantissa
+    return "float32"

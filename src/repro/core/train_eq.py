@@ -1,0 +1,136 @@
+"""Supervised equalizer training (MSE + Adam, paper §3.4) with optional
+3-phase quantization-aware training (paper §4).
+
+Works for all three equalizer families (CNN / FIR / Volterra) through a small
+adapter. Data comes from a channel simulator `channel_fn(key, n_syms)`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..channels.common import ber_from_soft, bits_to_pam
+from ..optim import AdamW
+from . import equalizer as cnn_eq
+from . import fir as fir_eq
+from . import qat as qat_lib
+from . import volterra as vol_eq
+
+
+@dataclasses.dataclass(frozen=True)
+class EqTrainConfig:
+    steps: int = 1500
+    batch: int = 8
+    seq_syms: int = 512          # symbols per training sequence
+    lr: float = 3e-3             # paper: 1e-3 × 10k iters; we use fewer steps
+    eval_syms: int = 1 << 15
+    # QAT phases (fractions of `steps`); active only when qat_cfg given
+    qat_phase1: float = 0.2      # full precision
+    qat_phase2: float = 0.6      # bit-width-aware
+    qat_lr_bits: float = 0.05    # lr for the width parameters
+
+
+def _build(kind: str, model_cfg) -> Tuple[Callable, Callable]:
+    if kind == "cnn":
+        def init_fn(key, qat_cfg=None):
+            return cnn_eq.init(key, model_cfg, qat_cfg), cnn_eq.init_bn_state(model_cfg)
+
+        def apply_fn(params, x, *, train, state, quant):
+            return cnn_eq.apply(params, x, model_cfg, train=train,
+                                bn_state=state, qat_enabled=quant)
+        return init_fn, apply_fn
+    if kind == "fir":
+        return (lambda key, qat_cfg=None: (fir_eq.init(key, model_cfg), None),
+                lambda p, x, *, train, state, quant:
+                    (fir_eq.apply(p, x, model_cfg), state))
+    if kind == "volterra":
+        return (lambda key, qat_cfg=None: (vol_eq.init(key, model_cfg), None),
+                lambda p, x, *, train, state, quant:
+                    (vol_eq.apply(p, x, model_cfg), state))
+    raise ValueError(f"unknown equalizer kind {kind!r}")
+
+
+def train_equalizer(key: jax.Array, kind: str, model_cfg,
+                    channel_fn: Callable, cfg: EqTrainConfig,
+                    qat_cfg: Optional[qat_lib.QATConfig] = None,
+                    record_every: int = 0):
+    """Returns (params, bn_state, info dict with 'ber', optional 'history')."""
+    init_fn, apply_fn = _build(kind, model_cfg)
+    kinit, kdata, keval = jax.random.split(key, 3)
+    params, bn_state = init_fn(kinit, qat_cfg)
+    levels = model_cfg.levels
+
+    opt = AdamW(lr=cfg.lr)
+    opt_state = opt.init(params)
+
+    p1_end = int(cfg.steps * cfg.qat_phase1) if qat_cfg else cfg.steps + 1
+    p2_end = int(cfg.steps * (cfg.qat_phase1 + cfg.qat_phase2)) \
+        if qat_cfg else cfg.steps + 1
+
+    def loss_fn(params, batch_x, batch_amps, state, quant: bool):
+        y, new_state = apply_fn(params, batch_x, train=True, state=state,
+                                quant=quant)
+        loss = jnp.mean((y - batch_amps) ** 2)
+        if quant and qat_cfg is not None and "qat" in params:
+            loss = loss + qat_lib.quant_loss_term(params["qat"], qat_cfg)
+        return loss, new_state
+
+    @functools.partial(jax.jit, static_argnames=("quant", "train_bits"))
+    def step_fn(params, opt_state, state, key, quant: bool, train_bits: bool):
+        ks = jax.random.split(key, cfg.batch)
+        xs, syms = jax.vmap(lambda k: channel_fn(k, cfg.seq_syms))(ks)
+        amps = bits_to_pam(syms, levels)
+        (loss, new_state), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, xs, amps, state, quant)
+        if "qat" in params:
+            # widths never go through Adam: phase 2 uses dedicated sign-SGD
+            # at qat_lr_bits (the paper's near-linear width descent, Fig. 5,
+            # saturating where the MSE gradient pushes back); phases 1/3
+            # hold them exactly.
+            qat_grads = grads["qat"]
+            grads = dict(grads)
+            grads["qat"] = jax.tree.map(jnp.zeros_like, grads["qat"])
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        if "qat" in new_params and qat_cfg is not None:
+            new_params = dict(new_params)
+            if train_bits:
+                stepped = jax.tree.map(
+                    lambda b, g: b - cfg.qat_lr_bits * jnp.sign(g),
+                    params["qat"], qat_grads)
+                new_params["qat"] = qat_lib.clip_qparams(stepped, qat_cfg)
+            else:
+                new_params["qat"] = params["qat"]
+        return new_params, new_opt, new_state, loss
+
+    history = []
+    for step in range(cfg.steps):
+        kdata, kstep = jax.random.split(kdata)
+        quant = qat_cfg is not None and step >= p1_end
+        train_bits = qat_cfg is not None and p1_end <= step < p2_end
+        if qat_cfg is not None and step == p2_end and "qat" in params:
+            params = dict(params)
+            params["qat"] = qat_lib.freeze_qparams(params["qat"])
+        params, opt_state, bn_state, loss = step_fn(
+            params, opt_state, bn_state, kstep, quant, train_bits)
+        if record_every and step % record_every == 0:
+            rec = {"step": step, "loss": float(loss)}
+            if "qat" in params:
+                bp, ba = qat_lib.average_bits(params["qat"])
+                rec["bits_params"] = float(bp)
+                rec["bits_acts"] = float(ba)
+            history.append(rec)
+
+    # ---- evaluation --------------------------------------------------------
+    quant = qat_cfg is not None
+    rx, syms = channel_fn(keval, cfg.eval_syms)
+    y, _ = apply_fn(params, rx, train=False, state=bn_state, quant=quant)
+    b = float(ber_from_soft(y, syms, levels))
+    info: Dict[str, Any] = {"ber": b, "history": history}
+    if "qat" in params:
+        bp, ba = qat_lib.average_bits(params["qat"])
+        info["bits_params"], info["bits_acts"] = float(bp), float(ba)
+    return params, bn_state, info

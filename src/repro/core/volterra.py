@@ -1,0 +1,77 @@
+"""Volterra-series equalizer baseline up to order 3 (paper §3.3).
+
+y_i = w0 + Σ x_{i+m1} w1(m1)
+        + Σ Σ x_{i+m1} x_{i+m2} w2(m1, m2)
+        + Σ Σ Σ x_{i+m1} x_{i+m2} x_{i+m3} w3(m1, m2, m3)
+
+Memory lengths (M1, M2, M3) per order. Implemented via windowed gathers and
+einsums; symmetric-kernel redundancy is kept (the paper counts full kernels).
+Trained with MSE + Adam.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class VolterraConfig:
+    m1: int = 25
+    m2: int = 9
+    m3: int = 0              # 0 disables the 3rd-order kernel
+    n_os: int = 2
+    levels: int = 2
+
+    def mac_per_symbol(self) -> float:
+        macs = float(self.m1)
+        if self.m2 > 0:
+            macs += float(self.m2) ** 2
+        if self.m3 > 0:
+            macs += float(self.m3) ** 3
+        return macs
+
+
+def init(key: jax.Array, cfg: VolterraConfig) -> Dict[str, jnp.ndarray]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {"w0": jnp.zeros((), jnp.float32),
+              "w1": jnp.zeros((cfg.m1,), jnp.float32).at[cfg.m1 // 2].set(1.0)}
+    if cfg.m2 > 0:
+        params["w2"] = 0.01 * jax.random.normal(k2, (cfg.m2, cfg.m2), jnp.float32)
+    if cfg.m3 > 0:
+        params["w3"] = 0.001 * jax.random.normal(k3, (cfg.m3, cfg.m3, cfg.m3),
+                                                 jnp.float32)
+    return params
+
+
+def _windows(x: jnp.ndarray, m: int, stride: int) -> jnp.ndarray:
+    """(batch, W) → (batch, W//stride, m) sliding windows centred per output."""
+    pad = (m // 2, m - 1 - m // 2)
+    xp = jnp.pad(x, ((0, 0), pad))
+    n_out = x.shape[1] // stride
+    idx = jnp.arange(n_out)[:, None] * stride + jnp.arange(m)[None, :]
+    return xp[:, idx]  # (batch, n_out, m)
+
+
+def apply(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
+          cfg: VolterraConfig) -> jnp.ndarray:
+    """x: (S·N_os,) or (batch, S·N_os) → (…, S) symbol estimates."""
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[None]
+    y = jnp.broadcast_to(params["w0"], (x.shape[0], x.shape[1] // cfg.n_os))
+
+    win1 = _windows(x, cfg.m1, cfg.n_os)
+    y = y + jnp.einsum("bnm,m->bn", win1, params["w1"])
+
+    if cfg.m2 > 0 and "w2" in params:
+        win2 = _windows(x, cfg.m2, cfg.n_os)
+        y = y + jnp.einsum("bni,bnj,ij->bn", win2, win2, params["w2"])
+
+    if cfg.m3 > 0 and "w3" in params:
+        win3 = _windows(x, cfg.m3, cfg.n_os)
+        y = y + jnp.einsum("bni,bnj,bnk,ijk->bn", win3, win3, win3,
+                           params["w3"])
+    return y[0] if squeeze else y

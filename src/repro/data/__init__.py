@@ -1,0 +1,2 @@
+from .pipeline import PipelineConfig, TokenSource, lm_batches
+from . import equalizer_data

@@ -1,0 +1,43 @@
+"""Equalizer data pipeline: on-device channel simulation feeding training.
+
+The channel simulators (channels/imdd.py, channels/proakis.py) are pure JAX,
+so the "data loader" is a jitted function — frames are synthesized on-device
+at full speed, exactly like the experimental capture replay of the paper but
+without a disk in the loop.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..channels import imdd, proakis
+
+
+def channel_fn(kind: str, cfg=None) -> Callable:
+    """Uniform (key, n_syms) → (rx_waveform, tx_symbols) interface."""
+    if kind == "imdd":
+        ccfg = cfg or imdd.IMDDConfig()
+        return lambda key, n_syms: imdd.simulate(key, ccfg, n_syms)
+    if kind == "proakis":
+        ccfg = cfg or proakis.ProakisConfig()
+        return lambda key, n_syms: proakis.simulate(key, ccfg, n_syms)
+    raise ValueError(kind)
+
+
+def frames(key: jax.Array, fn: Callable, batch: int, n_syms: int
+           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(batch, n_syms·N_os) waveforms + (batch, n_syms) symbols."""
+    keys = jax.random.split(key, batch)
+    rx, syms = jax.vmap(lambda k: fn(key=k, n_syms=n_syms))(keys)
+    return rx, syms
+
+
+def stream(key: jax.Array, kind: str, batch: int, n_syms: int,
+           cfg=None) -> Iterator[Tuple[jnp.ndarray, jnp.ndarray]]:
+    fn = channel_fn(kind, cfg)
+    while True:
+        key, sub = jax.random.split(key)
+        yield frames(sub, fn, batch, n_syms)

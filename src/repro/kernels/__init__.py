@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Each subpackage ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jitted
+wrapper) and ref.py (pure-jnp oracle). Validated with interpret=True on CPU;
+BlockSpecs target TPU VMEM/MXU.
+"""
+from . import cnn_eq, conv1d, quant, volterra
+
+__all__ = ["cnn_eq", "conv1d", "quant", "volterra"]

@@ -1,0 +1,6 @@
+from .cnn_eq import cnn_eq_fused, receptive_halo
+from .ops import equalize, strides_of, weights_of
+from .ref import cnn_eq as cnn_eq_ref
+
+__all__ = ["cnn_eq_fused", "cnn_eq_ref", "equalize", "receptive_halo",
+           "strides_of", "weights_of"]

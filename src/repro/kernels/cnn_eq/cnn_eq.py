@@ -1,0 +1,132 @@
+"""Pallas TPU kernel: the FUSED L-layer CNN equalizer (paper §5.1 on TPU).
+
+The FPGA architecture instantiates each conv layer as a pipeline stage with
+activations streaming between stages through on-chip FIFOs. The TPU-native
+equivalent keeps the whole layer stack inside ONE kernel so inter-layer
+activations never leave VMEM:
+
+  HBM ──DMA──▶ VMEM input tile (with receptive-field halo)
+                 │ conv1 (stride V_p) + ReLU        ┐ all in VMEM /
+                 │ conv2 … conv_{L-1} + ReLU        │ vector registers —
+                 │ conv_L (stride N_os)             ┘ zero HBM round-trips
+  HBM ◀──DMA── VMEM output tile (tile_m · V_p symbols)
+
+Grid = (batch, sequence tiles): Mosaic overlaps the tile DMAs with compute,
+which is exactly the paper's "each layer starts as soon as first inputs
+arrive" streaming property, realized at tile granularity.
+
+The input tile is element-indexed with a halo of half a receptive field per
+side (`receptive_halo`), the kernel computes VALID convolutions, and the
+wrapper pre-pads the stream so the result equals the SAME_LOWER-padded
+reference (`ref.cnn_eq`) exactly — including at stream edges.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+
+
+def receptive_halo(kernels: Sequence[int], strides: Sequence[int]) -> int:
+    """Half receptive field of the conv stack, in input samples."""
+    r, jump = 0, 1
+    for k, s in zip(kernels, strides):
+        r += (k // 2) * jump
+        jump *= s
+    return r
+
+
+def _layer_spans(tile_m: int, kernels: Sequence[int],
+                 strides: Sequence[int]) -> list[int]:
+    """Positions needed at each level to produce tile_m final positions."""
+    spans = [tile_m]
+    for k, s in zip(reversed(kernels), reversed(strides)):
+        spans.append((spans[-1] - 1) * s + k)
+    return list(reversed(spans))  # spans[0] = input samples per tile
+
+
+def _conv_valid(h: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, stride: int,
+                n_out: int) -> jnp.ndarray:
+    """(C_in, W) ⊛ (C_out, C_in, K) → (C_out, n_out), tap-unrolled MXU dots."""
+    k = w.shape[-1]
+    acc = jnp.zeros((w.shape[0], n_out), jnp.float32)
+    for kk in range(k):
+        xk = jax.lax.slice(h, (0, kk), (h.shape[0], kk + (n_out - 1) * stride + 1),
+                           (1, stride))
+        acc = acc + jax.lax.dot(w[:, :, kk].astype(jnp.float32), xk,
+                                preferred_element_type=jnp.float32)
+    return acc + b.astype(jnp.float32)[:, None]
+
+
+def _cnn_eq_kernel(x_ref, *refs, tile_m: int, kernels, strides, v_parallel):
+    n_layers = len(kernels)
+    w_refs = refs[:-1][0::2]
+    b_refs = refs[:-1][1::2]
+    o_ref = refs[-1]
+    spans = _layer_spans(tile_m, kernels, strides)
+
+    h = x_ref[...].astype(jnp.float32)       # (1, in_tile) → C_in = 1
+    for i in range(n_layers):
+        h = _conv_valid(h, w_refs[i][...], b_refs[i][...], strides[i],
+                        spans[i + 1])
+        if i < n_layers - 1:
+            h = jax.nn.relu(h)
+    # (V_p, tile_m) → interleave channels: symbol s = m·V_p + c
+    y = jnp.swapaxes(h, 0, 1).reshape(1, tile_m * v_parallel)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("strides", "tile_m", "interpret"))
+def cnn_eq_fused(x: jnp.ndarray,
+                 weights: Tuple[Tuple[jnp.ndarray, jnp.ndarray], ...],
+                 strides: Tuple[int, ...], tile_m: int = 64,
+                 interpret: bool | None = None) -> jnp.ndarray:
+    """Fused equalizer forward. x: (B, W) → (B, W//N_os) symbols.
+
+    weights: ((w_1, b_1), …, (w_L, b_L)) — BN pre-folded (equalizer.fold_bn).
+    strides: (V_p, 1, …, N_os). Output length = W // (V_p·N_os) · V_p.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    batch, width = x.shape
+    kernels = tuple(int(w.shape[-1]) for w, _ in weights)
+    v_parallel = int(weights[-1][0].shape[0])
+    total_stride = 1
+    for s in strides:
+        total_stride *= s
+    n_pos = width // total_stride                  # final-layer positions
+    n_syms = n_pos * v_parallel
+
+    tile_m = min(tile_m, max(1, n_pos))
+    n_tiles = pl.cdiv(n_pos, tile_m)
+    halo = receptive_halo(kernels, strides)
+    in_tile = _layer_spans(tile_m, kernels, strides)[0]
+
+    # pad: halo on the left; halo + tile rounding on the right
+    needed = (n_tiles - 1) * tile_m * total_stride + in_tile
+    xp = jnp.pad(x, ((0, 0), (halo, max(0, needed - width - halo))))
+
+    flat: list[jnp.ndarray] = []
+    in_specs = [pl.BlockSpec((1, pl.Element(in_tile)),
+                             lambda ib, it: (ib, it * tile_m * total_stride))]
+    for w, b in weights:
+        flat += [w, b]
+        in_specs += [pl.BlockSpec(w.shape, lambda ib, it: (0, 0, 0)),
+                     pl.BlockSpec(b.shape, lambda ib, it: (0,))]
+
+    out = pl.pallas_call(
+        functools.partial(_cnn_eq_kernel, tile_m=tile_m, kernels=kernels,
+                          strides=strides, v_parallel=v_parallel),
+        grid=(batch, n_tiles),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, tile_m * v_parallel),
+                               lambda ib, it: (ib, it)),
+        out_shape=jax.ShapeDtypeStruct(
+            (batch, n_tiles * tile_m * v_parallel), x.dtype),
+        interpret=interpret,
+    )(xp, *flat)
+    return out[:, :n_syms]

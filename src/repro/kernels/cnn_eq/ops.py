@@ -1,0 +1,35 @@
+"""Jitted wrapper: run the fused Pallas equalizer from core params."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax.numpy as jnp
+
+from ...core.equalizer import CNNEqConfig, fold_bn
+from .cnn_eq import cnn_eq_fused
+from .ref import cnn_eq as cnn_eq_ref
+
+
+def strides_of(cfg: CNNEqConfig):
+    return tuple(s for _, _, s in cfg.layer_specs())
+
+
+def weights_of(folded: Dict[str, Any]):
+    return tuple((l["w"], l["b"]) for l in folded["conv"])
+
+
+def equalize(params: Dict[str, Any], bn_state, x: jnp.ndarray,
+             cfg: CNNEqConfig, use_pallas: bool = True,
+             tile_m: int = 64) -> jnp.ndarray:
+    """Deployment-path inference: fold BN, run the fused kernel."""
+    folded = fold_bn(params, bn_state, cfg)
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[None]
+    fn = cnn_eq_fused if use_pallas else cnn_eq_ref
+    kwargs = {"tile_m": tile_m} if use_pallas else {}
+    y = fn(x, weights_of(folded), strides_of(cfg), **kwargs)
+    return y[0] if squeeze else y
+
+
+__all__ = ["cnn_eq_fused", "cnn_eq_ref", "equalize", "strides_of", "weights_of"]

@@ -1,0 +1,51 @@
+"""Pure-jnp oracle for the fused CNN-equalizer kernel.
+
+STREAM semantics (matching the FPGA and the Pallas kernel): the input is
+padded ONCE with half a receptive field of zeros per side and the layer stack
+runs VALID convolutions — there is no per-layer zero padding, because on the
+streaming hardware the layers see a continuous activation stream.
+
+This differs from `repro.core.equalizer.apply_folded` (per-layer SAME
+padding, the training-time definition) ONLY within o_sym symbols of the
+stream edges — exactly the region the paper's overlap machinery discards.
+tests/test_kernels.py asserts: kernel == ref everywhere, and
+kernel == core-module on the interior.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def receptive_halo(kernels: Sequence[int], strides: Sequence[int]) -> int:
+    r, jump = 0, 1
+    for k, s in zip(kernels, strides):
+        r += (k // 2) * jump
+        jump *= s
+    return r
+
+
+def cnn_eq(x: jnp.ndarray, weights: Sequence[Tuple[jnp.ndarray, jnp.ndarray]],
+           strides: Sequence[int]) -> jnp.ndarray:
+    """x: (B, W) waveform → (B, W//(∏strides)·V_p) symbols (stream semantics)."""
+    kernels = [int(w.shape[-1]) for w, _ in weights]
+    halo = receptive_halo(kernels, strides)
+    total_stride = 1
+    for s in strides:
+        total_stride *= s
+    n_pos = x.shape[1] // total_stride
+
+    h = jnp.pad(x, ((0, 0), (halo, halo)))[:, None, :].astype(jnp.float32)
+    n_layers = len(weights)
+    for i, ((w, b), s) in enumerate(zip(weights, strides)):
+        h = jax.lax.conv_general_dilated(
+            h, w.astype(jnp.float32), window_strides=(s,), padding="VALID",
+            dimension_numbers=("NCH", "OIH", "NCH"))
+        h = h + b.astype(jnp.float32)[None, :, None]
+        if i < n_layers - 1:
+            h = jax.nn.relu(h)
+    h = h[:, :, :n_pos]
+    y = jnp.swapaxes(h, 1, 2).reshape(h.shape[0], -1)
+    return y.astype(x.dtype)

@@ -1,0 +1,5 @@
+from .conv1d import conv1d as conv1d_pallas
+from .ops import conv1d_same_lower
+from .ref import conv1d as conv1d_ref
+
+__all__ = ["conv1d_pallas", "conv1d_ref", "conv1d_same_lower"]

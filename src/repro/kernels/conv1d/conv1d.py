@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: strided 1-D convolution (NCW), VALID padding.
+
+This is the compute hot-spot of the paper's equalizer (§5.1): the FPGA
+implements it as a fully-unrolled MAC array with DOP_I · DOP_O · DOP_K
+parallelism. On TPU the same operation is mapped onto the MXU:
+
+  * grid over (batch, output-width tiles) — the "stream" dimension; Mosaic
+    double-buffers the HBM→VMEM DMAs across grid steps, which is the TPU
+    analogue of the paper's pipelined streaming architecture;
+  * the input tile is an OVERLAPPING window (`pl.Element` indexing) of
+    (tile_w-1)·stride + K samples — the tile-level halo, mirroring the
+    paper's OGM overlap at stream level;
+  * the K taps are unrolled (DOP_K = K) and each tap contributes a
+    (C_out × C_in) · (C_in × tile_w) MXU matmul (DOP_I = C_in, DOP_O = C_out)
+    accumulated in f32.
+
+Weights live fully in VMEM (they are tiny — the FPGA keeps them in BRAM/LUT).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+
+
+def _conv1d_kernel(x_ref, w_ref, b_ref, o_ref, *, stride: int, kernel: int,
+                   tile_w: int):
+    x = x_ref[0]            # (C_in, in_tile)
+    w = w_ref[...]          # (C_out, C_in, K)
+    acc = jnp.zeros((w.shape[0], tile_w), jnp.float32)
+    # DOP_K: unrolled taps; each tap is an MXU matmul over (C_out, C_in)
+    for k in range(kernel):
+        xk = jax.lax.slice(x, (0, k), (x.shape[0], k + (tile_w - 1) * stride + 1),
+                           (1, stride))            # (C_in, tile_w)
+        acc = acc + jax.lax.dot(w[:, :, k].astype(jnp.float32),
+                                xk.astype(jnp.float32),
+                                preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...].astype(jnp.float32)[:, None]
+    o_ref[0] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "tile_w", "interpret"))
+def conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, stride: int = 1,
+           tile_w: int = 256, interpret: bool | None = None) -> jnp.ndarray:
+    """x: (B, C_in, W), w: (C_out, C_in, K), b: (C_out,) → (B, C_out, W_out).
+
+    VALID convolution; W_out = (W - K)//stride + 1. The wrapper pads W_out up
+    to a tile multiple and slices the result back.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    batch, c_in, width = x.shape
+    c_out, _, kernel = w.shape
+    w_out = (width - kernel) // stride + 1
+    tile_w = min(tile_w, max(8, w_out))
+    n_tiles = pl.cdiv(w_out, tile_w)
+    in_tile = (tile_w - 1) * stride + kernel
+
+    # pad so every (element-indexed) input tile is in bounds
+    needed = ((n_tiles - 1) * tile_w + tile_w - 1) * stride + kernel
+    if needed > width:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, needed - width)))
+
+    out = pl.pallas_call(
+        functools.partial(_conv1d_kernel, stride=stride, kernel=kernel,
+                          tile_w=tile_w),
+        grid=(batch, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, c_in, pl.Element(in_tile)),
+                         lambda ib, iw: (ib, 0, iw * tile_w * stride)),
+            pl.BlockSpec((c_out, c_in, kernel), lambda ib, iw: (0, 0, 0)),
+            pl.BlockSpec((c_out,), lambda ib, iw: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, c_out, tile_w), lambda ib, iw: (ib, 0, iw)),
+        out_shape=jax.ShapeDtypeStruct((batch, c_out, n_tiles * tile_w),
+                                       x.dtype),
+        interpret=interpret,
+    )(x, w, b)
+    return out[:, :, :w_out]

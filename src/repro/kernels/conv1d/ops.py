@@ -1,0 +1,23 @@
+"""Jitted public wrapper for the conv1d Pallas kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .conv1d import conv1d as conv1d_pallas
+from .ref import conv1d as conv1d_ref
+
+
+def conv1d_same_lower(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                      stride: int = 1, use_pallas: bool = True,
+                      tile_w: int = 256) -> jnp.ndarray:
+    """SAME_LOWER-padded strided conv used by the equalizer layers."""
+    k = w.shape[-1]
+    pad = (k // 2, k - 1 - k // 2)
+    xp = jnp.pad(x, ((0, 0), (0, 0), pad))
+    fn = conv1d_pallas if use_pallas else conv1d_ref
+    if use_pallas:
+        return fn(xp, w, b, stride, tile_w=tile_w)
+    return fn(xp, w, b, stride)
+
+
+__all__ = ["conv1d_pallas", "conv1d_ref", "conv1d_same_lower"]

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the strided 1-D convolution kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+           stride: int) -> jnp.ndarray:
+    """VALID strided 1-D convolution (cross-correlation, like the FPGA MACs).
+
+    x: (B, C_in, W)   w: (C_out, C_in, K)   b: (C_out,)
+    → (B, C_out, (W - K)//stride + 1)
+    """
+    y = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(stride,), padding="VALID",
+        dimension_numbers=("NCH", "OIH", "NCH"))
+    return (y + b.astype(jnp.float32)[None, :, None]).astype(x.dtype)

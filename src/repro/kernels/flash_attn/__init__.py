@@ -1,0 +1,2 @@
+from .flash_attn import attention_costs, flash_attention
+from .ref import mha as mha_ref

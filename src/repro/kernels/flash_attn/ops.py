@@ -1,0 +1,5 @@
+"""Jitted public wrapper for the flash-attention kernel."""
+from .flash_attn import attention_costs, flash_attention
+from .ref import mha as mha_ref
+
+__all__ = ["flash_attention", "mha_ref", "attention_costs"]

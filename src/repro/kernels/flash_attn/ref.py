@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash-attention forward kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def mha(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+        causal: bool = True, window: int = 0,
+        q_offset: int = 0) -> jnp.ndarray:
+    """q: (B, Sq, H, D), k/v: (B, Sk, H, D) → (B, Sq, H, D).
+
+    Softmax in f32; positions: q[i] is absolute q_offset + i, k[j] is j.
+    """
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = q_offset + jnp.arange(q.shape[1])[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones_like(s, bool)
+    if causal:
+        mask &= (kpos <= qpos)[None, None]
+    if window > 0:
+        mask &= (kpos > qpos - window)[None, None]
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

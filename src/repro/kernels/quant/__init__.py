@@ -1,0 +1,5 @@
+from .ops import quantize_params
+from .quant import fixed_point_quantize as quantize_pallas
+from .ref import fixed_point_quantize as quantize_ref
+
+__all__ = ["quantize_params", "quantize_pallas", "quantize_ref"]

@@ -1,0 +1,24 @@
+"""Jitted wrappers for the quantization kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .quant import fixed_point_quantize as quantize_pallas
+from .ref import fixed_point_quantize as quantize_ref
+
+
+def quantize_params(params, qparams, use_pallas: bool = True):
+    """Quantize a whole equalizer parameter tree with its learned widths."""
+    fn = quantize_pallas if use_pallas else quantize_ref
+    out = {"conv": []}
+    for i, layer in enumerate(params["conv"]):
+        q = qparams[f"layer{i}"]
+        out["conv"].append({
+            "w": fn(layer["w"], q["w_int"], q["w_frac"]),
+            "b": fn(layer["b"], q["w_int"], q["w_frac"]),
+        })
+    return out
+
+
+__all__ = ["quantize_pallas", "quantize_ref", "quantize_params"]

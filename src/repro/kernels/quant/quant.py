@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: fixed-point fake quantization (paper §4 on TPU).
+
+Elementwise round-and-saturate to a signed Q(i).(f) format. The widths are
+RUNTIME scalars (held in SMEM), because the deployed equalizer adapts its
+precision per layer from the learned QAT widths — reloading weights, not
+recompiling, mirrors the FPGA's runtime-flexible datapath.
+
+Blocked over the last dimension; VPU-elementwise, memory-bound by design —
+it exists to be FUSED into consumers (see kernels/cnn_eq quantized variant)
+and standalone mainly for validation and QAT experiments.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _quant_kernel(bits_ref, x_ref, o_ref):
+    i_bits = bits_ref[0]
+    f_bits = bits_ref[1]
+    scale = jnp.exp2(f_bits)
+    hi = jnp.exp2(i_bits) - 1.0 / scale
+    lo = -jnp.exp2(i_bits)
+    xq = jnp.round(x_ref[...].astype(jnp.float32) * scale) / scale
+    o_ref[...] = jnp.clip(xq, lo, hi).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def fixed_point_quantize(x: jnp.ndarray, int_bits: jnp.ndarray | float,
+                         frac_bits: jnp.ndarray | float, block: int = 1024,
+                         interpret: bool | None = None) -> jnp.ndarray:
+    """Quantize an arbitrary-shape array to Q(int_bits).(frac_bits)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    block = min(block, n)
+    n_blocks = pl.cdiv(n, block)
+    if n_blocks * block != n:
+        flat = jnp.pad(flat, (0, n_blocks * block - n))
+    bits = jnp.stack([jnp.asarray(int_bits, jnp.float32),
+                      jnp.asarray(frac_bits, jnp.float32)])
+
+    out = pl.pallas_call(
+        _quant_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            # per-layer widths are runtime scalars → SMEM
+            pl.BlockSpec((2,), lambda i: (0,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks * block,), x.dtype),
+        interpret=interpret,
+    )(bits, flat)
+    return out[:n].reshape(shape)

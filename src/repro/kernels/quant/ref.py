@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fixed-point quantization kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fixed_point_quantize(x: jnp.ndarray, int_bits: float,
+                         frac_bits: float) -> jnp.ndarray:
+    """Signed Q(int_bits).(frac_bits) fixed-point rounding + saturation."""
+    scale = 2.0 ** frac_bits
+    hi = 2.0 ** int_bits - 1.0 / scale
+    lo = -(2.0 ** int_bits)
+    xq = jnp.round(x.astype(jnp.float32) * scale) / scale
+    return jnp.clip(xq, lo, hi).astype(x.dtype)

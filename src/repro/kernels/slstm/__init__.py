@@ -1,0 +1,2 @@
+from .ref import slstm as slstm_ref
+from .slstm import slstm_fused

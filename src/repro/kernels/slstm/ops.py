@@ -1,0 +1,5 @@
+"""Jitted public wrapper for the fused sLSTM kernel."""
+from .ref import slstm as slstm_ref
+from .slstm import slstm_fused
+
+__all__ = ["slstm_fused", "slstm_ref"]

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the fused sLSTM recurrence kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def slstm(xg: jnp.ndarray, r: jnp.ndarray, state):
+    """Stabilized sLSTM over time (the oracle the kernel must match).
+
+    xg: (B, S, 4, d) input pre-activations [z, i, f, o];
+    r:  (4, H, dh, dh) block-diagonal recurrent weights (d = H·dh);
+    state: (c, n, h, m) each (B, d) f32.
+    Returns (hs (B, S, d) f32, new_state).
+    """
+    bb, s, _, d = xg.shape
+    g, nh, dh, _ = r.shape
+    rf = r.astype(jnp.float32)
+
+    def step(carry, x_t):
+        c, n, h, m = carry
+        hh = h.reshape(bb, nh, dh)
+        rec = jnp.einsum("bhd,ghde->bghe", hh, rf).reshape(bb, 4, d)
+        pre = x_t.astype(jnp.float32) + rec
+        z = jnp.tanh(pre[:, 0])
+        i_pre, f_pre = pre[:, 1], pre[:, 2]
+        o = jax.nn.sigmoid(pre[:, 3])
+        m_new = jnp.maximum(f_pre + m, i_pre)
+        i_s = jnp.exp(i_pre - m_new)
+        f_s = jnp.exp(f_pre + m - m_new)
+        c_new = f_s * c + i_s * z
+        n_new = f_s * n + i_s
+        h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    (c, n, h, m), hs = jax.lax.scan(step, state,
+                                    jnp.moveaxis(xg, 1, 0))
+    return jnp.moveaxis(hs, 0, 1), (c, n, h, m)

@@ -1,0 +1,132 @@
+"""Pallas TPU kernel: fused sLSTM recurrence (§Perf enumerated lever).
+
+The sLSTM scan is the dominant residual of the xlstm train cell after the
+XLA-level iterations (EXPERIMENTS.md §Perf cell 1): 4096 sequential steps
+of tiny (B, 4d) elementwise ops + an (nh·dh×dh) recurrent matmul, each
+round-tripping the carry through HBM at arithmetic intensity ≈ 0.5
+flop/byte. The xLSTM authors hit the same wall on GPU and shipped a fused
+recurrent kernel; this is the TPU analogue:
+
+  * grid = (B-tiles,); the ENTIRE time loop runs inside one kernel
+    invocation with the carry (c, n, h, m) resident in VMEM scratch;
+  * the input stream xg is blocked over time via a fori_loop reading
+    VMEM-resident slices (the (S, 4d)-tile per batch-block is streamed by
+    the BlockSpec), outputs written to the h-sequence tile;
+  * per step: one (B_t, d)×(d, d) block-diag recurrent matmul on the MXU
+    + the gate elementwise ops on the VPU — no HBM traffic besides the
+    input/output streams.
+
+Napkin (xlstm-125m train cell): xs stream once instead of ~6 carry
+round-trips per step ⇒ sLSTM traffic (B·S·4d·(in+carry·k)) drops ~6×;
+predicted cell t_mem 18.1 s → ~2.5 s. Validated for numerics against
+ref.slstm in interpret mode (tests/test_slstm_kernel.py); the dry-run
+accounting treats it like the other kernels (traffic-equivalent stub +
+analytical flops) once wired into the model path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import jax.experimental.pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _slstm_kernel(xg_ref, r_ref, c0_ref, n0_ref, h0_ref, m0_ref,
+                  hs_ref, c_ref, n_ref, h_ref, m_ref,
+                  c_scr, n_scr, h_scr, m_scr, *, seq: int, nh: int, dh: int):
+    d = nh * dh
+    c_scr[...] = c0_ref[0].astype(jnp.float32)
+    n_scr[...] = n0_ref[0].astype(jnp.float32)
+    h_scr[...] = h0_ref[0].astype(jnp.float32)
+    m_scr[...] = m0_ref[0].astype(jnp.float32)
+    r = r_ref[...].astype(jnp.float32)              # (4, nh, dh, dh)
+    # block-diagonal recurrence as one (d, 4d) matrix in VMEM
+    rmat = jnp.zeros((d, 4 * d), jnp.float32)
+    for g in range(4):
+        for hidx in range(nh):
+            rmat = jax.lax.dynamic_update_slice(
+                rmat, r[g, hidx], (hidx * dh, g * d + hidx * dh))
+
+    def step(t, _):
+        c, n, h, m = c_scr[...], n_scr[...], h_scr[...], m_scr[...]
+        x_t = xg_ref[0, pl.ds(t, 1), :][0].astype(jnp.float32)  # (4d,)
+        rec = jax.lax.dot(h[None, :], rmat,
+                          preferred_element_type=jnp.float32)[0]
+        pre = x_t + rec                                  # (4d,)
+        z = jnp.tanh(pre[0 * d:1 * d])
+        i_pre = pre[1 * d:2 * d]
+        f_pre = pre[2 * d:3 * d]
+        o = jax.nn.sigmoid(pre[3 * d:4 * d])
+        m_new = jnp.maximum(f_pre + m, i_pre)
+        i_s = jnp.exp(i_pre - m_new)
+        f_s = jnp.exp(f_pre + m - m_new)
+        c_new = f_s * c + i_s * z
+        n_new = f_s * n + i_s
+        h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+        c_scr[...] = c_new
+        n_scr[...] = n_new
+        h_scr[...] = h_new
+        m_scr[...] = m_new
+        hs_ref[0, pl.ds(t, 1), :] = h_new[None].astype(hs_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, seq, step, 0)
+    c_ref[0] = c_scr[...]
+    n_ref[0] = n_scr[...]
+    h_ref[0] = h_scr[...]
+    m_ref[0] = m_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("nh", "interpret"))
+def slstm_fused(xg: jnp.ndarray, r: jnp.ndarray, state, nh: int,
+                interpret: bool | None = None):
+    """xg: (B, S, 4·d) pre-activations; r: (4, nh, dh, dh);
+    state: (c, n, h, m) each (B, d) f32.  Returns (hs (B,S,d) f32, state').
+
+    Grid over batch; the whole time recurrence lives in one kernel
+    invocation per batch row with the carry in VMEM.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    b, s, d4 = xg.shape
+    d = d4 // 4
+    dh = d // nh
+    c0, n0, h0, m0 = state
+
+    kernel = functools.partial(_slstm_kernel, seq=s, nh=nh, dh=dh)
+    row = lambda i: (i, 0, 0)
+    vec = lambda i: (i, 0)
+    hs, c, n, h, m = pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, s, d4), row),
+            pl.BlockSpec((4, nh, dh, dh), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((1, d), vec),
+            pl.BlockSpec((1, d), vec),
+            pl.BlockSpec((1, d), vec),
+            pl.BlockSpec((1, d), vec),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, s, d), row),
+            pl.BlockSpec((1, d), vec),
+            pl.BlockSpec((1, d), vec),
+            pl.BlockSpec((1, d), vec),
+            pl.BlockSpec((1, d), vec),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, d), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((d,), jnp.float32)] * 4,
+        interpret=interpret,
+    )(xg, r, c0, n0, h0, m0)
+    return hs, (c, n, h, m)

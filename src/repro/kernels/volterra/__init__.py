@@ -1,0 +1,5 @@
+from .ops import equalize
+from .ref import volterra as volterra_ref
+from .volterra import volterra as volterra_pallas
+
+__all__ = ["equalize", "volterra_ref", "volterra_pallas"]

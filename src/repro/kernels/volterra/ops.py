@@ -1,0 +1,30 @@
+"""Jitted wrapper: run the Volterra Pallas kernel from core params."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+from ...core.volterra import VolterraConfig
+from .ref import volterra as volterra_ref
+from .volterra import volterra as volterra_pallas
+
+
+def equalize(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
+             cfg: VolterraConfig, use_pallas: bool = True,
+             tile: int = 128) -> jnp.ndarray:
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[None]
+    w2 = params.get("w2") if cfg.m2 > 0 else None
+    w3 = params.get("w3") if cfg.m3 > 0 else None
+    if use_pallas:
+        y = volterra_pallas(x, params["w0"], params["w1"], w2, w3,
+                            stride=cfg.n_os, tile=tile)
+    else:
+        y = volterra_ref(x, params["w0"], params["w1"], w2, w3,
+                         stride=cfg.n_os)
+    return y[0] if squeeze else y
+
+
+__all__ = ["volterra_pallas", "volterra_ref", "equalize"]

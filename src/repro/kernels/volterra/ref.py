@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the Volterra equalizer kernel (orders 0–3).
+
+Stream semantics like cnn_eq: input padded once by the max memory half-length,
+windows gathered per output symbol.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _windows(xp: jnp.ndarray, m: int, stride: int, n_out: int, off: int
+             ) -> jnp.ndarray:
+    idx = jnp.arange(n_out)[:, None] * stride + jnp.arange(m)[None, :] + off
+    return xp[:, idx]
+
+
+def volterra(x: jnp.ndarray, w0: jnp.ndarray, w1: jnp.ndarray,
+             w2: jnp.ndarray | None, w3: jnp.ndarray | None,
+             stride: int) -> jnp.ndarray:
+    """x: (B, W) → (B, W//stride).  w1: (M1,), w2: (M2, M2), w3: (M3,M3,M3)."""
+    m1 = w1.shape[0]
+    m2 = w2.shape[0] if w2 is not None else 0
+    m3 = w3.shape[0] if w3 is not None else 0
+    halo = max(m1 // 2, m2 // 2, m3 // 2)
+    n_out = x.shape[1] // stride
+    xp = jnp.pad(x, ((0, 0), (halo, halo))).astype(jnp.float32)
+
+    y = jnp.broadcast_to(w0.astype(jnp.float32), (x.shape[0], n_out))
+    win1 = _windows(xp, m1, stride, n_out, halo - m1 // 2)
+    y = y + jnp.einsum("bnm,m->bn", win1, w1.astype(jnp.float32))
+    if w2 is not None and m2 > 0:
+        win2 = _windows(xp, m2, stride, n_out, halo - m2 // 2)
+        y = y + jnp.einsum("bni,bnj,ij->bn", win2, win2,
+                           w2.astype(jnp.float32))
+    if w3 is not None and m3 > 0:
+        win3 = _windows(xp, m3, stride, n_out, halo - m3 // 2)
+        y = y + jnp.einsum("bni,bnj,bnk,ijk->bn", win3, win3, win3,
+                           w3.astype(jnp.float32))
+    return y.astype(x.dtype)

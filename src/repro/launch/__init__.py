@@ -1,0 +1,3 @@
+# NOTE: dryrun is intentionally not imported here — it sets XLA_FLAGS at
+# import time and must only be imported as the program entry point.
+from . import mesh, roofline, steps

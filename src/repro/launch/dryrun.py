@@ -1,0 +1,219 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ["REPRO_STUB_FLASH"] = "1"   # see models/attention._flash_sharded
+
+"""Multi-pod dry-run: prove the distribution config is coherent without
+real hardware.
+
+For every (architecture × input shape × mesh) cell:
+
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=…, out_shardings=…) \
+                       .lower(**input_specs(arch))
+        compiled = lowered.compile()
+        print(compiled.memory_analysis())    # proves it fits
+        print(compiled.cost_analysis())      # FLOPs/bytes for §Roofline
+
+on the 16×16 single-pod mesh AND the 2×16×16 multi-pod mesh. Failures
+(sharding mismatch, OOM at compile, unsupported collective) are bugs.
+
+Usage:
+    python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--out reports/dryrun]
+
+Results land as JSON per cell (roofline terms, bytes/device, collective
+schedule) consumed by EXPERIMENTS.md §Dry-run/§Roofline.
+
+(No `from __future__` import here: the XLA_FLAGS lines above must stay the
+very first statements of the module.)
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from .. import configs
+from ..configs.shapes import SHAPES
+from ..models import registry
+from ..parallel import sharding
+from . import roofline as rl
+from . import steps
+from .mesh import make_production_mesh
+
+HBM_PER_CHIP = 16 * 1024**3          # v5e-class: 16 GiB
+
+
+def _tokens_for(shape) -> int:
+    if shape.kind == "train":
+        return shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return shape.global_batch * shape.seq_len
+    return shape.global_batch        # decode: 1 token per sequence
+
+
+def _kernel_flops(cfg, shape, n_chips: int) -> float:
+    """Per-chip flops of flash-attention invocations (§Perf it. 3).
+
+    A pallas custom-call is opaque to HLO cost analysis: its HBM traffic is
+    visible (operands/results of the call), but its FLOPs must be added
+    analytically. Invocations: train = 2·L (fwd + remat-fwd; the XLA
+    backward is visible) per microbatch; prefill = L.
+    """
+    if not cfg.fused_attention or shape.kind == "decode":
+        return 0.0
+    from ..kernels.flash_attn import attention_costs
+    from ..parallel.sharding import resolve_heads
+    hq, _ = resolve_heads(cfg.n_heads, cfg.n_kv_heads, cfg.tp)
+    if cfg.family == "hybrid":
+        from ..models.zamba2 import attn_points
+        layers = len(attn_points(cfg))
+    else:
+        layers = cfg.n_layers
+    b = shape.global_batch
+    s = shape.seq_len                       # VLM: prefix+text = backbone seq
+    if shape.kind == "train":
+        # fwd (1×) + remat-fwd (1×) + kernel bwd (dkv 4 matmuls + dq 3
+        # matmuls over the 2-matmul fwd = 3.5×) per layer per microbatch
+        factor = 5.5 * layers
+    else:
+        factor = 1.0 * layers
+    per = attention_costs(b, s, s, hq, cfg.head_dim, causal=True,
+                          window=cfg.window)
+    return factor * per["flops"] / n_chips
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             reduced: bool = False, cfg_overrides: dict | None = None,
+             verbose: bool = True) -> dict:
+    shape = SHAPES[shape_name]
+    ok, reason = steps.cell_supported(arch, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        with mesh:
+            low = steps.make_lowerable(arch, shape, mesh, reduced=reduced,
+                                       cfg_overrides=cfg_overrides)
+            lowered = low.fn.lower(*low.args_sds)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            if isinstance(cost, list):
+                cost = cost[0]
+            hlo = compiled.as_text()
+
+            cfg = low.cfg
+            n_active = cfg.n_active_params()
+            mfl = rl.model_flops(n_active, _tokens_for(shape), shape.kind)
+            roof = rl.from_compiled(compiled, n_chips=mesh.size,
+                                    model_fl=mfl, hlo_text=hlo)
+            kf = _kernel_flops(cfg, shape, mesh.size)
+            if kf:
+                roof.flops += kf
+
+            result = {
+                "arch": arch, "shape": shape_name,
+                "mesh": f"{dict(zip(mesh.axis_names, mesh.devices.shape))}",
+                "chips": mesh.size,
+                "status": "ok",
+                "kind": shape.kind,
+                "t_lower_s": round(t_lower, 1),
+                "t_compile_s": round(t_compile, 1),
+                "n_params": int(
+                    sum(p.size for p in jax.tree.leaves(low.args_sds[0]))),
+                "n_active_params": int(n_active),
+                "roofline": roof.to_dict(),
+            }
+            if mem is not None:
+                ba = getattr(mem, "temp_size_in_bytes", None)
+                result["memory"] = {
+                    "argument_bytes": getattr(mem, "argument_size_in_bytes",
+                                              0),
+                    "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+                    "temp_bytes": ba or 0,
+                    "generated_code_bytes": getattr(
+                        mem, "generated_code_size_in_bytes", 0),
+                }
+                live = (result["memory"]["argument_bytes"]
+                        + result["memory"]["temp_bytes"])
+                result["memory"]["live_bytes_per_chip"] = live
+                result["memory"]["fits_hbm"] = bool(live <= HBM_PER_CHIP)
+            if verbose:
+                r = result["roofline"]
+                print(f"[{arch} × {shape_name} × {mesh.size}ch] OK  "
+                      f"compile {t_compile:.0f}s  "
+                      f"compute {r['t_compute_s']*1e3:.2f}ms  "
+                      f"memory {r['t_memory_s']*1e3:.2f}ms  "
+                      f"collective {r['t_collective_s']*1e3:.2f}ms  "
+                      f"→ {r['bottleneck']}-bound, "
+                      f"MFU@roofline {r['mfu_at_roofline']*100:.1f}%")
+                if mem is not None:
+                    print(f"    mem/chip: args "
+                          f"{result['memory']['argument_bytes']/2**30:.2f} GiB"
+                          f" + temps "
+                          f"{result['memory']['temp_bytes']/2**30:.2f} GiB"
+                          f" (fits 16 GiB: "
+                          f"{result['memory'].get('fits_hbm')})")
+            return result
+    except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+        if verbose:
+            traceback.print_exc()
+        return {"arch": arch, "shape": shape_name, "status": "failed",
+                "error": f"{type(e).__name__}: {e}",
+                "multi_pod": multi_pod}
+    finally:
+        sharding.set_mesh(None)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=configs.ARCHS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--out", default="reports/dryrun")
+    args = ap.parse_args()
+
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    cells = []
+    if args.all:
+        for a in configs.ARCHS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            res = run_cell(arch, shape, multi_pod=mp, reduced=args.reduced)
+            tag = "mp" if mp else "sp"
+            fname = out / f"{arch}_{shape}_{tag}.json"
+            fname.write_text(json.dumps(res, indent=2))
+            if res["status"] == "failed":
+                failures += 1
+                print(f"[{arch} × {shape} × {tag}] FAILED: {res['error']}")
+            elif res["status"] == "skipped":
+                print(f"[{arch} × {shape}] SKIPPED: {res['reason'][:60]}…")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

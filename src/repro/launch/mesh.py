@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS before first init.
+
+Single pod: 16×16 = 256 chips, axes ("data", "model").
+Multi-pod:  2×16×16 = 512 chips, axes ("pod", "data", "model") — "pod"
+composes with "data" for batch/FSDP sharding (parallel/sharding.py), so the
+same sharding rules serve both meshes; the pod axis carries only gradient
+all-reduces (DCN-friendly).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (tests, elastic restarts, low-power profiles)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))

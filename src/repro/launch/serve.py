@@ -1,0 +1,99 @@
+"""Batched serving driver: prefill + greedy decode loop.
+
+Continuous-batching-lite: requests are grouped into a fixed batch, prefilled
+once, then decoded step-by-step with the donated-state decode step (KV ring
+caches / SSM states, per family). On CPU this serves REDUCED configs; the
+full-config serve paths are lowered by the dry-run.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
+        --batch 4 --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import logging
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .. import configs
+from ..models import registry
+from ..parallel import sharding
+from . import steps as steps_lib
+from .mesh import make_mesh
+
+log = logging.getLogger("repro.serve")
+
+
+def serve_session(cfg, mesh, batch: int, prompt_len: int, max_len: int):
+    mode = "serve_fsdp" if cfg.serve_fsdp else "serve"
+    sharding.set_mesh(mesh, mode)
+    model = registry.build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    state = model.init_serve_state(batch, max_len)
+
+    prefill = jax.jit(steps_lib.build_prefill_step(model))
+    decode = jax.jit(steps_lib.build_decode_step(model), donate_argnums=(3,))
+    return model, params, state, prefill, decode
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b", choices=configs.ARCHS)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--mesh", default="1x1")
+    args = ap.parse_args(argv)
+    logging.basicConfig(level=logging.INFO)
+
+    cfg = configs.get_config(args.arch, reduced=not args.full)
+    dp, mp = (int(x) for x in args.mesh.split("x"))
+    mesh = make_mesh((dp, mp), ("data", "model"))
+    cfg = dataclasses.replace(cfg, tp=mp)
+    max_len = args.prompt_len + args.gen
+
+    with mesh:
+        model, params, state, prefill, decode = serve_session(
+            cfg, mesh, args.batch, args.prompt_len, max_len)
+
+        key = jax.random.PRNGKey(7)
+        batch = {"tokens": jax.random.randint(
+            key, (args.batch, args.prompt_len), 0, cfg.vocab)}
+        if cfg.family == "encdec":
+            batch["enc_embed"] = jnp.zeros(
+                (args.batch, cfg.enc_len, cfg.d_model), cfg.param_dtype())
+        if cfg.family == "vlm":
+            batch["embed_prefix"] = jnp.zeros(
+                (args.batch, cfg.img_tokens, cfg.d_model), cfg.param_dtype())
+
+        t0 = time.perf_counter()
+        logits, state = prefill(params, batch, state)
+        logits.block_until_ready()
+        t_prefill = time.perf_counter() - t0
+
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        generated = [tok]
+        t0 = time.perf_counter()
+        for i in range(args.gen):
+            pos = jnp.asarray(args.prompt_len + i, jnp.int32)
+            tok, logits, state = decode(params, tok, pos, state)
+            generated.append(tok)
+        tok.block_until_ready()
+        t_decode = time.perf_counter() - t0
+
+    toks_out = jnp.concatenate(generated, axis=1)
+    tput = args.batch * args.gen / t_decode
+    log.info("prefill %.3fs; decode %d steps in %.3fs "
+             "(%.1f tok/s, %.2f ms/tok)", t_prefill, args.gen, t_decode,
+             tput, 1e3 * t_decode / args.gen)
+    log.info("sample row 0: %s", toks_out[0, :16].tolist())
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,351 @@
+"""Step builders: the jit-able train/prefill/decode functions per
+(architecture × shape), their input ShapeDtypeStructs, and their sharding
+trees — consumed by dryrun.py (lower/compile), train.py, and serve.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .. import configs
+from ..configs.shapes import ShapeSpec
+from ..models import registry
+from ..models.common import ModelConfig
+from ..optim import AdamW
+from ..parallel import sharding
+
+
+# ---------------------------------------------------------------------------
+# config resolution per (arch, shape)
+# ---------------------------------------------------------------------------
+
+def resolve_config(arch: str, shape: ShapeSpec, reduced: bool = False
+                   ) -> ModelConfig:
+    cfg = configs.get_config(arch, reduced=reduced)
+    if shape.name == "long_500k" and cfg.family == "hybrid":
+        # zamba2 long-context decode: shared attn falls back to a sliding
+        # window ring cache (DESIGN.md §9); Mamba2 state carries long range.
+        cfg = dataclasses.replace(cfg, decode_window=4096)
+    return cfg
+
+
+def cell_supported(arch: str, shape: ShapeSpec) -> Tuple[bool, str]:
+    """(runnable, reason-if-skipped) per the DESIGN.md long_500k policy."""
+    if shape.name == "long_500k" and not configs.long_500k_runnable(arch):
+        return False, ("full attention is quadratic in seq; 500k-token "
+                       "decode requires a sub-quadratic family "
+                       "(DESIGN.md §5 long_500k policy)")
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStructs — never allocated)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Abstract inputs for the step kind. Training batches carry a leading
+    grad-accumulation axis (the pipeline emits them pre-split)."""
+    sds = jax.ShapeDtypeStruct
+    edt = jnp.dtype(cfg.dtype)
+    if shape.kind == "train":
+        acc = max(1, cfg.train_accum)
+        mb = shape.global_batch // acc
+        assert shape.global_batch % acc == 0
+        s = shape.seq_len
+        batch: Dict[str, Any] = {}
+        if cfg.family == "vlm":
+            s_txt = s - cfg.img_tokens
+            batch["embed_prefix"] = sds((acc, mb, cfg.img_tokens,
+                                         cfg.d_model), edt)
+            batch["tokens"] = sds((acc, mb, s_txt), jnp.int32)
+            batch["labels"] = sds((acc, mb, s_txt), jnp.int32)
+        elif cfg.family == "encdec":
+            batch["enc_embed"] = sds((acc, mb, cfg.enc_len, cfg.d_model), edt)
+            batch["tokens"] = sds((acc, mb, s), jnp.int32)
+            batch["labels"] = sds((acc, mb, s), jnp.int32)
+        else:
+            batch["tokens"] = sds((acc, mb, s), jnp.int32)
+            batch["labels"] = sds((acc, mb, s), jnp.int32)
+        return batch
+    if shape.kind == "prefill":
+        b, s = shape.global_batch, shape.seq_len
+        batch = {}
+        if cfg.family == "vlm":
+            batch["embed_prefix"] = sds((b, cfg.img_tokens, cfg.d_model), edt)
+            batch["tokens"] = sds((b, s - cfg.img_tokens), jnp.int32)
+        elif cfg.family == "encdec":
+            batch["enc_embed"] = sds((b, cfg.enc_len, cfg.d_model), edt)
+            batch["tokens"] = sds((b, s), jnp.int32)
+        else:
+            batch["tokens"] = sds((b, s), jnp.int32)
+        return batch
+    # decode: one new token against a state of capacity seq_len
+    return {"token": sds((shape.global_batch, 1), jnp.int32),
+            "pos": sds((), jnp.int32)}
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh
+                ) -> Dict[str, Any]:
+    """PartitionSpec tree matching input_specs."""
+    b_axes = sharding.batch_axes(mesh)
+    b = b_axes if _divides(shape_batch(cfg, shape), b_axes, mesh) else None
+    if shape.kind == "train":
+        out = {"tokens": P(None, b, None), "labels": P(None, b, None)}
+        if cfg.family == "vlm":
+            out["embed_prefix"] = P(None, b, None, None)
+        if cfg.family == "encdec":
+            out["enc_embed"] = P(None, b, None, None)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": P(b, None)}
+        if cfg.family == "vlm":
+            out["embed_prefix"] = P(b, None, None)
+        if cfg.family == "encdec":
+            out["enc_embed"] = P(b, None, None)
+        return out
+    return {"token": P(b, None), "pos": P()}
+
+
+def shape_batch(cfg: ModelConfig, shape: ShapeSpec) -> int:
+    if shape.kind == "train":
+        return shape.global_batch // max(1, cfg.train_accum)
+    return shape.global_batch
+
+
+def _divides(n: int, axes, mesh: Mesh) -> bool:
+    size = 1
+    for a in (axes or ()):
+        size *= mesh.shape[a]
+    return n % size == 0 if size else False
+
+
+# ---------------------------------------------------------------------------
+# serve-state sharding specs (per family)
+# ---------------------------------------------------------------------------
+
+def _auto_spec(leaf, hints, mesh: Mesh):
+    """Build a P from logical hints with divisibility fallback."""
+    out = []
+    for dim, ax in zip(leaf.shape, hints):
+        if ax == "batch":
+            cand = sharding.batch_axes(mesh)
+        elif ax == "model":
+            cand = ("model",) if "model" in mesh.axis_names else ()
+        else:
+            cand = ()
+        size = 1
+        for a in cand:
+            size *= mesh.shape[a]
+        ok = cand and size and dim % size == 0
+        out.append((cand if len(cand) > 1 else cand[0]) if ok else None)
+    return P(*out)
+
+
+def serve_state_specs(cfg: ModelConfig, state_shapes, mesh: Mesh):
+    """Spec tree for a serve state built from its abstract shapes.
+
+    Heuristics per family (explicit, not guessed): rank-5 stacked KV caches
+    shard (layer=None, batch, seq=None, heads→model, hd=None); Mamba conv
+    states shard the channel dim; SSD states shard the head dim; xLSTM cell
+    matrices shard the last (head-dim) axis.
+    """
+    def spec(path_leaf):
+        path, leaf = path_leaf
+        nd = len(leaf.shape)
+        base = path.split("/")[-1]
+        if base in ("k", "v", "xk", "xv"):
+            hints = {5: (None, "batch", None, "model", None),
+                     4: ("batch", None, "model", None)}.get(
+                         nd, (None,) * nd)
+            return _auto_spec(leaf, hints, mesh)
+        if "conv" in path:
+            hints = (None,) * (nd - 1) + ("model",)
+            hints = ("batch",) + hints[1:] if nd >= 2 else hints
+            if nd >= 3:
+                hints = ((None, "batch") if nd == 4 else ("batch",)) \
+                    + (None,) * (nd - 2) + ("model",)
+            return _auto_spec(leaf, hints, mesh)
+        if "ssm" in path and nd >= 4:
+            hints = (None,) * (nd - 4) + ("batch", "model", None, None)
+            return _auto_spec(leaf, hints, mesh)
+        if nd >= 2:
+            return _auto_spec(leaf, ("batch",) + (None,) * (nd - 2)
+                              + ("model",), mesh)
+        return P()
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state_shapes)
+    specs = [spec((sharding._path_str(p), l)) for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# int8 weight-gathered serving (§Perf iteration 5)
+# ---------------------------------------------------------------------------
+# serve_fsdp models (mixtral: 280 GB bf16) pay a per-layer weight all-gather
+# over `data`; storing the big weights as int8 + per-tensor scale HALVES
+# those collective bytes. The gather is pinned BEFORE dequantization with an
+# explicit sharding constraint so GSPMD moves int8, not bf16 — this is the
+# paper's learned-precision deployment (§4, deployment_dtype → int8) applied
+# to the serving collectives.
+
+_INT8_MIN_SIZE = 1 << 16
+
+
+def _is_qleaf(node) -> bool:
+    return isinstance(node, dict) and set(node.keys()) == {"q", "s"}
+
+
+def quantize_weights_int8(params):
+    def one(leaf):
+        if leaf.ndim >= 2 and leaf.size >= _INT8_MIN_SIZE:
+            s = (jnp.max(jnp.abs(leaf.astype(jnp.float32))) / 127.0 + 1e-12)
+            q = jnp.clip(jnp.round(leaf.astype(jnp.float32) / s),
+                         -127, 127).astype(jnp.int8)
+            return {"q": q, "s": s.astype(jnp.float32)}
+        return leaf
+    return jax.tree.map(one, params)
+
+
+def dequantize_weights(qparams, gather_specs, mesh: Mesh, dtype):
+    """Gather int8 (explicit constraint = the serve-mode spec, i.e. without
+    the fsdp axis) and dequantize locally."""
+    def one(node, spec):
+        if _is_qleaf(node):
+            qg = jax.lax.with_sharding_constraint(
+                node["q"], NamedSharding(mesh, spec["q"]))
+            return (qg.astype(jnp.float32) * node["s"]).astype(dtype)
+        return node
+    return jax.tree.map(one, qparams, gather_specs, is_leaf=_is_qleaf)
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def build_train_step(model: registry.Model, opt: AdamW):
+    """Gradient-accumulating train step: batch has a leading accum axis."""
+
+    def train_step(params, opt_state, batch):
+        accum = jax.tree.leaves(batch)[0].shape[0]
+
+        def micro(gsum, mb):
+            (loss, _), grads = jax.value_and_grad(
+                model.loss_fn, has_aux=True)(params, mb)
+            gsum = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), gsum, grads)
+            return gsum, loss
+
+        gsum0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        gsum, losses = jax.lax.scan(micro, gsum0, batch)
+        grads = jax.tree.map(lambda g: g / accum, gsum)
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        return new_params, new_opt, {"loss": jnp.mean(losses)}
+
+    return train_step
+
+
+def build_prefill_step(model: registry.Model):
+    def prefill_step(params, batch, state):
+        logits, new_state = model.prefill(params, batch, state)
+        return logits, new_state
+    return prefill_step
+
+
+def build_decode_step(model: registry.Model):
+    def decode_step(params, token, pos, state):
+        logits, new_state = model.decode(params, token, pos, state)
+        # greedy next token — serving loops feed it back
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, logits, new_state
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# full lowering assembly per cell
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Lowerable:
+    """Everything needed to lower one (arch × shape × mesh) cell."""
+    cfg: ModelConfig
+    fn: Any                  # the jit-wrapped step
+    args_sds: tuple          # ShapeDtypeStructs to pass to .lower()
+    kind: str
+
+
+def make_lowerable(arch: str, shape: ShapeSpec, mesh: Mesh,
+                   reduced: bool = False, lr: float = 1e-3,
+                   cfg_overrides: Optional[dict] = None) -> Lowerable:
+    cfg = resolve_config(arch, shape, reduced=reduced)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    model = registry.build(cfg)
+    if shape.kind == "train":
+        mode = "train"
+    else:
+        mode = "serve_fsdp" if cfg.serve_fsdp else "serve"
+    sharding.set_mesh(mesh, mode)
+
+    params_sds = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    pspecs = sharding.param_specs(params_sds, mesh, mode)
+    ns = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree)
+
+    if shape.kind == "train":
+        opt = AdamW(lr=lr, grad_clip_norm=1.0)
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+        ospecs = sharding.param_specs(opt_sds, mesh, mode)
+        batch_sds = input_specs(cfg, shape)
+        bspecs = batch_specs(cfg, shape, mesh)
+        step = build_train_step(model, opt)
+        fn = jax.jit(step,
+                     in_shardings=(ns(pspecs), ns(ospecs), ns(bspecs)),
+                     out_shardings=(ns(pspecs), ns(ospecs), None),
+                     donate_argnums=(0, 1))
+        return Lowerable(cfg, fn, (params_sds, opt_sds, batch_sds), "train")
+
+    # serving cells
+    b = shape.global_batch
+    state_sds = jax.eval_shape(
+        lambda: model.init_serve_state(b, shape.seq_len))
+    sspecs = serve_state_specs(cfg, state_sds, mesh)
+
+    deq = None
+    if cfg.serve_int8_weights:
+        params_sds = jax.eval_shape(quantize_weights_int8, params_sds)
+        pspecs = sharding.param_specs(params_sds, mesh, mode)
+        gspecs = sharding.param_specs(params_sds, mesh, "serve")
+        dt = cfg.param_dtype()
+        deq = lambda qp: dequantize_weights(qp, gspecs, mesh, dt)
+
+    if shape.kind == "prefill":
+        batch_sds = input_specs(cfg, shape)
+        bspecs = batch_specs(cfg, shape, mesh)
+        inner = build_prefill_step(model)
+        step = (inner if deq is None else
+                (lambda p, batch, st: inner(deq(p), batch, st)))
+        fn = jax.jit(step,
+                     in_shardings=(ns(pspecs), ns(bspecs), ns(sspecs)),
+                     out_shardings=(None, ns(sspecs)),
+                     donate_argnums=(2,))
+        return Lowerable(cfg, fn, (params_sds, batch_sds, state_sds),
+                         "prefill")
+
+    tok_sds = input_specs(cfg, shape)
+    bspecs = batch_specs(cfg, shape, mesh)
+    inner = build_decode_step(model)
+    step = (inner if deq is None else
+            (lambda p, tok, pos, st: inner(deq(p), tok, pos, st)))
+    fn = jax.jit(step,
+                 in_shardings=(ns(pspecs), ns(bspecs["token"]),
+                               ns(bspecs["pos"]), ns(sspecs)),
+                 out_shardings=(None, None, ns(sspecs)),
+                 donate_argnums=(3,))
+    return Lowerable(cfg, fn,
+                     (params_sds, tok_sds["token"], tok_sds["pos"],
+                      state_sds), "decode")

@@ -1,0 +1,382 @@
+"""GQA attention with qk-norm, RoPE, sliding windows, KV caching.
+
+TP policy (parallel/sharding.resolve_heads): Q heads padded to the TP degree;
+KV heads either shard directly or are EXPANDED to per-Q-head replicas at
+compute/cache time (the logical GQA weights stay at n_kv heads, so parameter
+counts match the assigned architecture).
+
+Memory policy: full-causal attention materializes scores per Q-CHUNK
+(`q_chunk`), bounding live memory to (B, H, q_chunk, S) — the TPU analogue of
+flash attention's tiling, expressed at the XLA level so GSPMD still shards
+it. Sliding-window attention slices the K/V band per chunk, making long
+sequences (mixtral long_500k) linear in S.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..parallel import sharding
+from .common import ModelConfig, dense_init, rms_norm, rope
+
+NEG_INF = -1e30
+
+
+def init(key: jax.Array, cfg: ModelConfig, d_out: Optional[int] = None
+         ) -> Dict[str, Any]:
+    """Attention parameters. Logical KV heads = cfg.n_kv_heads."""
+    d = cfg.d_model
+    dh = cfg.head_dim
+    hq_pad, _ = sharding.resolve_heads(cfg.n_heads, cfg.n_kv_heads, cfg.tp)
+    dt = cfg.param_dtype()
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(k1, (d, hq_pad, dh), dt),
+        "wk": dense_init(k2, (d, cfg.n_kv_heads, dh), dt),
+        "wv": dense_init(k3, (d, cfg.n_kv_heads, dh), dt),
+        "wo": dense_init(k4, (hq_pad, dh, d_out or d), dt,
+                         scale=1.0 / np.sqrt(hq_pad * dh)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), dt)
+        p["k_norm"] = jnp.ones((dh,), dt)
+    return p
+
+
+def _expand_kv(k: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """(B, S, n_kv, D) → (B, S, kv_eff, D) per resolve_heads policy."""
+    hq, kv_eff = sharding.resolve_heads(cfg.n_heads, cfg.n_kv_heads, cfg.tp)
+    if kv_eff == cfg.n_kv_heads:
+        return k
+    idx = jnp.asarray(sharding.kv_head_map(cfg.n_heads, cfg.n_kv_heads, hq,
+                                           kv_eff))
+    return jnp.take(k, idx, axis=2)
+
+
+def qkv(params, x: jnp.ndarray, cfg: ModelConfig,
+        positions: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) → q (B,S,Hq,D), k/v (B,S,KVeff,D) — rope'd, normed."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    if cfg.rope_theta > 0:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    k = _expand_kv(k, cfg)
+    v = _expand_kv(v, cfg)
+    q = sharding.logical(q, ("batch", None, "heads", None))
+    k = sharding.logical(k, ("batch", None, "heads", None))
+    v = sharding.logical(v, ("batch", None, "heads", None))
+    return q, k, v
+
+
+def _attend_dense(q, k, v, mask, scale):
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+def _gqa_repeat(q, n_kv_eff):
+    """Group Q heads for GQA score computation when kv not expanded."""
+    b, s, hq, d = q.shape
+    return q.reshape(b, s, n_kv_eff, hq // n_kv_eff, d)
+
+
+def _flash_sharded(q, k, v, window: int, q_offset: int):
+    """Flash-attention kernel, manually partitioned.
+
+    A pallas custom-call is opaque to GSPMD (it would replicate + gather),
+    so the kernel runs under shard_map with (batch→data/pod, heads→model)
+    specs — each device runs the kernel on its local shard, which is the
+    whole point of head/batch parallelism. Falls back to a direct call
+    without a mesh (single-device tests).
+
+    DRY-RUN MODE (REPRO_STUB_FLASH=1, set by launch/dryrun.py): interpret-
+    mode pallas lowers to per-grid-step loops whose HLO traffic massively
+    misrepresents the mosaic custom-call (measured 10× phantom bytes), and
+    mosaic itself cannot lower on the CPU dry-run host. The stub below has
+    the kernel's EXACT HBM profile — reads q/k/v once, writes o once —
+    and its MXU flops are added analytically (dryrun._kernel_flops)."""
+    import os
+    from jax.sharding import PartitionSpec as P
+    from ..kernels.flash_attn import flash_attention
+
+    if os.environ.get("REPRO_STUB_FLASH") == "1":
+        alpha = (jnp.mean(k.astype(jnp.float32))
+                 + jnp.mean(v.astype(jnp.float32))).astype(q.dtype)
+        return q + alpha * 0  # traffic-equivalent stand-in (never executed)
+
+    mesh = sharding.get_mesh()
+
+    def call(q_, k_, v_):
+        return flash_attention(q_, k_, v_, causal=True, window=window,
+                               q_offset=q_offset)
+
+    if mesh is None:
+        return call(q, k, v)
+    b_axes = sharding.batch_axes(mesh)
+    bsz = 1
+    for a in b_axes:
+        bsz *= mesh.shape[a]
+    b_spec = b_axes if (b_axes and q.shape[0] % bsz == 0) else None
+    h_ax = "model" if "model" in mesh.axis_names \
+        and q.shape[2] % mesh.shape["model"] == 0 \
+        and k.shape[2] % mesh.shape["model"] == 0 else None
+    spec = P(b_spec, None, h_ax, None)
+    return jax.shard_map(call, mesh=mesh, in_specs=(spec, spec, spec),
+                         out_specs=spec, check_vma=False)(q, k, v)
+
+
+def _flash_bwd_sharded(q, k, v, o, lse, g, window: int, q_offset: int):
+    """Backward kernels under the same manual partitioning as the forward.
+
+    In dry-run stub mode the gradients are traffic-equivalent stand-ins
+    (read what the kernels read, write what they write); the MXU flops are
+    added analytically (launch/dryrun._kernel_flops)."""
+    import os
+    from jax.sharding import PartitionSpec as P
+    from ..kernels.flash_attn.flash_attn import flash_attention_bwd
+
+    if os.environ.get("REPRO_STUB_FLASH") == "1":
+        alpha = (jnp.mean(o.astype(jnp.float32))
+                 + jnp.mean(lse)).astype(q.dtype) * 0
+        dq = g.astype(q.dtype) + alpha
+        dk = jnp.zeros_like(k) + alpha
+        dv = jnp.zeros_like(v) + alpha
+        return dq, dk, dv
+
+    mesh = sharding.get_mesh()
+
+    def call(q_, k_, v_, o_, lse_, g_):
+        return flash_attention_bwd(q_, k_, v_, o_, lse_, g_, causal=True,
+                                   window=window, q_offset=q_offset)
+
+    if mesh is None:
+        return call(q, k, v, o, lse, g)
+    b_axes = sharding.batch_axes(mesh)
+    bsz = 1
+    for a in b_axes:
+        bsz *= mesh.shape[a]
+    b_spec = b_axes if (b_axes and q.shape[0] % bsz == 0) else None
+    h_ax = "model" if "model" in mesh.axis_names \
+        and q.shape[2] % mesh.shape["model"] == 0 \
+        and k.shape[2] % mesh.shape["model"] == 0 else None
+    s4 = P(b_spec, None, h_ax, None)
+    s3 = P(b_spec, None, h_ax)
+    return jax.shard_map(call, mesh=mesh,
+                         in_specs=(s4, s4, s4, s4, s3, s4),
+                         out_specs=(s4, s4, s4), check_vma=False)(
+        q, k, v, o, lse, g)
+
+
+def _flash_fwd_lse_sharded(q, k, v, window: int, q_offset: int):
+    import os
+    from jax.sharding import PartitionSpec as P
+    from ..kernels.flash_attn.flash_attn import flash_attention_fwd
+
+    if os.environ.get("REPRO_STUB_FLASH") == "1":
+        alpha = (jnp.mean(k.astype(jnp.float32))
+                 + jnp.mean(v.astype(jnp.float32))).astype(q.dtype) * 0
+        lse = jnp.zeros(q.shape[:2] + (q.shape[2],), jnp.float32) \
+            + alpha.astype(jnp.float32)
+        return q + alpha, lse
+
+    mesh = sharding.get_mesh()
+
+    def call(q_, k_, v_):
+        return flash_attention_fwd(q_, k_, v_, causal=True, window=window,
+                                   q_offset=q_offset)
+
+    if mesh is None:
+        return call(q, k, v)
+    b_axes = sharding.batch_axes(mesh)
+    bsz = 1
+    for a in b_axes:
+        bsz *= mesh.shape[a]
+    b_spec = b_axes if (b_axes and q.shape[0] % bsz == 0) else None
+    h_ax = "model" if "model" in mesh.axis_names \
+        and q.shape[2] % mesh.shape["model"] == 0 \
+        and k.shape[2] % mesh.shape["model"] == 0 else None
+    s4 = P(b_spec, None, h_ax, None)
+    s3 = P(b_spec, None, h_ax)
+    return jax.shard_map(call, mesh=mesh, in_specs=(s4, s4, s4),
+                         out_specs=(s4, s3), check_vma=False)(q, k, v)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _fused_causal(q, k, v, q_offset: int, window: int, q_chunk: int):
+    """Flash attention, forward AND backward in Pallas (§Perf it. 3/6):
+    HBM traffic is O(S·D) in both directions — no (S×S) score tensor ever
+    reaches HBM."""
+    return _flash_sharded(q, k, v, window, q_offset)
+
+
+def _fused_fwd(q, k, v, q_offset, window, q_chunk):
+    o, lse = _flash_fwd_lse_sharded(q, k, v, window, q_offset)
+    return o, (q, k, v, o, lse)
+
+
+def _fused_bwd(q_offset, window, q_chunk, res, g):
+    q, k, v, o, lse = res
+    dq, dk, dv = _flash_bwd_sharded(q, k, v, o, lse, g, window, q_offset)
+    return dq, dk, dv
+
+
+_fused_causal.defvjp(_fused_fwd, _fused_bwd)
+
+
+def attend_causal(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  q_offset: jnp.ndarray | int = 0, window: int = 0,
+                  q_chunk: int = 1024, fused: bool = False) -> jnp.ndarray:
+    if fused and isinstance(q_offset, int) and q.shape[1] > 1:
+        return _fused_causal(q, k, v, q_offset, window, q_chunk)
+    return _attend_causal_xla(q, k, v, q_offset, window, q_chunk)
+
+
+def _attend_causal_xla(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                       q_offset: jnp.ndarray | int = 0, window: int = 0,
+                       q_chunk: int = 1024) -> jnp.ndarray:
+    """Causal (optionally sliding-window) attention, chunked over queries.
+
+    q: (B, Sq, Hq, D); k/v: (B, Sk, Hkv, D) with Hq % Hkv == 0.
+    q_offset: absolute position of q[0] relative to k[0] (prefill: 0).
+    """
+    b, sq, hq, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    scale = 1.0 / np.sqrt(d)
+    rep = hq // hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+
+    if sq <= q_chunk:
+        qpos = q_offset + jnp.arange(sq)[:, None]
+        kpos = jnp.arange(sk)[None, :]
+        mask = kpos <= qpos
+        if window > 0:
+            mask &= kpos > qpos - window
+        return _attend_dense(q, k, v, mask[None, None], scale)
+
+    n_chunks = sq // q_chunk
+    assert sq % q_chunk == 0, "q_chunk must divide the sequence"
+
+    def chunk_fn(i):
+        qs = q_offset + i * q_chunk
+        qc = jax.lax.dynamic_slice_in_dim(q, i * q_chunk, q_chunk, axis=1)
+        qpos = qs + jnp.arange(q_chunk)[:, None]
+        if 0 < window < sk:
+            # only the K/V band [qs - window + 1, qs + q_chunk) can attend
+            band = min(q_chunk + window, sk)
+            start = jnp.clip(qs - window + 1, 0, sk - band)
+            kc = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+            kpos = start + jnp.arange(band)[None, :]
+            mask = (kpos <= qpos) & (kpos > qpos - window)
+            return _attend_dense(qc, kc, vc, mask[None, None], scale)
+        kpos = jnp.arange(sk)[None, :]
+        mask = kpos <= qpos
+        if window > 0:
+            mask = mask & (kpos > qpos - window)
+        return _attend_dense(qc, k, v, mask[None, None], scale)
+
+    out = jax.lax.map(chunk_fn, jnp.arange(n_chunks))   # (n, B, qc, H, D)
+    return jnp.moveaxis(out, 0, 1).reshape(b, sq, hq, d)
+
+
+def attend_full(q, k, v):
+    """Bidirectional attention (encoder / cross)."""
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    rep = q.shape[2] // k.shape[2]
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    mask = jnp.ones((1, 1, q.shape[1], k.shape[1]), bool)
+    return _attend_dense(q, k, v, mask, scale)
+
+
+def out_proj(params, o: jnp.ndarray) -> jnp.ndarray:
+    y = jnp.einsum("bshk,hkd->bsd", o, params["wo"])
+    return sharding.logical(y, ("batch", None, None))
+
+
+# ---------------------------------------------------------------------------
+# Full layers (self / cross) with cache plumbing
+# ---------------------------------------------------------------------------
+
+def self_attention(params, x, cfg: ModelConfig, positions,
+                   cache: Optional[Dict[str, jnp.ndarray]] = None,
+                   cache_pos: Optional[jnp.ndarray] = None,
+                   causal: bool = True, q_chunk: int = 1024):
+    """Returns (out, new_cache).
+
+    Modes:
+      train/eval: cache=None → full pass.
+      prefill:    cache=zeros, cache_pos=0 → fills cache[0:S].
+      decode:     x is (B,1,d), cache_pos = current length → one step.
+    """
+    q, k, v = qkv(params, x, cfg, positions)
+    if cache is None:
+        o = (attend_causal(q, k, v, 0, cfg.window, q_chunk,
+                           fused=cfg.fused_attention) if causal
+             else attend_full(q, k, v))
+        return out_proj(params, o), None
+
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), cache_pos, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), cache_pos, axis=1)
+    new_cache = {"k": new_k, "v": new_v}
+    sq = x.shape[1]
+    if sq == 1:
+        # decode: attend to cache[0:cache_pos+1] via position masking
+        kk, vv = new_k, new_v
+        sk = kk.shape[1]
+        rep = q.shape[2] // kk.shape[2]
+        if rep > 1:
+            kk = jnp.repeat(kk, rep, axis=2)
+            vv = jnp.repeat(vv, rep, axis=2)
+        kpos = jnp.arange(sk)[None, :]
+        mask = kpos <= cache_pos
+        if cfg.window > 0:
+            mask &= kpos > cache_pos - cfg.window
+        o = _attend_dense(q, kk, vv, mask[None, None],
+                          1.0 / np.sqrt(q.shape[-1]))
+    else:
+        o = attend_causal(q, k, v, cache_pos, cfg.window, q_chunk)
+    return out_proj(params, o), new_cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=None) -> Dict[str, jnp.ndarray]:
+    _, kv_eff = sharding.resolve_heads(cfg.n_heads, cfg.n_kv_heads, cfg.tp)
+    cache_len = min(max_len, cfg.window) if cfg.window > 0 else max_len
+    # sliding-window caches could be ring buffers of length `window`;
+    # kept at max_len here for positional simplicity, window-sliced at use.
+    shape = (batch, max_len, kv_eff, cfg.head_dim)
+    dt = dtype or cfg.param_dtype()
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def cross_attention(params, x, enc_out, cfg: ModelConfig,
+                    cached_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None):
+    """Decoder→encoder attention; enc K/V can be precomputed at prefill."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+    if cached_kv is None:
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, params["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, params["wv"])
+        if cfg.qk_norm:
+            k = rms_norm(k, params["k_norm"])
+        k = _expand_kv(k, cfg)
+        v = _expand_kv(v, cfg)
+    else:
+        k, v = cached_kv
+    o = attend_full(q, k, v)
+    return out_proj(params, o), (k, v)

@@ -1,0 +1,185 @@
+"""Shared model machinery: config, norms, RoPE, init helpers."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"        # dense | moe | hybrid | ssm | encdec | vlm
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 256
+    vocab: int = 1024
+    d_head: int = 0              # 0 → d_model // n_heads
+    qk_norm: bool = False
+    window: int = 0              # sliding-window attention (0 = full)
+    rope_theta: float = 1e4
+    mlp_act: str = "silu"        # silu (gated) | gelu (2-matrix)
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # SSM / hybrid / xlstm
+    ssm_state: int = 0
+    d_conv: int = 4
+    expand: int = 2
+    ssm_head: int = 64           # mamba2 head dim P
+    attn_every: int = 0          # zamba2: shared attention block period
+    slstm_at: Tuple[int, ...] = ()
+    # enc-dec (whisper)
+    enc_layers: int = 0
+    enc_len: int = 0
+    # vlm (llava)
+    img_tokens: int = 0
+    # numerics / parallelism
+    dtype: str = "bfloat16"
+    tp: int = 1                  # tensor-parallel degree for head padding
+    remat: bool = True
+    scan_layers: bool = True
+    moe_group: int = 2048        # tokens per MoE dispatch group
+    train_accum: int = 1         # gradient-accumulation microbatches (train_4k)
+    serve_fsdp: bool = False     # serve with 2-D-sharded params (see sharding.py)
+    fused_attention: bool = False  # flash-attention Pallas kernel (§Perf it. 3)
+    serve_int8_weights: bool = False  # int8 weight gathers at serve (§Perf it. 5)
+    q_chunk: int = 1024          # query chunking for causal attention
+    ssd_chunk: int = 64          # chunk length for SSD / chunkwise mLSTM
+    # long-context handling: quadratic attention refuses seq > this unless
+    # window/ssm makes it sub-quadratic (DESIGN.md long_500k policy)
+    max_full_attn_seq: int = 65536
+    # long-context decode: cap attention scope (hybrid archs fall back to a
+    # sliding window in shared-attn blocks for long_500k — DESIGN.md §9)
+    decode_window: int = 0       # 0 = full cache
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or (self.d_model // self.n_heads)
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab rounded up to the 128-lane boundary (Megatron-style padding;
+        only whisper's 51866 actually pads). Loss masks the padded tail."""
+        return ((self.vocab + 127) // 128) * 128
+
+    def param_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def n_params_dense(self) -> int:
+        """Rough parameter count (for MODEL_FLOPS = 6·N·D)."""
+        d, f, v, l = self.d_model, self.d_ff, self.vocab, self.n_layers
+        hq = self.n_heads * self.head_dim
+        hkv = self.n_kv_heads * self.head_dim
+        attn = d * hq + 2 * d * hkv + hq * d
+        if self.n_experts:
+            mlp_dense = 0
+            moe = self.n_experts * (3 * d * f) + d * self.n_experts
+        else:
+            mlp_dense = 3 * d * f if self.mlp_act == "silu" else 2 * d * f
+            moe = 0
+        return l * (attn + mlp_dense + moe) + 2 * v * d
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: top_k experts only)."""
+        if not self.n_experts:
+            return self.n_params_dense()
+        d, f, v, l = self.d_model, self.d_ff, self.vocab, self.n_layers
+        hq = self.n_heads * self.head_dim
+        hkv = self.n_kv_heads * self.head_dim
+        attn = d * hq + 2 * d * hkv + hq * d
+        act = self.top_k * (3 * d * f) + d * self.n_experts
+        return l * (attn + act) + 2 * v * d
+
+
+# ---------------------------------------------------------------------------
+# Numerics
+# ---------------------------------------------------------------------------
+
+def _rms_norm_impl(x: jnp.ndarray, scale: jnp.ndarray,
+                   eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+                          + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+@jax.custom_vjp
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """RMSNorm with f32 internal math and STREAM-DTYPE cotangents.
+
+    §Perf iteration 1: bf16 cotangents (no measured change — kept for the
+    numerics contract). Iteration 7 tried stream-dtype ELEMENTWISE math as
+    well and measured WORSE traffic (internlm2 train t_mem 5785 → 7678 ms):
+    XLA fuses the f32 chain into the surrounding fusions efficiently, and
+    the extra converts broke that fusion — REVERTED to this form.
+    """
+    return _rms_norm_impl(x, scale)
+
+
+def _rms_fwd(x, scale):
+    return _rms_norm_impl(x, scale), (x, scale)
+
+
+def _rms_bwd(res, g):
+    x, scale = res
+    eps = 1e-6
+    xf = x.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True) + eps
+    r = jax.lax.rsqrt(ms)
+    xhat = xf * r
+    gs = gf * scale.astype(jnp.float32)
+    dx = r * (gs - xhat * jnp.mean(gs * xhat, axis=-1, keepdims=True))
+    dscale = jnp.sum(gf * xhat, axis=tuple(range(x.ndim - 1)))
+    return dx.astype(x.dtype), dscale.astype(scale.dtype)
+
+
+rms_norm.defvjp(_rms_fwd, _rms_bwd)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x: (B, S, H, D), positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32) *
+                    (jnp.log(theta) / half))
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key: jax.Array, shape: Tuple[int, ...], dtype,
+               scale: Optional[float] = None) -> jnp.ndarray:
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else 1.0 / jnp.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+
+
+def stack_layers(layer_params: list) -> Any:
+    """[{...}, {...}] → {...} with leading layer dim (for lax.scan)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *layer_params)

@@ -1,0 +1,126 @@
+"""Dense MLPs (SwiGLU / GELU) and the GShard-style MoE layer."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel import sharding
+from .common import ModelConfig, dense_init
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP
+# ---------------------------------------------------------------------------
+
+def init(key: jax.Array, cfg: ModelConfig) -> Dict[str, Any]:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = cfg.param_dtype()
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.mlp_act == "silu":
+        return {"w_gate": dense_init(k1, (d, f), dt),
+                "w_up": dense_init(k2, (d, f), dt),
+                "w_down": dense_init(k3, (f, d), dt)}
+    return {"w_in": dense_init(k1, (d, f), dt),
+            "w_out": dense_init(k2, (f, d), dt)}
+
+
+def apply(params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.mlp_act == "silu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+        h = sharding.logical(h, ("batch", None, "mlp"))
+        y = h @ params["w_down"]
+    else:
+        h = jax.nn.gelu(x @ params["w_in"])
+        h = sharding.logical(h, ("batch", None, "mlp"))
+        y = h @ params["w_out"]
+    return sharding.logical(y, ("batch", None, None))
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (GShard-style capacity dispatch)
+# ---------------------------------------------------------------------------
+# Dispatch uses per-batch-row groups: capacity C = cf · S · top_k / E tokens
+# per expert per row. One-hot dispatch/combine einsums lower to all-to-all
+# when experts are sharded over `model` — the collective shows up in the
+# §Roofline tables. Overflow tokens are dropped (standard capacity dropping;
+# the router's auxiliary loss keeps usage balanced).
+
+def moe_init(key: jax.Array, cfg: ModelConfig) -> Dict[str, Any]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = cfg.param_dtype()
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "router": dense_init(k1, (d, e), jnp.float32),
+        "moe_gate": dense_init(k2, (e, d, f), dt),
+        "moe_up": dense_init(k3, (e, d, f), dt),
+        "moe_down": dense_init(k4, (e, f, d), dt),
+    }
+
+
+def capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    c = int(cfg.capacity_factor * tokens_per_group * cfg.top_k
+            / cfg.n_experts)
+    return max(4, (c + 3) // 4 * 4)
+
+
+def moe_apply(params, x: jnp.ndarray, cfg: ModelConfig):
+    """x: (B, S, d) → (y, aux_loss).
+
+    Tokens are dispatched in groups of ≤ cfg.moe_group: the dispatch/combine
+    tensors are (B·G, g, E, C) with C = cf·g·k/E, so their footprint is
+    B·S·g·k·cf — linear in S for fixed group size (a 32k-seq prefill would
+    otherwise square it)."""
+    bb, ss, d = x.shape
+    g = min(cfg.moe_group, ss)
+    n_groups = ss // g if ss % g == 0 else 1
+    if ss % g != 0:
+        g = ss
+    x = x.reshape(bb * n_groups, g, d)
+    b, s, _ = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    c = capacity(cfg, s)
+
+    logits = (x.astype(jnp.float32) @ params["router"])        # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)                        # (B,S,k)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+
+    # load-balancing auxiliary loss (Switch/GShard)
+    density = jnp.mean(jax.nn.one_hot(idx[..., 0], e, dtype=jnp.float32),
+                       axis=1)                                  # (B,E)
+    density_proxy = jnp.mean(probs, axis=1)
+    aux = jnp.mean(density * density_proxy) * e * e
+
+    dispatch = jnp.zeros((b, s, e, c), x.dtype)
+    combine = jnp.zeros((b, s, e, c), jnp.float32)
+    counts = jnp.zeros((b, 1, e), jnp.int32)
+    for r in range(k):                       # unrolled over choice rank
+        mask_r = jax.nn.one_hot(idx[..., r], e, dtype=jnp.int32)   # (B,S,E)
+        pos_r = jnp.cumsum(mask_r, axis=1) - 1 + counts            # (B,S,E)
+        keep = (pos_r < c) & (mask_r > 0)
+        pos_oh = jax.nn.one_hot(pos_r, c, dtype=x.dtype) \
+            * keep[..., None].astype(x.dtype)                     # (B,S,E,C)
+        dispatch = dispatch + pos_oh
+        combine = combine + pos_oh.astype(jnp.float32) \
+            * gates[..., r][..., None, None]
+        counts = counts + jnp.sum(mask_r, axis=1, keepdims=True)
+
+    # experts shard over `model` when E divides it (moonshot EP16) and the
+    # dispatch einsum lowers to all-to-all; otherwise (mixtral 8e) experts
+    # replicate and d_ff is TP-sharded — sharding.logical drops non-dividing
+    # axes automatically, matching the param-rule fallback.
+    xin = jnp.einsum("bsec,bsd->ebcd", dispatch, x)
+    xin = sharding.logical(xin, ("experts", "batch", None, None))
+    h = jax.nn.silu(jnp.einsum("ebcd,edf->ebcf", xin, params["moe_gate"])) \
+        * jnp.einsum("ebcd,edf->ebcf", xin, params["moe_up"])
+    # EP (moonshot): experts carry the model axis, f replicated;
+    # d_ff TP (mixtral): experts replicated, f carries the model axis.
+    ff_ax = None if sharding.experts_shardable(e) else "mlp"
+    h = sharding.logical(h, ("experts", "batch", None, ff_ax))
+    yout = jnp.einsum("ebcf,efd->ebcd", h, params["moe_down"])
+    yout = sharding.logical(yout, ("experts", "batch", None, None))
+    y = jnp.einsum("bsec,ebcd->bsd", combine.astype(x.dtype), yout)
+    y = y.reshape(bb, ss, d)
+    return sharding.logical(y, ("batch", None, None)), aux

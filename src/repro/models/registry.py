@@ -1,0 +1,111 @@
+"""Uniform model interface over all architecture families.
+
+Every assigned architecture reduces to one of five family implementations:
+
+    dense / moe / vlm  → models.transformer   (llava = prefix-LM stub)
+    hybrid             → models.zamba2
+    ssm                → models.xlstm
+    encdec             → models.whisper
+
+`build(cfg)` returns a `Model` whose five methods are what the launcher,
+trainer, server, and dry-run lower — the families differ only in what their
+"serve state" is (KV ring caches, SSM states, or both).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer, whisper, xlstm, zamba2
+from .common import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[..., Any]
+    loss_fn: Callable[..., Any]           # (params, batch) → (loss, metrics)
+    init_serve_state: Callable[..., Any]  # (batch, max_len) → state
+    prefill: Callable[..., Any]           # (params, batch, state) → (logits, state)
+    decode: Callable[..., Any]            # (params, token, pos, state) → (logits, state)
+
+
+def _transformer_model(cfg: ModelConfig) -> Model:
+    def prefill(params, batch, state):
+        return transformer.prefill(params, batch["tokens"], cfg, state,
+                                   embed_prefix=batch.get("embed_prefix"))
+
+    return Model(
+        cfg=cfg,
+        init=lambda key: transformer.init(key, cfg),
+        loss_fn=lambda params, batch: transformer.loss_fn(params, batch, cfg),
+        init_serve_state=lambda batch, max_len: transformer.init_cache(
+            cfg, batch, max_len),
+        prefill=prefill,
+        decode=lambda params, token, pos, state: transformer.decode_step(
+            params, token, pos, state, cfg),
+    )
+
+
+def _zamba2_model(cfg: ModelConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init=lambda key: zamba2.init(key, cfg),
+        loss_fn=lambda params, batch: zamba2.loss_fn(params, batch, cfg),
+        init_serve_state=lambda batch, max_len: zamba2.init_state(
+            cfg, batch, max_len),
+        prefill=lambda params, batch, state: zamba2.prefill(
+            params, batch["tokens"], cfg, state),
+        decode=lambda params, token, pos, state: zamba2.decode_step(
+            params, token, pos, state, cfg),
+    )
+
+
+def _xlstm_model(cfg: ModelConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init=lambda key: xlstm.init(key, cfg),
+        loss_fn=lambda params, batch: xlstm.loss_fn(params, batch, cfg),
+        init_serve_state=lambda batch, max_len: xlstm.init_states(cfg, batch),
+        prefill=lambda params, batch, state: xlstm.prefill(
+            params, batch["tokens"], cfg, state),
+        decode=lambda params, token, pos, state: xlstm.decode_step(
+            params, token, pos, state, cfg),
+    )
+
+
+def _whisper_model(cfg: ModelConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init=lambda key: whisper.init(key, cfg),
+        loss_fn=lambda params, batch: whisper.loss_fn(params, batch, cfg),
+        init_serve_state=lambda batch, max_len: whisper.init_state(
+            cfg, batch, max_len),
+        prefill=lambda params, batch, state: whisper.prefill(
+            params, batch["tokens"], batch["enc_embed"], cfg, state),
+        decode=lambda params, token, pos, state: whisper.decode_step(
+            params, token, pos, state, cfg),
+    )
+
+
+_FAMILIES = {
+    "dense": _transformer_model,
+    "moe": _transformer_model,
+    "vlm": _transformer_model,
+    "hybrid": _zamba2_model,
+    "ssm": _xlstm_model,
+    "encdec": _whisper_model,
+}
+
+
+def build(cfg: ModelConfig) -> Model:
+    if cfg.family not in _FAMILIES:
+        raise ValueError(f"unknown family {cfg.family!r}")
+    return _FAMILIES[cfg.family](cfg)
+
+
+def param_count(params: Any) -> int:
+    return sum(int(p.size) for p in jax.tree.leaves(params))

@@ -1,0 +1,303 @@
+"""Decoder-only transformer stack: dense GQA / MoE / VLM prefix-LM.
+
+Covers internlm2, deepseek, smollm, qwen3 (dense), mixtral, moonshot (MoE),
+and llava (VLM backbone — the anyres vision tower is a STUB: `batch` carries
+precomputed patch embeddings that are prepended to the token embeddings).
+
+Structure notes:
+  * pre-RMSNorm blocks, RoPE, GQA attention (models/attention.py), SwiGLU or
+    MoE MLP (models/mlp.py);
+  * scan-over-layers with optional per-layer remat → small HLO, O(1) live
+    activations per layer (the carry) during backward;
+  * logits stay vocab-sharded (`("batch", None, "vocab")`) and the CE loss is
+    computed with an iota-compare gather so GSPMD reduces over the model axis
+    instead of materializing a replicated (B, S, V) tensor;
+  * serving uses a ring-buffer KV cache of capacity min(max_len, window) —
+    sliding-window archs (mixtral) decode 500k-token streams with O(window)
+    state, which is the paper's "bounded receptive field ⇒ bounded per-
+    instance state" insight applied to attention.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..parallel import sharding
+from . import attention, mlp
+from .common import ModelConfig, dense_init, rms_norm, stack_layers
+
+
+def _is_moe(cfg: ModelConfig) -> bool:
+    return cfg.n_experts > 0
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_layer(key: jax.Array, cfg: ModelConfig) -> Dict[str, Any]:
+    k1, k2 = jax.random.split(key)
+    dt = cfg.param_dtype()
+    p = {
+        "attn_norm": jnp.ones((cfg.d_model,), dt),
+        "attn": attention.init(k1, cfg),
+        "mlp_norm": jnp.ones((cfg.d_model,), dt),
+        "mlp": mlp.moe_init(k2, cfg) if _is_moe(cfg) else mlp.init(k2, cfg),
+    }
+    return p
+
+
+def init(key: jax.Array, cfg: ModelConfig) -> Dict[str, Any]:
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    dt = cfg.param_dtype()
+    layers = [init_layer(keys[i], cfg) for i in range(cfg.n_layers)]
+    return {
+        "embed": dense_init(keys[-3], (cfg.vocab_padded, cfg.d_model), dt,
+                            scale=1.0),
+        "layers": stack_layers(layers),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "lm_head": dense_init(keys[-2], (cfg.d_model, cfg.vocab_padded), dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# layer body
+# ---------------------------------------------------------------------------
+
+def layer_apply(lp: Dict[str, Any], h: jnp.ndarray, cfg: ModelConfig,
+                positions: jnp.ndarray,
+                cache: Optional[Dict[str, jnp.ndarray]] = None,
+                cache_pos: Optional[jnp.ndarray] = None):
+    """One transformer block. Returns (h, new_cache, aux_loss)."""
+    a, new_cache = attention.self_attention(
+        lp["attn"], rms_norm(h, lp["attn_norm"]), cfg, positions,
+        cache=cache, cache_pos=cache_pos, q_chunk=cfg.q_chunk)
+    h = h + a
+    x = rms_norm(h, lp["mlp_norm"])
+    if _is_moe(cfg):
+        m, aux = mlp.moe_apply(lp["mlp"], x, cfg)
+    else:
+        m, aux = mlp.apply(lp["mlp"], x, cfg), jnp.zeros((), jnp.float32)
+    return h + m, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# forward (train / eval, no cache)
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, tokens: jnp.ndarray, cfg: ModelConfig,
+                 embed_prefix: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.param_dtype())
+    if embed_prefix is not None:
+        h = jnp.concatenate([embed_prefix.astype(h.dtype), h], axis=1)
+    return sharding.logical(h, ("batch", None, None))
+
+
+def _scan_layers(body, h, stacked, cfg: ModelConfig):
+    """scan over the stacked layer params with optional remat."""
+    fn = jax.checkpoint(body) if cfg.remat else body
+    if cfg.scan_layers:
+        (h, aux), _ = jax.lax.scan(lambda c, lp: (fn(c, lp), None),
+                                   (h, jnp.zeros((), jnp.float32)), stacked)
+        return h, aux
+    aux = jnp.zeros((), jnp.float32)
+    for i in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[i], stacked)
+        (h, aux) = fn((h, aux), lp)
+    return h, aux
+
+
+def forward(params, tokens: jnp.ndarray, cfg: ModelConfig,
+            embed_prefix: Optional[jnp.ndarray] = None):
+    """tokens: (B, S_txt) [+ prefix (B, P, d)] → (logits (B, S, V_pad), aux)."""
+    h = embed_tokens(params, tokens, cfg, embed_prefix)
+    positions = jnp.arange(h.shape[1])
+
+    def body(carry, lp):
+        hh, aux = carry
+        hh, _, a = layer_apply(lp, hh, cfg, positions)
+        return hh, aux + a
+
+    h, aux = _scan_layers(body, h, params["layers"], cfg)
+    h = rms_norm(h, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+    logits = sharding.logical(logits, ("batch", None, "vocab"))
+    return logits, aux
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  vocab: int) -> jnp.ndarray:
+    """Vocab-sharding-friendly CE: iota-compare gather + masked logsumexp.
+
+    logits: (B, S, V_pad) possibly sharded on V; labels: (B, S) int32.
+    Padded vocab entries are masked to -inf before the logsumexp.
+    """
+    lf = logits.astype(jnp.float32)
+    v_pad = lf.shape[-1]
+    if v_pad > vocab:
+        iota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, 2)
+        lf = jnp.where(iota < vocab, lf, -1e30)
+    lse = jax.nn.logsumexp(lf, axis=-1)                       # (B, S)
+    iota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, 2)
+    picked = jnp.sum(jnp.where(iota == labels[..., None], lf, 0.0), axis=-1)
+    return jnp.mean(lse - picked)
+
+
+def loss_fn(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig):
+    """batch: tokens (B,S), labels (B,S) [, embed_prefix (B,P,d)].
+
+    With a prefix (VLM), loss covers only the text positions.
+    """
+    prefix = batch.get("embed_prefix")
+    logits, aux = forward(params, batch["tokens"], cfg, embed_prefix=prefix)
+    if prefix is not None:
+        logits = logits[:, prefix.shape[1]:, :]
+    ce = cross_entropy(logits[:, :-1, :], batch["labels"][:, 1:], cfg.vocab)
+    return ce + 1e-2 * aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: ring-buffer KV cache, prefill + decode
+# ---------------------------------------------------------------------------
+
+def cache_capacity(cfg: ModelConfig, max_len: int) -> int:
+    win = cfg.window or cfg.decode_window
+    return min(max_len, win) if win > 0 else max_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    """Stacked (L, B, W, kv_eff, hd) ring-buffer caches."""
+    _, kv_eff = sharding.resolve_heads(cfg.n_heads, cfg.n_kv_heads, cfg.tp)
+    w = cache_capacity(cfg, max_len)
+    shape = (cfg.n_layers, batch, w, kv_eff, cfg.head_dim)
+    dt = cfg.param_dtype()
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def _cache_spec(cfg: ModelConfig):
+    return ("layers", "batch", None, "heads", None)
+
+
+def shard_cache(cache, mesh=None):
+    return jax.tree.map(
+        lambda a: sharding.logical(a, (None, "batch", None, "heads", None)),
+        cache)
+
+
+def _ring_write(buf: jnp.ndarray, vals: jnp.ndarray, pos) -> jnp.ndarray:
+    """Write vals (B, S, H, D) at ring slots [(pos) % W ...]."""
+    w = buf.shape[1]
+    s = vals.shape[1]
+    if s == 1:
+        return jax.lax.dynamic_update_slice_in_dim(
+            buf, vals.astype(buf.dtype), jnp.mod(pos, w), axis=1)
+    if s >= w:
+        # whole buffer replaced: keep the LAST w entries, rotated so that
+        # abs position p lands at slot p % w (a roll, not a scatter)
+        vals = vals[:, -w:].astype(buf.dtype)
+        start = max(int(pos) + s - w, 0) if not isinstance(pos, jnp.ndarray)\
+            else pos + s - w
+        shift = start % w
+        return jnp.roll(vals, shift, axis=1) if not isinstance(shift, int) \
+            or shift else vals
+    start = jnp.maximum(pos + s - w, 0) if isinstance(pos, jnp.ndarray) \
+        else max(pos + s - w, 0)
+    slots = jnp.mod(start + jnp.arange(s), w)
+    return buf.at[:, slots].set(vals.astype(buf.dtype))
+
+
+def _set_layer(stacked: jnp.ndarray, i, vals: jnp.ndarray) -> jnp.ndarray:
+    """In-place (XLA-aliasable) write of layer i's cache slice.
+
+    The stacked cache is a scan CARRY (not stacked ys): while-loop carries
+    alias their buffers, so a 30×-layer 8 GiB cache is updated in place
+    instead of double-buffered."""
+    idx = (i,) + (0,) * (stacked.ndim - 1)
+    return jax.lax.dynamic_update_slice(stacked, vals[None].astype(
+        stacked.dtype), idx)
+
+
+def prefill(params, tokens: jnp.ndarray, cfg: ModelConfig,
+            cache: Dict[str, Any],
+            embed_prefix: Optional[jnp.ndarray] = None):
+    """Full-sequence pass filling the cache. Returns (last_logits, cache)."""
+    h = embed_tokens(params, tokens, cfg, embed_prefix)
+    s = h.shape[1]
+    positions = jnp.arange(s)
+
+    def body(carry, lp):
+        hh, ck_all, cv_all, i = carry
+        x = rms_norm(hh, lp["attn_norm"])
+        q, k, v = attention.qkv(lp["attn"], x, cfg, positions)
+        o = attention.attend_causal(q, k, v, 0, cfg.window, cfg.q_chunk,
+                                    fused=cfg.fused_attention)
+        hh = hh + attention.out_proj(lp["attn"], o)
+        x = rms_norm(hh, lp["mlp_norm"])
+        if _is_moe(cfg):
+            m, _ = mlp.moe_apply(lp["mlp"], x, cfg)
+        else:
+            m = mlp.apply(lp["mlp"], x, cfg)
+        hh = hh + m
+        ck_all = _set_layer(ck_all, i, _ring_write(ck_all[i], k, 0))
+        cv_all = _set_layer(cv_all, i, _ring_write(cv_all[i], v, 0))
+        return (hh, ck_all, cv_all, i + 1), None
+
+    (h, ck, cv, _), _ = jax.lax.scan(
+        body, (h, cache["k"], cache["v"], jnp.zeros((), jnp.int32)),
+        params["layers"])
+    h = rms_norm(h[:, -1:, :], params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+    logits = sharding.logical(logits, ("batch", None, "vocab"))
+    return logits[:, 0], {"k": ck, "v": cv}
+
+
+def decode_step(params, token: jnp.ndarray, pos: jnp.ndarray,
+                cache: Dict[str, Any], cfg: ModelConfig,
+                embed_prefix=None):
+    """One decode step. token: (B, 1) int32, pos: scalar absolute position.
+
+    Cache slots hold absolute positions p ≡ slot (mod W); validity mask is
+    age-based so the same code serves full caches and ring buffers.
+    """
+    h = embed_tokens(params, token, cfg)
+    positions = jnp.full((1,), pos, jnp.int32)
+    w = cache["k"].shape[2]
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+    win = cfg.window or cfg.decode_window or w
+
+    def body(carry, lp):
+        hh, ck_all, cv_all, i = carry
+        x = rms_norm(hh, lp["attn_norm"])
+        q, k, v = attention.qkv(lp["attn"], x, cfg, positions)
+        new_ck = _ring_write(ck_all[i], k, pos)
+        new_cv = _ring_write(cv_all[i], v, pos)
+        ck_all = _set_layer(ck_all, i, new_ck)
+        cv_all = _set_layer(cv_all, i, new_cv)
+        kk, vv = new_ck, new_cv
+        rep = q.shape[2] // kk.shape[2]
+        if rep > 1:
+            kk = jnp.repeat(kk, rep, axis=2)
+            vv = jnp.repeat(vv, rep, axis=2)
+        slot = jnp.arange(w)[None, :]
+        age = jnp.mod(pos - slot, w)                     # 0 .. w-1
+        valid = (age <= pos) & (age < win)
+        o = attention._attend_dense(q, kk, vv, valid[None, None], scale)
+        hh = hh + attention.out_proj(lp["attn"], o)
+        x = rms_norm(hh, lp["mlp_norm"])
+        if _is_moe(cfg):
+            m, _ = mlp.moe_apply(lp["mlp"], x, cfg)
+        else:
+            m = mlp.apply(lp["mlp"], x, cfg)
+        return (hh + m, ck_all, cv_all, i + 1), None
+
+    (h, ck, cv, _), _ = jax.lax.scan(
+        body, (h, cache["k"], cache["v"], jnp.zeros((), jnp.int32)),
+        params["layers"])
+    h = rms_norm(h, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+    logits = sharding.logical(logits, ("batch", None, "vocab"))
+    return logits[:, 0], {"k": ck, "v": cv}

@@ -1,0 +1,386 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM + recurrent sLSTM (arXiv:2405.04517).
+
+mLSTM (matrix memory, exponential gating) is computed in the chunkwise form:
+within a chunk the gated outer-product recurrence expands to a masked
+attention-like matmul (MXU-friendly), across chunks a `lax.scan` carries the
+stabilized state (C, n, m) — the same bounded-state streaming structure the
+paper's equalizer exploits (DESIGN.md §4.1), so xlstm keeps its long_500k
+cell with O(1) decode state.
+
+sLSTM (scalar memory, recurrent gate connections) is inherently sequential →
+`lax.scan` over time with block-diagonal (per-head) recurrent weights.
+
+Block layout follows the paper: mLSTM blocks use pre-up-projection (×2) with
+a causal conv feeding q/k; sLSTM blocks use post-up-projection (×4/3, gated).
+Stabilized exponential gating (log-space max-shift) throughout.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel import sharding
+from .common import ModelConfig, dense_init, rms_norm
+
+NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell — chunkwise parallel
+# ---------------------------------------------------------------------------
+
+def mlstm_chunked(q, k, v, log_i, log_f, chunk: int,
+                  state: Optional[Tuple] = None):
+    """q/k/v: (B,S,H,D) f32; log_i/log_f: (B,S,H) f32 (log input/forget gate).
+
+    Returns (h (B,S,H,D), (C (B,H,D,D), n (B,H,D), m (B,H))).
+    Stabilizer convention: true state = stored · exp(m).
+    """
+    bb, s_orig, h, d = q.shape
+    cl = min(chunk, s_orig)
+    # pad to a chunk multiple: log_i = -inf (no input), log_f = 0 (decay 1)
+    pad = (-s_orig) % cl
+    if pad:
+        pw = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = jnp.pad(q, pw), jnp.pad(k, pw), jnp.pad(v, pw)
+        log_i = jnp.pad(log_i, pw[:3], constant_values=NEG)
+        log_f = jnp.pad(log_f, pw[:3])
+    s = s_orig + pad
+    nc = s // cl
+    q = q.reshape(bb, nc, cl, h, d) / jnp.sqrt(d)
+    k = k.reshape(bb, nc, cl, h, d)
+    v = v.reshape(bb, nc, cl, h, d)
+    li = log_i.reshape(bb, nc, cl, h)
+    lf = log_f.reshape(bb, nc, cl, h)
+    cum_f = jnp.cumsum(lf, axis=2)                      # inclusive
+    total_f = cum_f[:, :, -1, :]                        # (B,nc,H)
+
+    if state is None:
+        c0 = jnp.zeros((bb, h, d, d), jnp.float32)
+        n0 = jnp.zeros((bb, h, d), jnp.float32)
+        m0 = jnp.full((bb, h), NEG, jnp.float32)
+    else:
+        c0, n0, m0 = state
+
+    tri = jnp.tril(jnp.ones((cl, cl), bool))[None, :, :, None]
+
+    def step(carry, inp):
+        c_st, n_st, m_st = carry
+        qc, kc, vc, li_c, cumf_c, totf_c = inp
+        qc = qc.astype(jnp.float32)
+        kc = kc.astype(jnp.float32)
+        vc = vc.astype(jnp.float32)
+        # §Perf iteration 4 (as in mamba2.ssd_chunked): the (B,Q,Q,H)
+        # log-weight kernel is built INSIDE the scan — one chunk at a
+        # time, fused — instead of materializing all chunks up front.
+        wlog_c = (cumf_c[:, :, None, :] - cumf_c[:, None, :, :]
+                  + li_c[:, None, :, :])               # (B,Qi,Qj,H)
+        wlog_c = jnp.where(tri, wlog_c, NEG)
+        wmax_c = jnp.max(wlog_c, axis=2)               # (B,Qi,H)
+        glog_c = totf_c[:, None, :] - cumf_c + li_c    # (B,Q,H)
+        gmax_c = jnp.max(glog_c, axis=1)               # (B,H)
+        # per-query stabilizer: max(intra max, cum_f_i + m_prev)
+        m_q = jnp.maximum(wmax_c, cumf_c + m_st[:, None, :])    # (B,Q,H)
+        w = jnp.exp(wlog_c - m_q[:, :, None, :])                # (B,Qi,Qj,H)
+        inter_scale = jnp.exp(cumf_c + m_st[:, None, :] - m_q)  # (B,Q,H)
+        qk = jnp.einsum("bihd,bjhd->bijh", qc, kc)              # (B,Qi,Qj,H)
+        num = jnp.einsum("bijh,bjhd->bihd", w * qk, vc)
+        num = num + inter_scale[..., None] \
+            * jnp.einsum("bihd,bhde->bihe", qc, c_st)
+        den = jnp.einsum("bijh,bijh->bih", w, qk) \
+            + inter_scale * jnp.einsum("bihd,bhd->bih", qc, n_st)
+        h_out = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_q))[..., None]
+
+        # state update to the end of the chunk
+        m_new = jnp.maximum(totf_c + m_st, gmax_c)              # (B,H)
+        g = jnp.exp(glog_c - m_new[:, None, :])                 # (B,Q,H)
+        carry_scale = jnp.exp(totf_c + m_st - m_new)
+        c_new = carry_scale[:, :, None, None] * c_st \
+            + jnp.einsum("bjh,bjhd,bjhe->bhde", g, kc, vc)
+        n_new = carry_scale[:, :, None] * n_st \
+            + jnp.einsum("bjh,bjhd->bhd", g, kc)
+        return (c_new, n_new, m_new), h_out
+
+    mv = lambda a: jnp.moveaxis(a, 1, 0)
+    (c_f, n_f, m_f), hs = jax.lax.scan(
+        jax.checkpoint(step), (c0, n0, m0),
+        (mv(q), mv(k), mv(v), mv(li), mv(cum_f), mv(total_f)))
+    h_out = jnp.moveaxis(hs, 0, 1).reshape(bb, s, h, d)
+    return h_out[:, :s_orig], (c_f, n_f, m_f)
+
+
+def mlstm_step(q, k, v, log_i, log_f, state):
+    """Single decode step. q/k/v: (B,H,D); log_i/log_f: (B,H)."""
+    c_st, n_st, m_st = state
+    d = q.shape[-1]
+    q = q / jnp.sqrt(d)
+    m_new = jnp.maximum(log_f + m_st, log_i)
+    i_s = jnp.exp(log_i - m_new)
+    f_s = jnp.exp(log_f + m_st - m_new)
+    c_new = f_s[..., None, None] * c_st \
+        + i_s[..., None, None] * jnp.einsum("bhd,bhe->bhde", k, v)
+    n_new = f_s[..., None] * n_st + i_s[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, c_new)
+    den = jnp.einsum("bhd,bhd->bh", q, n_new)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    return h, (c_new, n_new, m_new)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (pre-up-projection ×2, conv4 → q/k)
+# ---------------------------------------------------------------------------
+
+def mlstm_block_init(key: jax.Array, cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    di = cfg.expand * d
+    dt = cfg.param_dtype()
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": jnp.ones((d,), dt),
+        "mlstm_up": dense_init(ks[0], (d, 2 * di), dt),
+        "conv_w": dense_init(ks[1], (cfg.d_conv, di), dt),
+        "conv_b": jnp.zeros((di,), dt),
+        # block-diagonal per-head projections (official xLSTM layout)
+        "mlstm_q": dense_init(ks[2], (cfg.n_heads, di // cfg.n_heads,
+                                      di // cfg.n_heads), dt),
+        "mlstm_k": dense_init(ks[3], (cfg.n_heads, di // cfg.n_heads,
+                                      di // cfg.n_heads), dt),
+        "mlstm_v": dense_init(ks[4], (cfg.n_heads, di // cfg.n_heads,
+                                      di // cfg.n_heads), dt),
+        "gate_if": dense_init(ks[5], (di, 2 * cfg.n_heads), dt),
+        "if_bias": jnp.concatenate([jnp.zeros((cfg.n_heads,)),
+                                    jnp.linspace(3.0, 6.0, cfg.n_heads)]
+                                   ).astype(jnp.float32),
+        "skip": jnp.ones((di,), dt),
+        "mlstm_norm": jnp.ones((di,), dt),
+        "mlstm_down": dense_init(ks[6], (di, d), dt),
+    }
+
+
+def _conv_causal(x, w, b, state=None):
+    k = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    new_state = xp[:, -(k - 1):, :] if k > 1 else None
+    return jax.nn.silu(out + b[None, None, :]), new_state
+
+
+def mlstm_block_apply(p, x, cfg: ModelConfig, state=None):
+    """x: (B,S,d). state: {"conv", "cell": (C,n,m)} or None (training)."""
+    bb, s, d = x.shape
+    di = cfg.expand * d
+    nh = cfg.n_heads
+    dh = di // nh
+    h = rms_norm(x, p["norm"])
+    up = h @ p["mlstm_up"]
+    xm, gate = jnp.split(up, 2, axis=-1)
+    xm = sharding.logical(xm, ("batch", None, "ssm_inner"))
+    conv_state = None if state is None else state["conv"]
+    xc, new_conv = _conv_causal(xm, p["conv_w"], p["conv_b"], conv_state)
+    xch = xc.reshape(bb, s, nh, dh)
+    xmh = xm.reshape(bb, s, nh, dh)
+    # streams stay in the model dtype (§Perf it. 7); numerics are upcast
+    # per-chunk inside mlstm_chunked's scan step
+    q = jnp.einsum("bshd,hde->bshe", xch, p["mlstm_q"])
+    k = jnp.einsum("bshd,hde->bshe", xch, p["mlstm_k"])
+    v = jnp.einsum("bshd,hde->bshe", xmh, p["mlstm_v"])
+    if_pre = (xc.astype(jnp.float32) @ p["gate_if"].astype(jnp.float32)
+              ) + p["if_bias"][None, None, :]
+    log_i, f_pre = jnp.split(if_pre, 2, axis=-1)               # (B,S,H)
+    log_f = -jax.nn.softplus(-f_pre)                           # log sigmoid
+
+    cell_state = None if state is None else state["cell"]
+    if state is not None and s == 1:
+        hv, new_cell = mlstm_step(q[:, 0], k[:, 0], v[:, 0],
+                                  log_i[:, 0], log_f[:, 0], cell_state)
+        hv = hv[:, None]
+    else:
+        hv, new_cell = mlstm_chunked(q, k, v, log_i, log_f, cfg.ssd_chunk,
+                                     cell_state)
+    hv = hv.reshape(bb, s, di).astype(x.dtype)
+    hv = rms_norm(hv + p["skip"][None, None, :] * xc, p["mlstm_norm"])
+    out = (hv * jax.nn.silu(gate)) @ p["mlstm_down"]
+    out = sharding.logical(out, ("batch", None, None))
+    if state is None:
+        return x + out, None
+    return x + out, {"conv": new_conv, "cell": new_cell}
+
+
+def mlstm_block_state(cfg: ModelConfig, batch: int):
+    di = cfg.expand * cfg.d_model
+    nh = cfg.n_heads
+    dh = di // nh
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, di), cfg.param_dtype()),
+        "cell": (jnp.zeros((batch, nh, dh, dh), jnp.float32),
+                 jnp.zeros((batch, nh, dh), jnp.float32),
+                 jnp.full((batch, nh), NEG, jnp.float32)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (recurrent; post-up-projection 4/3 gated FFN)
+# ---------------------------------------------------------------------------
+
+def slstm_block_init(key: jax.Array, cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    df = max(1, int(d * 4 / 3) // 16 * 16)
+    dt = cfg.param_dtype()
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": jnp.ones((d,), dt),
+        "conv_w": dense_init(ks[0], (cfg.d_conv, d), dt),
+        "conv_b": jnp.zeros((d,), dt),
+        # input weights for gates z,i,f,o
+        "slstm_w": dense_init(ks[1], (d, 4 * d), dt),
+        # block-diagonal recurrent weights per head, per gate
+        "slstm_r": dense_init(ks[2], (4, nh, dh, dh), dt, scale=0.3),
+        "slstm_b": jnp.concatenate(
+            [jnp.zeros((2 * d,)), jnp.ones((d,)), jnp.zeros((d,))]
+        ).astype(jnp.float32),
+        "gn": jnp.ones((d,), dt),
+        "ffn_norm": jnp.ones((d,), dt),
+        "w_gate": dense_init(ks[3], (d, df), dt),
+        "w_up": dense_init(ks[4], (d, df), dt),
+        "w_down": dense_init(ks[5], (df, d), dt),
+    }
+
+
+def slstm_scan(p, xg: jnp.ndarray, nh: int, state):
+    """xg: (B,S,4d) pre-activations from inputs. Scan the recurrence."""
+    bb, s, d4 = xg.shape
+    d = d4 // 4
+    dh = d // nh
+    r = p["slstm_r"].astype(jnp.float32)                    # (4,H,dh,dh)
+    c0, n0, h0, m0 = state
+
+    def step(carry, x_t):
+        c, n, h, m = carry                                  # (B,d) / m (B,d)
+        hh = h.reshape(bb, nh, dh)
+        rec = jnp.einsum("bhd,ghde->bghe", hh, r).reshape(bb, 4, d)
+        pre = x_t.astype(jnp.float32).reshape(bb, 4, d) + rec
+        z = jnp.tanh(pre[:, 0])
+        i_pre = pre[:, 1]
+        f_pre = pre[:, 2]
+        o = jax.nn.sigmoid(pre[:, 3])
+        m_new = jnp.maximum(f_pre + m, i_pre)
+        i_s = jnp.exp(i_pre - m_new)
+        f_s = jnp.exp(f_pre + m - m_new)
+        c_new = f_s * c + i_s * z
+        n_new = f_s * n + i_s
+        h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    xs = jnp.moveaxis(xg, 1, 0)                             # (S,B,4d)
+    (c, n, h, m), hs = jax.lax.scan(step, (c0, n0, h0, m0), xs)
+    return jnp.moveaxis(hs, 0, 1), (c, n, h, m)
+
+
+def slstm_block_apply(p, x, cfg: ModelConfig, state=None):
+    bb, s, d = x.shape
+    nh = cfg.n_heads
+    h = rms_norm(x, p["norm"])
+    conv_state = None if state is None else state["conv"]
+    hc, new_conv = _conv_causal(h, p["conv_w"], p["conv_b"], conv_state)
+    xg = hc @ p["slstm_w"] + p["slstm_b"][None, None, :].astype(h.dtype)
+    cell = slstm_block_state(cfg, bb)["cell"] if state is None \
+        else state["cell"]
+    hv, new_cell = slstm_scan(p, xg, nh, cell)
+    hv = rms_norm(hv.astype(x.dtype), p["gn"])
+    y = x + hv
+    f = rms_norm(y, p["ffn_norm"])
+    f = jax.nn.silu(f @ p["w_gate"]) * (f @ p["w_up"])
+    f = sharding.logical(f, ("batch", None, "mlp"))
+    out = y + f @ p["w_down"]
+    out = sharding.logical(out, ("batch", None, None))
+    if state is None:
+        return out, None
+    return out, {"conv": new_conv, "cell": new_cell}
+
+
+def slstm_block_state(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    z = lambda: jnp.zeros((batch, d), jnp.float32)
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, d), cfg.param_dtype()),
+        "cell": (z(), z(), z(), jnp.full((batch, d), NEG, jnp.float32)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+def init(key: jax.Array, cfg: ModelConfig) -> Dict[str, Any]:
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    dt = cfg.param_dtype()
+    blocks = []
+    for i in range(cfg.n_layers):
+        if i in cfg.slstm_at:
+            blocks.append({"slstm": slstm_block_init(keys[i], cfg)})
+        else:
+            blocks.append({"mlstm": mlstm_block_init(keys[i], cfg)})
+    return {
+        "embed": dense_init(keys[-2], (cfg.vocab_padded, cfg.d_model), dt,
+                            scale=1.0),
+        "blocks": blocks,                 # heterogeneous → python list
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "lm_head": dense_init(keys[-1], (cfg.d_model, cfg.vocab_padded), dt),
+    }
+
+
+def forward(params, tokens, cfg: ModelConfig, states=None):
+    """states=None → training; else list of per-block states (decode)."""
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.param_dtype())
+    h = sharding.logical(h, ("batch", None, None))
+    new_states = []
+    for i, bp in enumerate(params["blocks"]):
+        st = None if states is None else states[i]
+        if "slstm" in bp:
+            fn = lambda hh, s_=st, p_=bp: slstm_block_apply(
+                p_["slstm"], hh, cfg, s_)
+        else:
+            fn = lambda hh, s_=st, p_=bp: mlstm_block_apply(
+                p_["mlstm"], hh, cfg, s_)
+        if cfg.remat and states is None:
+            h, ns = jax.checkpoint(fn)(h)
+        else:
+            h, ns = fn(h)
+        new_states.append(ns)
+    h = rms_norm(h, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+    logits = sharding.logical(logits, ("batch", None, "vocab"))
+    return logits, (None if states is None else new_states)
+
+
+def init_states(cfg: ModelConfig, batch: int):
+    out = []
+    for i in range(cfg.n_layers):
+        out.append(slstm_block_state(cfg, batch) if i in cfg.slstm_at
+                   else mlstm_block_state(cfg, batch))
+    return out
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    from .transformer import cross_entropy
+    logits, _ = forward(params, batch["tokens"], cfg)
+    ce = cross_entropy(logits[:, :-1, :], batch["labels"][:, 1:], cfg.vocab)
+    return ce, {"ce": ce, "aux": jnp.zeros(())}
+
+
+def prefill(params, tokens, cfg: ModelConfig, states):
+    logits, new_states = forward(params, tokens, cfg, states)
+    return logits[:, -1], new_states
+
+
+def decode_step(params, token, pos, states, cfg: ModelConfig):
+    logits, new_states = forward(params, token, cfg, states)
+    return logits[:, 0], new_states

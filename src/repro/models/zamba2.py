@@ -1,0 +1,194 @@
+"""Zamba2-style hybrid: a Mamba2 backbone with a SHARED attention block
+applied every `cfg.attn_every` layers (arXiv:2411.15242).
+
+The shared block (one set of attention+MLP weights, reused at every
+application point) is the architecture's parameter-efficiency trick; the
+per-use LoRA adapters of the published model are omitted (DESIGN.md §9) —
+the shared-weights structure is what matters for sharding and roofline.
+
+long_500k policy (DESIGN.md §5): the Mamba2 blocks carry unbounded-range
+state at O(1) memory; the shared attention block decodes with a sliding
+window (`cfg.decode_window`) ring cache, i.e. the paper's bounded-receptive-
+field stream split applied at serving time. decode_32k uses the full cache.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..parallel import sharding
+from . import attention, mamba2, mlp
+from .common import ModelConfig, dense_init, rms_norm, stack_layers
+
+
+def attn_points(cfg: ModelConfig) -> List[int]:
+    """Layer indices AFTER which the shared block is applied."""
+    if cfg.attn_every <= 0:
+        return []
+    return [i for i in range(cfg.n_layers) if (i + 1) % cfg.attn_every == 0]
+
+
+def init(key: jax.Array, cfg: ModelConfig) -> Dict[str, Any]:
+    keys = jax.random.split(key, cfg.n_layers + 4)
+    dt = cfg.param_dtype()
+    layers = [{"norm": jnp.ones((cfg.d_model,), dt),
+               "mamba": mamba2.init(keys[i], cfg)}
+              for i in range(cfg.n_layers)]
+    shared = {
+        "attn_norm": jnp.ones((cfg.d_model,), dt),
+        "attn": attention.init(keys[-4], cfg),
+        "mlp_norm": jnp.ones((cfg.d_model,), dt),
+        "mlp": mlp.init(keys[-3], cfg),
+    }
+    return {
+        "embed": dense_init(keys[-2], (cfg.vocab_padded, cfg.d_model), dt,
+                            scale=1.0),
+        "layers": stack_layers(layers),
+        "shared": shared,
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "lm_head": dense_init(keys[-1], (cfg.d_model, cfg.vocab_padded), dt),
+    }
+
+
+def _mamba_layer(lp, h, cfg, state):
+    x = rms_norm(h, lp["norm"])
+    y, new_state = mamba2.apply(lp["mamba"], x, cfg, state)
+    return h + y, new_state
+
+
+def _shared_block(sp, h, cfg, positions, cache=None, cache_pos=None):
+    a, new_cache = attention.self_attention(
+        sp["attn"], rms_norm(h, sp["attn_norm"]), cfg, positions,
+        cache=cache, cache_pos=cache_pos, q_chunk=cfg.q_chunk)
+    h = h + a
+    h = h + mlp.apply(sp["mlp"], rms_norm(h, sp["mlp_norm"]), cfg)
+    return h, new_cache
+
+
+def forward(params, tokens, cfg: ModelConfig):
+    """Training path: scan groups of mamba layers, shared attn between."""
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.param_dtype())
+    h = sharding.logical(h, ("batch", None, None))
+    positions = jnp.arange(h.shape[1])
+    points = set(attn_points(cfg))
+
+    def mamba_body(hh, lp):
+        out, _ = _mamba_layer(lp, hh, cfg, None)
+        return out, None
+
+    fn = jax.checkpoint(mamba_body) if cfg.remat else mamba_body
+    shared_fn = (jax.checkpoint(
+        lambda hh, sp: _shared_block(sp, hh, cfg, positions)[0])
+        if cfg.remat else
+        (lambda hh, sp: _shared_block(sp, hh, cfg, positions)[0]))
+
+    # contiguous runs of mamba layers between shared-attn applications
+    start = 0
+    for end in sorted(points) + ([cfg.n_layers - 1]
+                                 if (cfg.n_layers - 1) not in points else []):
+        seg = jax.tree.map(lambda a: a[start:end + 1], params["layers"])
+        h, _ = jax.lax.scan(lambda c, lp: fn(c, lp), h, seg)
+        if end in points:
+            h = shared_fn(h, params["shared"])
+        start = end + 1
+    h = rms_norm(h, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+    return sharding.logical(logits, ("batch", None, "vocab"))
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    from .transformer import cross_entropy
+    logits = forward(params, batch["tokens"], cfg)
+    ce = cross_entropy(logits[:, :-1, :], batch["labels"][:, 1:], cfg.vocab)
+    return ce, {"ce": ce, "aux": jnp.zeros(())}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_state(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    """Mamba states (stacked over layers) + per-application attn caches."""
+    n_apps = len(attn_points(cfg))
+    _, kv_eff = sharding.resolve_heads(cfg.n_heads, cfg.n_kv_heads, cfg.tp)
+    win = cfg.decode_window or cfg.window
+    w = min(max_len, win) if win > 0 else max_len
+    per_layer = [mamba2.init_state(cfg, batch) for _ in range(cfg.n_layers)]
+    return {
+        "mamba": stack_layers(per_layer),
+        "attn": {
+            "k": jnp.zeros((n_apps, batch, w, kv_eff, cfg.head_dim),
+                           cfg.param_dtype()),
+            "v": jnp.zeros((n_apps, batch, w, kv_eff, cfg.head_dim),
+                           cfg.param_dtype()),
+        },
+    }
+
+
+def _serve_pass(params, tokens, pos, state, cfg: ModelConfig):
+    """Shared serve path: prefill (S≥1, pos=0) or decode (S=1, pos=t)."""
+    from .transformer import _ring_write
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.param_dtype())
+    s = h.shape[1]
+    decode = s == 1
+    positions = (jnp.full((1,), pos, jnp.int32) if decode
+                 else jnp.arange(s))
+    points = sorted(attn_points(cfg))
+    w = state["attn"]["k"].shape[2]
+    win = cfg.decode_window or cfg.window or w
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+
+    new_mamba = []
+    new_k, new_v = [], []
+    app = 0
+    for i in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[i], params["layers"])
+        st = jax.tree.map(lambda a: a[i], state["mamba"])
+        h, ns = _mamba_layer(lp, h, cfg, st)
+        new_mamba.append(ns)
+        if i in points:
+            ck = state["attn"]["k"][app]
+            cv = state["attn"]["v"][app]
+            sp = params["shared"]
+            x = rms_norm(h, sp["attn_norm"])
+            q, k, v = attention.qkv(sp["attn"], x, cfg, positions)
+            ck = _ring_write(ck, k, pos)
+            cv = _ring_write(cv, v, pos)
+            if decode:
+                kk, vv = ck, cv
+                rep = q.shape[2] // kk.shape[2]
+                if rep > 1:
+                    kk = jnp.repeat(kk, rep, axis=2)
+                    vv = jnp.repeat(vv, rep, axis=2)
+                slot = jnp.arange(w)[None, :]
+                age = jnp.mod(pos - slot, w)
+                valid = (age <= pos) & (age < win)
+                o = attention._attend_dense(q, kk, vv, valid[None, None],
+                                            scale)
+            else:
+                o = attention.attend_causal(q, k, v, 0, win, cfg.q_chunk,
+                                            fused=cfg.fused_attention)
+            h = h + attention.out_proj(sp["attn"], o)
+            h = h + mlp.apply(sp["mlp"], rms_norm(h, sp["mlp_norm"]), cfg)
+            new_k.append(ck)
+            new_v.append(cv)
+            app += 1
+    h = rms_norm(h[:, -1:, :], params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+    logits = sharding.logical(logits, ("batch", None, "vocab"))
+    new_state = {
+        "mamba": stack_layers(new_mamba),
+        "attn": {"k": jnp.stack(new_k), "v": jnp.stack(new_v)},
+    }
+    return logits[:, 0], new_state
+
+
+def prefill(params, tokens, cfg: ModelConfig, state):
+    return _serve_pass(params, tokens, 0, state, cfg)
+
+
+def decode_step(params, token, pos, state, cfg: ModelConfig):
+    return _serve_pass(params, token, pos, state, cfg)

@@ -1,0 +1,4 @@
+from .adam import AdamState, AdamW, global_norm
+from . import schedule
+
+__all__ = ["AdamState", "AdamW", "global_norm", "schedule"]

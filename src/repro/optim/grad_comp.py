@@ -1,0 +1,101 @@
+"""Error-feedback gradient compression for slow interconnects.
+
+At multi-pod scale the cross-pod (DCN) gradient all-reduce is the slowest
+collective. Standard mitigation: 8-bit compression with ERROR FEEDBACK
+(Seide et al. / EF-SGD) — quantization error is carried to the next step,
+so the compressed-SGD fixed point matches full-precision SGD:
+
+    c_t   = Q(g_t + e_t)           # int8 + per-tensor scale
+    e_t+1 = (g_t + e_t) − D(c_t)   # residual stays local
+    step uses D(AllReduce(c_t))
+
+`compressed_psum` composes with `shard_map` over the pod axis so only the
+int8 payload crosses pods (4× fewer DCN bytes than f32, 2× fewer than
+bf16); intra-pod reduction stays full precision.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    bits: int = 8
+    stochastic: bool = False     # stochastic rounding of the quantizer
+
+
+def _qmax(bits: int) -> int:
+    return (1 << (bits - 1)) - 1
+
+
+def compress(g: jnp.ndarray, cfg: CompressionConfig = CompressionConfig(),
+             key=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """g → (int8 payload, f32 scale)."""
+    qm = _qmax(cfg.bits)
+    scale = jnp.max(jnp.abs(g)).astype(jnp.float32) / qm
+    scale = jnp.maximum(scale, 1e-12)
+    x = g.astype(jnp.float32) / scale
+    if cfg.stochastic and key is not None:
+        x = jnp.floor(x + jax.random.uniform(key, x.shape))
+    else:
+        x = jnp.round(x)
+    return jnp.clip(x, -qm, qm).astype(jnp.int8), scale
+
+
+def decompress(payload: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return payload.astype(jnp.float32) * scale
+
+
+def ef_compress_tree(grads: Any, error: Any,
+                     cfg: CompressionConfig = CompressionConfig()):
+    """Error-feedback compression over a gradient pytree.
+
+    Returns (payloads, scales, new_error): decompress(payloads)·scales is
+    what the collective carries; new_error stays on-worker.
+    """
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        payload, scale = compress(corrected, cfg)
+        back = decompress(payload, scale)
+        return payload, scale, corrected - back
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_flatten(error)[0]
+    ps, ss, es = [], [], []
+    for g, e in zip(flat_g, flat_e):
+        p, s, ne = one(g, e)
+        ps.append(p)
+        ss.append(s)
+        es.append(ne)
+    unf = lambda xs: jax.tree_util.tree_unflatten(treedef, xs)
+    return unf(ps), unf(ss), unf(es)
+
+
+def init_error(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_psum(grads: Any, error: Any, axis_name: str,
+                    cfg: CompressionConfig = CompressionConfig()):
+    """All-reduce a gradient tree with int8 payloads over `axis_name`.
+
+    For use INSIDE shard_map over the pod axis: the int8 payloads are
+    all-gathered (sum of int8 overflows), decompressed, and averaged
+    locally. Returns (mean_grads, new_error).
+    """
+    n = jax.lax.psum(1, axis_name)
+    payloads, scales, new_error = ef_compress_tree(grads, error, cfg)
+
+    def reduce_one(p, s):
+        # gather the payloads+scales of all pods, decompress, average
+        ps = jax.lax.all_gather(p, axis_name)          # (n, …) int8
+        ss = jax.lax.all_gather(s, axis_name)          # (n,)  f32
+        return jnp.tensordot(ss, ps.astype(jnp.float32),
+                             axes=((0,), (0,))) / n
+
+    mean = jax.tree.map(reduce_one, payloads, scales)
+    return mean, new_error

@@ -1,0 +1,2 @@
+from . import sharding
+from . import halo

@@ -1,0 +1,113 @@
+"""Halo-exchange sequence parallelism — the paper's stream partitioning
+(SSM/MSM/OGM/ORM, §5.3) as a TPU-native `shard_map`.
+
+FPGA → TPU mapping (DESIGN.md §2):
+
+    N_i CNN instances            →  devices along one mesh axis
+    SSM/MSM binary split tree    →  the mesh axis itself (data is *already*
+                                    resident per device — no tree needed)
+    OGM overlap generation       →  `ppermute` halo exchange: each device
+                                    sends its left/right boundary samples to
+                                    its neighbours (2·o_act symbols total per
+                                    device instead of re-streaming whole
+                                    overlapped windows — strictly less
+                                    traffic than the FPGA scheme)
+    ORM overlap removal          →  each device drops the halo after compute
+
+The halo width is the receptive-field formula of paper §6.1 (via
+core.stream_partition.actual_overlap), generalized by `halo_samples` for any
+finite-receptive-field layer (CNN equalizer, Mamba2 conv, SWA attention).
+
+`halo_apply` is the public entry: it wraps ANY per-chunk function
+(waveform → symbols) so the sharded result equals the unsharded oracle
+exactly — asserted by tests/test_halo.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..core.equalizer import CNNEqConfig
+from ..core.stream_partition import actual_overlap
+
+
+def halo_exchange(x: jnp.ndarray, halo: int, axis_name: str) -> jnp.ndarray:
+    """Exchange `halo` boundary elements with both neighbours.
+
+    x: per-device chunk (..., W). Returns (..., W + 2·halo) with the
+    neighbours' boundary samples attached (zeros at the stream edges,
+    matching the FPGA's cold pipeline start).
+    """
+    n = jax.lax.psum(1, axis_name)
+    if halo == 0 or n == 1:
+        pad = [(0, 0)] * (x.ndim - 1) + [(halo, halo)]
+        return jnp.pad(x, pad)
+    # send my RIGHT edge to my right neighbour (it becomes their LEFT halo)
+    right_edge = x[..., -halo:]
+    left_halo = jax.lax.ppermute(
+        right_edge, axis_name, [(i, (i + 1) % n) for i in range(n)])
+    # send my LEFT edge to my left neighbour (their RIGHT halo)
+    left_edge = x[..., :halo]
+    right_halo = jax.lax.ppermute(
+        left_edge, axis_name, [(i, (i - 1) % n) for i in range(n)])
+    idx = jax.lax.axis_index(axis_name)
+    # stream edges: first device has no left context, last has no right
+    left_halo = jnp.where(idx == 0, jnp.zeros_like(left_halo), left_halo)
+    right_halo = jnp.where(idx == n - 1, jnp.zeros_like(right_halo),
+                           right_halo)
+    return jnp.concatenate([left_halo, x, right_halo], axis=-1)
+
+
+def halo_samples(cfg: CNNEqConfig, n_inst: int) -> int:
+    """o_act in SAMPLES (the paper's o_act is in symbols; waveform carries
+    N_os samples per symbol)."""
+    return actual_overlap(cfg, n_inst) * cfg.n_os
+
+
+def halo_apply(apply_fn: Callable[[jnp.ndarray], jnp.ndarray],
+               x: jnp.ndarray, cfg: CNNEqConfig, mesh: Mesh,
+               axis: str = "data") -> jnp.ndarray:
+    """Equalize a waveform stream sharded over `axis` of `mesh`.
+
+    apply_fn: (batch=1, W_chunk) waveform → (1, W_chunk // N_os) symbols —
+    must have a receptive field ≤ the §6.1 overlap (true for the CNN
+    equalizer by construction).
+    x: (S·N_os,) the full waveform (sharded or shardable over `axis`).
+    Returns (S,) symbols, identical to apply_fn on the unsplit stream.
+    """
+    n_inst = mesh.shape[axis]
+    o_samp = halo_samples(cfg, n_inst)
+    o_sym = o_samp // cfg.n_os
+
+    def per_device(chunk):
+        # chunk: (W_local,) — one "CNN instance" of the paper
+        ext = halo_exchange(chunk[None, :], o_samp, axis)     # OGM
+        y = apply_fn(ext)                                     # CNN instance
+        return y[0, o_sym:y.shape[1] - o_sym]                 # ORM
+
+    fn = jax.shard_map(per_device, mesh=mesh, in_specs=P(axis),
+                       out_specs=P(axis))
+    return fn(x)
+
+
+def halo_apply_batched(apply_fn: Callable, x: jnp.ndarray,
+                       cfg: CNNEqConfig, mesh: Mesh,
+                       axis: str = "data") -> jnp.ndarray:
+    """(B, S·N_os) variant: batch stays replicated-or-batch-sharded on other
+    axes; the stream dim is halo-sharded over `axis`."""
+    n_inst = mesh.shape[axis]
+    o_samp = halo_samples(cfg, n_inst)
+    o_sym = o_samp // cfg.n_os
+
+    def per_device(chunk):
+        ext = halo_exchange(chunk, o_samp, axis)
+        y = apply_fn(ext)
+        return y[:, o_sym:y.shape[1] - o_sym]
+
+    fn = jax.shard_map(per_device, mesh=mesh, in_specs=P(None, axis),
+                       out_specs=P(None, axis))
+    return fn(x)

@@ -1,0 +1,259 @@
+"""Logical-axis sharding rules for the production mesh.
+
+Mesh axes: ("data", "model") single-pod, ("pod", "data", "model") multi-pod.
+"pod" composes with "data" for batch/FSDP sharding, so the same rules work on
+both meshes (missing axes are dropped).
+
+Parameter sharding is PATH-BASED: every weight name maps to a PartitionSpec
+through `_PARAM_RULES` (Megatron 2-D layout: TP over `model`, FSDP over
+`data`). Activation constraints use `logical()` with named logical axes.
+
+TP divisibility policy (DESIGN.md §5): head counts are padded and KV heads
+replicated at config-resolution time so every sharded dim divides the mesh
+axis — production practice, not a hack; extra heads train normally.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Mesh context
+# ---------------------------------------------------------------------------
+
+_CURRENT: dict = {"mesh": None, "mode": "train"}
+
+
+def set_mesh(mesh: Optional[Mesh], mode: str = "train") -> None:
+    _CURRENT["mesh"] = mesh
+    _CURRENT["mode"] = mode
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _CURRENT["mesh"]
+
+
+def _axes(mesh: Mesh) -> tuple:
+    return tuple(mesh.axis_names)
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    """Mesh axes that carry the batch: ("pod","data") when present."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def fsdp_axis(mesh: Mesh):
+    """FSDP shards parameters over the data axis (not pod: keep parameter
+    all-gathers intra-pod; the pod axis only reduces gradients)."""
+    return "data" if "data" in mesh.axis_names else None
+
+
+# ---------------------------------------------------------------------------
+# Logical activation axes
+# ---------------------------------------------------------------------------
+
+def _logical_to_spec(axes: Sequence[Optional[str]], mesh: Mesh,
+                     mode: str) -> P:
+    out = []
+    for ax in axes:
+        if ax == "batch":
+            out.append(batch_axes(mesh) or None)
+        elif ax == "seq_shard":          # sequence parallelism (long-context)
+            out.append(batch_axes(mesh) or None)
+        elif ax in ("heads", "kv_heads", "mlp", "vocab", "experts",
+                    "ssm_inner", "model"):
+            out.append("model" if "model" in mesh.axis_names else None)
+        elif ax == "fsdp":
+            # train / serve_fsdp: params 2-D sharded (FSDP over data).
+            # serve: params shard over `model` only — weight all-gathers per
+            # decode step would dominate the token latency. "serve_fsdp" is
+            # the exception for models that do NOT fit at 1/16 sharding
+            # (mixtral-8x22b: 280 GB bf16 → needs 2-D sharding; the per-layer
+            # gather cost shows up honestly in §Roofline).
+            out.append(None if mode == "serve" else fsdp_axis(mesh))
+        else:                            # None / "embed" / "seq" / "head_dim"
+            out.append(None)
+    return P(*out)
+
+
+def logical(x: jnp.ndarray, axes: Sequence[Optional[str]]) -> jnp.ndarray:
+    """Apply a logical-axis sharding constraint (no-op without a mesh).
+
+    Dims that do not divide their mesh axes are replicated instead (e.g. an
+    8-expert dim over a 16-way model axis, or a batch of 1)."""
+    mesh = _CURRENT["mesh"]
+    if mesh is None:
+        return x
+    spec = _logical_to_spec(axes, mesh, _CURRENT["mode"])
+    fixed = []
+    for dim, entry in zip(x.shape, spec):
+        axes_of = (entry,) if isinstance(entry, str) else (entry or ())
+        size = 1
+        for a in axes_of:
+            size *= mesh.shape[a]
+        fixed.append(entry if size and dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed)))
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding (path-based)
+# ---------------------------------------------------------------------------
+# rule: regex on the param path → logical axes of the (unstacked) weight.
+# Stacked (scan-over-layers) weights get a leading None automatically — the
+# walker inserts it when the array rank exceeds the rule length.
+
+_PARAM_RULES = [
+    # embeddings / heads
+    (r"embed",            ("vocab", "fsdp")),
+    (r"lm_head",          ("fsdp", "vocab")),
+    (r"pos_embed",        (None, "fsdp")),
+    # attention (column-parallel qkv, row-parallel o)
+    (r"\bwq\b|\bwk\b|\bwv\b", ("fsdp", "heads", None)),
+    (r"\bwo\b",           ("heads", None, "fsdp")),
+    (r"q_norm|k_norm",    (None,)),
+    # dense MLP (column-parallel in, row-parallel out)
+    (r"w_gate|w_up|w_in", ("fsdp", "mlp")),
+    (r"w_down|w_out",     ("mlp", "fsdp")),
+    # MoE: experts-parallel over `model`
+    (r"router",           ("fsdp", None)),
+    (r"moe_gate|moe_up",  ("experts", "fsdp", None)),
+    (r"moe_down",         ("experts", None, "fsdp")),
+    # Mamba2 / xLSTM inner projections
+    (r"in_proj|ssm_in",   ("fsdp", "ssm_inner")),
+    (r"out_proj|ssm_out", ("ssm_inner", "fsdp")),
+    (r"conv_w",           (None, "ssm_inner")),
+    (r"conv_b|dt_bias|A_log|\bD\b", ("ssm_inner",)),
+    (r"mlstm_|slstm_",    ("fsdp", "ssm_inner")),
+    # norms, biases, scalars
+    (r"norm|scale|bias",  (None,)),
+]
+
+
+def experts_shardable(n_experts: int, mesh: Optional[Mesh] = None) -> bool:
+    """True when the expert count divides the model axis (moonshot 64e →
+    EP16); otherwise experts replicate over `model` and d_ff is TP-sharded
+    instead (mixtral 8e)."""
+    mesh = mesh or _CURRENT["mesh"]
+    if mesh is None or "model" not in mesh.axis_names:
+        return False
+    return n_experts % mesh.shape["model"] == 0
+
+
+def _spec_for_path(path: str, shape: tuple, mesh: Mesh, mode: str) -> P:
+    ndim = len(shape)
+    rules = list(_PARAM_RULES)
+    # MoE fallback: experts that don't divide the model axis shard d_ff.
+    if re.search(r"moe_gate|moe_up|moe_down", path) and ndim >= 3:
+        if not experts_shardable(shape[-3], mesh):
+            rules = [(r"moe_gate|moe_up", (None, "fsdp", "mlp")),
+                     (r"moe_down", (None, "mlp", "fsdp"))] + rules
+    for pat, axes in rules:
+        if re.search(pat, path):
+            axes = tuple(axes)
+            if len(axes) < ndim:           # stacked layers / extra leading dims
+                axes = (None,) * (ndim - len(axes)) + axes
+            elif len(axes) > ndim:
+                axes = axes[-ndim:] if ndim > 0 else ()
+            spec = _logical_to_spec(axes, mesh, mode)
+            # divisibility safety: a dim that does not divide its mesh axis
+            # is replicated instead (e.g. unpadded odd vocab)
+            fixed = []
+            for dim, entry in zip(shape, spec):
+                axes_of = (entry,) if isinstance(entry, str) else (entry or ())
+                size = 1
+                for a in axes_of:
+                    size *= mesh.shape[a]
+                fixed.append(entry if size and dim % size == 0 else None)
+            return P(*fixed)
+    return P()                              # replicate by default
+
+
+def _path_str(path) -> str:
+    parts = []
+    for pk in path:
+        if hasattr(pk, "key"):
+            parts.append(str(pk.key))
+        elif hasattr(pk, "idx"):
+            parts.append(str(pk.idx))
+        elif hasattr(pk, "name"):
+            parts.append(str(pk.name))
+    return "/".join(parts)
+
+
+def param_specs(params: Any, mesh: Mesh, mode: str = "train") -> Any:
+    """PartitionSpec tree for a parameter (or abstract-shape) tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for_path(_path_str(path), tuple(leaf.shape),
+                                          mesh, mode),
+        params)
+
+
+def param_shardings(params: Any, mesh: Mesh, mode: str = "train") -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params, mesh, mode))
+
+
+# ---------------------------------------------------------------------------
+# TP divisibility resolution (head padding / KV replication)
+# ---------------------------------------------------------------------------
+
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def resolve_heads(n_heads: int, n_kv: int, tp: int):
+    """(padded_q_heads, effective_kv_heads) for TP degree `tp`.
+
+    Two schemes are compared and the cheaper one (fewest Q heads, then
+    fewest KV replicas) is chosen:
+
+    * **Group padding (A)**: pad each GQA group (the q heads sharing one kv
+      head) to a common size q' so that hq = n_kv·q' is a multiple of tp;
+      KV heads are replicated by the smallest factor r | q' such that
+      n_kv·r divides by tp.  Q slot i attends kv slot i // q', expanded kv
+      slot j maps to original kv head j // r — whole groups stay intact, so
+      the GQA function is exactly preserved (mixtral 48q/8kv → hq 48,
+      kv_eff 16; llava 56q/8kv → hq 64, kv_eff 16).
+    * **Full expansion (B)**: hq = round_up(n_heads, tp), one kv replica per
+      q head (smollm 9q/3kv → hq 16, kv_eff 16; whisper 20q → 32/32).
+
+    Extra (padded) Q heads train normally; KV replica memory shows up
+    honestly in the roofline tables.
+    """
+    if tp <= 1:
+        return n_heads, n_kv
+    # scheme A: per-group padding
+    q_per = -(-n_heads // n_kv)
+    qa = q_per
+    while (n_kv * qa) % tp:
+        qa += 1
+    hq_a = n_kv * qa
+    r_a = next(r for r in range(1, qa + 1)
+               if qa % r == 0 and (n_kv * r) % tp == 0)
+    kv_a = n_kv * r_a
+    # scheme B: full expansion
+    hq_b = _round_up(n_heads, tp)
+    kv_b = hq_b
+    if (hq_a, kv_a) <= (hq_b, kv_b):
+        return hq_a, kv_a
+    return hq_b, kv_b
+
+
+def kv_head_map(n_heads: int, n_kv: int, hq: int, kv_eff: int):
+    """Original kv-head index serving each *expanded* kv slot.
+
+    Scheme A (hq % n_kv == 0, kv_eff % n_kv == 0): slot j → j // r.
+    Scheme B (kv_eff == hq): slot j (== q slot) → original GQA assignment.
+    """
+    import numpy as np
+    if hq % n_kv == 0 and kv_eff % n_kv == 0 and kv_eff < hq:
+        r = kv_eff // n_kv
+        return np.asarray([j // r for j in range(kv_eff)], dtype=np.int32)
+    base = [(i * n_kv) // n_heads for i in range(n_heads)]
+    base += [base[-1]] * (kv_eff - n_heads)      # padded heads reuse the last
+    return np.asarray(base, dtype=np.int32)

@@ -1,0 +1,4 @@
+from .fault import (FailureInjector, TrainLoopConfig, WorkerFailure,
+                    run_with_restarts)
+from .straggler import StragglerConfig, StragglerMonitor
+from .elastic import ElasticRestore, best_mesh

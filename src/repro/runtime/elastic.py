@@ -1,0 +1,58 @@
+"""Elastic scaling: resume a job on a DIFFERENT device count / mesh shape.
+
+Checkpoints are mesh-agnostic (logical arrays + path-based sharding rules —
+checkpoint/manager.py), so elasticity is a restore:
+
+    1. detect the available devices (after losing/gaining hosts),
+    2. build the largest valid mesh (`best_mesh`),
+    3. restore the checkpoint with the new mesh's shardings,
+    4. re-derive the data-pipeline sharding and continue.
+
+The batch contract is preserved: the GLOBAL batch and the synthetic data
+stream are functions of the step only, so training curves are bit-stable
+across reshards up to reduction order.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from ..checkpoint.manager import CheckpointManager
+from ..parallel import sharding as shardlib
+
+
+def best_mesh(n_devices: Optional[int] = None, model_parallel: int = 0,
+              devices=None) -> Mesh:
+    """Largest (data, model) mesh for the surviving device set.
+
+    Model parallelism is pinned by the checkpointed config (weights must
+    still divide); the data axis absorbs the elasticity."""
+    devs = devices if devices is not None else jax.devices()
+    n = n_devices or len(devs)
+    mp = model_parallel or 1
+    while mp > 1 and n % mp:
+        mp //= 2
+    dp = n // mp
+    return Mesh(
+        __import__("numpy").asarray(devs[:dp * mp]).reshape(dp, mp),
+        ("data", "model"))
+
+
+@dataclasses.dataclass
+class ElasticRestore:
+    ckpt: CheckpointManager
+    mode: str = "train"
+
+    def restore(self, template: Any, mesh: Mesh,
+                step: Optional[int] = None) -> Tuple[Any, int]:
+        """(state_tree, step) resharded onto `mesh`."""
+        specs = shardlib.param_specs(template, mesh, self.mode)
+        step = step if step is not None else self.ckpt.latest_step()
+        if step is None:
+            raise FileNotFoundError("no checkpoint to restore elastically")
+        state = self.ckpt.restore(template, step=step, mesh=mesh,
+                                  specs=specs)
+        return state, step

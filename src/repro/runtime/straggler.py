@@ -1,0 +1,103 @@
+"""Straggler detection & mitigation.
+
+At 1000+ nodes the slowest worker sets the step time (synchronous SGD), so
+the controller needs (a) detection — a robust running estimate of the step
+time distribution — and (b) mitigation hooks. This module implements the
+detection machinery and three mitigations, exercised in tests with injected
+delays:
+
+  * `deadline-skip`: if a step exceeds μ + k·σ (or an absolute deadline),
+    flag it; after `patience` consecutive flags, fire the mitigation
+    callback (production: preempt + reschedule the slow host; here: the
+    callback is pluggable — the fault loop uses a controlled restart);
+  * `microbatch rebalance`: shrink the accum factor for flagged workers
+    (returned as a recommendation — the data pipeline consumes it);
+  * bookkeeping for EXPERIMENTS.md (flag counts, step-time quantiles).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional
+
+
+@dataclasses.dataclass
+class StragglerConfig:
+    ema_alpha: float = 0.1
+    sigma_factor: float = 3.0        # flag threshold: μ + k·σ
+    abs_deadline_s: Optional[float] = None
+    patience: int = 3                # consecutive flags before mitigation
+    warmup_steps: int = 5            # ignore compile/first-touch steps
+
+
+class StragglerMonitor:
+    def __init__(self, cfg: StragglerConfig = StragglerConfig(),
+                 on_straggler: Optional[Callable[[int, float], None]] = None):
+        self.cfg = cfg
+        self.on_straggler = on_straggler
+        self.mean = 0.0
+        self.var = 0.0
+        self.n = 0
+        self.consecutive = 0
+        self.flags: List[int] = []
+        self.times: List[float] = []
+        self._t0: Optional[float] = None
+
+    # -- timing interface ---------------------------------------------------
+
+    def start(self) -> None:
+        self._t0 = time.perf_counter()
+
+    def stop(self, step: int) -> bool:
+        assert self._t0 is not None, "stop() without start()"
+        dt = time.perf_counter() - self._t0
+        self._t0 = None
+        return self.observe(step, dt)
+
+    def observe(self, step: int, dt: float) -> bool:
+        """Record a step time; returns True if the step is flagged."""
+        self.times.append(dt)
+        self.n += 1
+        if self.n <= self.cfg.warmup_steps:
+            # prime the estimate but never flag during warmup
+            a = 0.5
+            self.mean = (1 - a) * self.mean + a * dt if self.n > 1 else dt
+            return False
+        flagged = False
+        sd = self.var ** 0.5
+        thresh = self.mean + self.cfg.sigma_factor * max(sd, 1e-9)
+        if self.cfg.abs_deadline_s is not None:
+            thresh = min(thresh, self.cfg.abs_deadline_s)
+        if dt > thresh:
+            flagged = True
+            self.flags.append(step)
+            self.consecutive += 1
+            if self.consecutive >= self.cfg.patience \
+                    and self.on_straggler is not None:
+                self.on_straggler(step, dt)
+                self.consecutive = 0
+        else:
+            self.consecutive = 0
+            # update stats from non-straggler steps only (robustness)
+            a = self.cfg.ema_alpha
+            delta = dt - self.mean
+            self.mean += a * delta
+            self.var = (1 - a) * (self.var + a * delta * delta)
+        return flagged
+
+    # -- mitigation recommendations ------------------------------------------
+
+    def recommend_accum(self, base_accum: int) -> int:
+        """Shrink per-worker accumulation when persistently slow (the
+        microbatch-rebalance mitigation): slow worker does less local work,
+        the optimizer sees the same global batch via gradient reweighting."""
+        if len(self.flags) >= self.cfg.patience:
+            return max(1, base_accum // 2)
+        return base_accum
+
+    def summary(self) -> dict:
+        ts = sorted(self.times)
+        q = lambda f: ts[int(f * (len(ts) - 1))] if ts else 0.0
+        return {"steps": self.n, "flagged": len(self.flags),
+                "p50_s": q(0.5), "p95_s": q(0.95), "p99_s": q(0.99),
+                "mean_s": self.mean}

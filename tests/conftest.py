@@ -1,0 +1,26 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
+see 1 device; multi-device tests spawn subprocesses with their own flags."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+
+@pytest.fixture(scope="session")
+def repo_src():
+    return os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+
+
+def run_subprocess_devices(code: str, n_devices: int, repo_src: str,
+                           timeout: int = 600) -> str:
+    """Run `code` in a fresh python with n_devices host CPU devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = repo_src
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         env=env, capture_output=True, text=True,
+                         timeout=timeout)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout

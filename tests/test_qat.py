@@ -1,0 +1,103 @@
+"""Learned-bit-width QAT (paper §4): fixed-point quantizer properties
+(hypothesis), differentiability of the width interpolation, loss term."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import qat
+
+F32 = np.float32
+
+
+# ---------------------------------------------------------------------------
+# quantize_fixed — property-based
+# ---------------------------------------------------------------------------
+
+@given(
+    x=st.lists(st.floats(-100, 100, width=32), min_size=1, max_size=64),
+    ib=st.integers(0, 8),
+    fb=st.integers(0, 12),
+)
+@settings(max_examples=60, deadline=None)
+def test_quantize_fixed_properties(x, ib, fb):
+    xs = jnp.asarray(x, jnp.float32)
+    q = qat.quantize_fixed(xs, jnp.asarray(float(ib)), jnp.asarray(float(fb)))
+    qn = np.asarray(q, F32)
+    scale = 2.0 ** fb
+    hi = 2.0 ** ib - 1.0 / scale
+    lo = -(2.0 ** ib)
+    # 1. range: every output representable in Q(ib).(fb)
+    assert np.all(qn <= hi + 1e-6) and np.all(qn >= lo - 1e-6)
+    # 2. grid: outputs are multiples of 2^-fb
+    np.testing.assert_allclose(qn * scale, np.round(qn * scale), atol=1e-3)
+    # 3. idempotence: Q(Q(x)) == Q(x)
+    q2 = qat.quantize_fixed(q, jnp.asarray(float(ib)), jnp.asarray(float(fb)))
+    np.testing.assert_allclose(np.asarray(q2, F32), qn, atol=0)
+    # 4. bounded error for in-range values
+    in_range = (np.asarray(xs) <= hi) & (np.asarray(xs) >= lo)
+    err = np.abs(qn - np.asarray(xs, F32))
+    assert np.all(err[in_range] <= 0.5 / scale + 1e-6)
+
+
+@given(st.integers(1, 6), st.integers(0, 10))
+@settings(max_examples=30, deadline=None)
+def test_quantize_monotone(ib, fb):
+    xs = jnp.linspace(-5, 5, 101)
+    q = np.asarray(qat.quantize_fixed(xs, jnp.asarray(float(ib)),
+                                      jnp.asarray(float(fb))), F32)
+    assert np.all(np.diff(q) >= -1e-7)         # non-decreasing
+
+
+def test_interp_matches_fixed_at_integers():
+    x = jax.random.normal(jax.random.PRNGKey(0), (256,)) * 4
+    for ib, fb in [(2.0, 5.0), (4.0, 8.0)]:
+        a = qat.quantize_interp(x, jnp.asarray(ib), jnp.asarray(fb))
+        b = qat.quantize_fixed(x, jnp.asarray(ib), jnp.asarray(fb))
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-7)
+
+
+def test_widths_are_differentiable():
+    """The core trick: d loss / d bit-width exists and is non-zero."""
+    x = jax.random.normal(jax.random.PRNGKey(1), (512,))
+
+    def loss(widths):
+        ib, fb = widths
+        q = qat.quantize_interp(x, ib, fb)
+        return jnp.mean((q - x) ** 2)
+
+    g = jax.grad(loss)((jnp.asarray(2.3), jnp.asarray(4.7)))
+    assert all(jnp.isfinite(gi) for gi in g)
+    assert abs(float(g[1])) > 0            # more frac bits → lower error
+
+
+def test_ste_passes_gradient_through_rounding():
+    x = jnp.asarray([0.3, -1.2, 2.7])
+    g = jax.grad(lambda v: jnp.sum(qat.quantize_fixed(v, jnp.asarray(4.0),
+                                                      jnp.asarray(2.0))))(x)
+    np.testing.assert_allclose(np.asarray(g), 1.0, atol=1e-6)  # identity STE
+
+
+def test_quant_loss_term_and_phases():
+    cfg = qat.QATConfig(qlf=0.05)
+    qp = qat.init_qparams(["layer0", "layer1"], cfg)
+    bp, ba = qat.average_bits(qp)
+    assert float(bp) == pytest.approx(33.0)   # 16+16+1 sign
+    assert float(qat.quant_loss_term(qp, cfg)) == pytest.approx(
+        0.05 * 33.0)
+    # phase 3: freeze to next-highest integer
+    qp["layer0"]["w_frac"] = jnp.asarray(3.2)
+    frozen = qat.freeze_qparams(qp)
+    assert float(frozen["layer0"]["w_frac"]) == 4.0
+    # projection keeps widths in the feasible box
+    qp["layer1"]["a_int"] = jnp.asarray(-3.0)
+    clipped = qat.clip_qparams(qp, cfg)
+    assert float(clipped["layer1"]["a_int"]) == cfg.min_bits
+
+
+def test_deployment_dtype_mapping():
+    mk = lambda i, f: {"w_int": jnp.asarray(i), "w_frac": jnp.asarray(f)}
+    assert qat.deployment_dtype(mk(2.0, 5.0)) == "int8"
+    assert qat.deployment_dtype(mk(3.0, 9.0)) == "bfloat16"   # ~13b weights
+    assert qat.deployment_dtype(mk(8.0, 12.0)) == "float32"

@@ -1,0 +1,124 @@
+"""TP head resolution, param-rule divisibility, and serve-state specs."""
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.parallel import sharding
+
+
+# ---------------------------------------------------------------------------
+# resolve_heads: every assigned arch at TP=16
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch,want", [
+    ("internlm2-1.8b", (16, 16)),       # kv 8 → replicate 2×
+    ("deepseek-7b", (32, 32)),          # MHA, shards directly
+    ("smollm-135m", (16, 16)),          # 9q/3kv → full expansion
+    ("qwen3-0.6b", (16, 16)),
+    ("llava-next-34b", (64, 16)),       # 56q/8kv → group pad 7→8, kv ×2
+    ("mixtral-8x22b", (48, 16)),        # 48q/8kv → kv ×2
+    ("moonshot-v1-16b-a3b", (16, 16)),  # kv16 direct
+    ("zamba2-1.2b", (32, 32)),
+    ("whisper-large-v3", (32, 32)),     # 20q → pad 32, full expansion
+])
+def test_resolve_heads_assigned(arch, want):
+    cfg = configs.get_config(arch)
+    got = sharding.resolve_heads(cfg.n_heads, cfg.n_kv_heads, cfg.tp)
+    assert got == want, f"{arch}: {got} != {want}"
+    hq, kv_eff = got
+    assert hq % cfg.tp == 0
+    assert kv_eff % cfg.tp == 0 or kv_eff == cfg.n_kv_heads
+    assert hq % kv_eff == 0                      # GQA grouping is whole
+
+
+def test_resolve_heads_tp1_identity():
+    assert sharding.resolve_heads(9, 3, 1) == (9, 3)
+    assert sharding.resolve_heads(56, 8, 1) == (56, 8)
+
+
+def test_kv_head_map_function_preserved():
+    """Each (padded) q head must keep attending to its ORIGINAL kv head."""
+    # llava: group-padding scheme
+    hq, kv_eff = sharding.resolve_heads(56, 8, 16)      # (64, 16)
+    idx = sharding.kv_head_map(56, 8, hq, kv_eff)
+    rep = hq // kv_eff                                  # q i → expanded i//rep
+    q_per = hq // 8                                     # 8 padded per group
+    for q in range(hq):
+        orig_kv = idx[q // rep]
+        assert orig_kv == q // q_per                    # whole groups intact
+    # smollm: full-expansion scheme
+    hq, kv_eff = sharding.resolve_heads(9, 3, 16)       # (16, 16)
+    idx = sharding.kv_head_map(9, 3, hq, kv_eff)
+    for q in range(9):
+        assert idx[q] == (q * 3) // 9                   # original GQA map
+    for q in range(9, 16):
+        assert idx[q] == idx[8]                         # padded → last kv
+
+
+def test_all_arch_dims_divide_tp():
+    """d_model and d_ff of every assigned arch divide the model axis (16)."""
+    for arch in configs.ARCHS:
+        cfg = configs.get_config(arch)
+        assert cfg.d_model % 16 == 0, arch
+        if cfg.d_ff:
+            assert cfg.d_ff % 16 == 0, arch
+        assert cfg.vocab_padded % 16 == 0, arch
+
+
+def test_vocab_padding_only_whisper():
+    for arch in configs.ARCHS:
+        cfg = configs.get_config(arch)
+        if arch == "whisper-large-v3":
+            assert cfg.vocab_padded == 51968 != cfg.vocab
+        else:
+            assert cfg.vocab_padded == cfg.vocab, arch
+
+
+# ---------------------------------------------------------------------------
+# param rules — shape-aware fallbacks (no mesh devices needed: use the
+# spec-construction helper directly through a fake mesh namespace)
+# ---------------------------------------------------------------------------
+
+def test_moe_rule_fallback_logic():
+    # 64 experts divide 16 → EP; 8 experts do not → d_ff TP
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    assert sharding.experts_shardable(64, FakeMesh())
+    assert not sharding.experts_shardable(8, FakeMesh())
+
+
+def test_spec_for_path_divisibility_guard():
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    # odd vocab (51866) must NOT shard over model
+    spec = sharding._spec_for_path("embed", (51866, 1280), FakeMesh(),
+                                   "train")
+    assert spec[0] is None and spec[1] == "data"
+    # padded vocab shards
+    spec = sharding._spec_for_path("embed", (51968, 1280), FakeMesh(),
+                                   "train")
+    assert spec[0] == "model"
+    # mixtral stacked moe_gate: experts replicate, d_ff TP
+    spec = sharding._spec_for_path("mu/layers/mlp/moe_gate",
+                                   (56, 8, 6144, 16384), FakeMesh(), "train")
+    assert tuple(spec) == (None, None, "data", "model")
+    # moonshot stacked moe_gate: EP over model, fsdp over data
+    spec = sharding._spec_for_path("layers/mlp/moe_gate",
+                                   (48, 64, 2048, 1408), FakeMesh(), "train")
+    assert tuple(spec) == (None, "model", "data", None)
+
+
+def test_serve_mode_drops_fsdp():
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    train = sharding._spec_for_path("layers/attn/wq", (24, 2048, 16, 128),
+                                    FakeMesh(), "train")
+    serve = sharding._spec_for_path("layers/attn/wq", (24, 2048, 16, 128),
+                                    FakeMesh(), "serve")
+    fsdp = sharding._spec_for_path("layers/attn/wq", (24, 2048, 16, 128),
+                                   FakeMesh(), "serve_fsdp")
+    assert train[1] == "data" and serve[1] is None and fsdp[1] == "data"
+    assert train[2] == serve[2] == "model"

@@ -1,0 +1,152 @@
+"""Short trainings that validate the paper's core CLAIMS at reduced scale:
+
+  * the CNN equalizer learns the nonlinear IM/DD channel and beats a
+    same-complexity linear FIR (paper Fig. 2's ordering);
+  * on the LINEAR Proakis-B channel the gap closes (paper Fig. 4);
+  * 3-phase QAT shrinks the learned widths below init while keeping BER
+    near the fp32 model (paper Figs. 5/6);
+  * the LM train step reduces loss on structured synthetic data.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.channels import imdd, proakis
+from repro.core import dse, qat as qat_lib
+from repro.core.equalizer import CNNEqConfig
+from repro.core.fir import FIRConfig
+from repro.core.train_eq import EqTrainConfig, train_equalizer
+from repro.data.equalizer_data import channel_fn
+
+KEY = jax.random.PRNGKey(42)
+FAST = EqTrainConfig(steps=260, batch=8, seq_syms=256, lr=3e-3,
+                     eval_syms=1 << 14)
+
+
+@pytest.fixture(scope="module")
+def imdd_fn():
+    return channel_fn("imdd", imdd.IMDDConfig(snr_db=25.0))
+
+
+@pytest.fixture(scope="module")
+def proakis_fn():
+    return channel_fn("proakis", proakis.ProakisConfig(snr_db=14.0))
+
+
+@pytest.mark.slow
+def test_cnn_beats_fir_on_imdd(imdd_fn):
+    """Paper §3.5 headline, at MATCHED complexity: "the BER achieved by a
+    linear equalizer with the same complexity as the CNN is around four
+    times higher."  On our simulated 31.5 km link the linear equalizer
+    FLOORS (CD nulls + square-law make the channel nonlinear); a CNN of
+    the same MAC budget (C=10, 169 MAC/sym ↔ FIR 185 taps) goes under the
+    floor. (The FPGA-ceiling point C=5 only MATCHES the floor here — our
+    simulated channel is harsher than the lab link; EXPERIMENTS.md §Claims.)
+    """
+    cnn_cfg = CNNEqConfig(channels=10)            # 169 MAC/sym
+    fir_cfg = FIRConfig(taps=185)                 # 185 MAC/sym
+    long_cfg = EqTrainConfig(steps=2200, batch=8, seq_syms=256, lr=3e-3,
+                             eval_syms=1 << 14)
+    _, _, cnn = train_equalizer(KEY, "cnn", cnn_cfg, imdd_fn, long_cfg)
+    _, _, fir = train_equalizer(KEY, "fir", fir_cfg, imdd_fn, FAST)
+    assert cnn["ber"] < 0.05, f"CNN did not learn (BER {cnn['ber']})"
+    assert cnn["ber"] < fir["ber"] * 0.6, \
+        f"CNN {cnn['ber']:.4f} vs FIR {fir['ber']:.4f}"
+
+
+@pytest.mark.slow
+def test_fir_competitive_on_linear_channel(proakis_fn):
+    """Fig. 4: on the LINEAR channel the FIR is close to the CNN."""
+    cnn_cfg = CNNEqConfig()
+    fir_cfg = FIRConfig(taps=57)
+    _, _, cnn = train_equalizer(KEY, "cnn", cnn_cfg, proakis_fn, FAST)
+    _, _, fir = train_equalizer(KEY, "fir", fir_cfg, proakis_fn, FAST)
+    assert fir["ber"] < 0.2 and cnn["ber"] < 0.2
+    # gap much smaller than on IM/DD: FIR within 3× of the CNN
+    assert fir["ber"] <= max(3.0 * cnn["ber"], cnn["ber"] + 0.02)
+
+
+@pytest.mark.slow
+def test_qat_three_phase_shrinks_widths(proakis_fn):
+    cfg = CNNEqConfig()
+    qcfg = qat_lib.QATConfig(qlf=1e-3, init_int_bits=8.0, init_frac_bits=8.0)
+    tcfg = EqTrainConfig(steps=300, batch=8, seq_syms=256, lr=3e-3,
+                         eval_syms=1 << 13)
+    params, _, q = train_equalizer(KEY, "cnn", cfg, proakis_fn, tcfg,
+                                   qat_cfg=qcfg, record_every=50)
+    _, _, fp = train_equalizer(KEY, "cnn", cfg, proakis_fn, tcfg)
+    # widths shrank below init (8+8+1 = 17 bits)
+    assert q["bits_params"] < 16.0
+    assert q["bits_acts"] < 16.0
+    # PER-LAYER widths are frozen to integers in phase 3 (the average over
+    # layers need not be an integer — paper Fig. 5's final snap-up)
+    for layer_q in params["qat"].values():
+        for v in layer_q.values():
+            assert float(v) == int(float(v))
+    # communication performance stays in the same regime as fp32
+    assert q["ber"] < max(3.0 * fp["ber"], fp["ber"] + 0.03)
+    # history recorded the width descent
+    bits = [h["bits_params"] for h in q["history"] if "bits_params" in h]
+    assert bits and bits[-1] <= bits[0]
+
+
+def test_dse_pareto_and_selection():
+    entries = [
+        dse.DSEEntry("cnn", None, mac_per_sym=10, ber=0.05, feasible=True),
+        dse.DSEEntry("cnn", None, mac_per_sym=20, ber=0.01, feasible=True),
+        dse.DSEEntry("cnn", None, mac_per_sym=30, ber=0.02, feasible=True),
+        dse.DSEEntry("fir", None, mac_per_sym=40, ber=0.005, feasible=False),
+    ]
+    front = dse.pareto_front(entries)
+    assert [e.mac_per_sym for e in front] == [10, 20, 40]
+    pick = dse.select_operating_point(entries)
+    assert pick.mac_per_sym == 20      # best BER among feasible
+
+
+def test_dse_mac_ceilings():
+    # paper: DSP_avail/T_req·f_clk·1.2 for the XCVU13P @ 200 MHz, 40 GBd
+    assert dse.mac_sym_max_fpga() == pytest.approx(
+        12288 / 40e9 * 200e6 * 1.2)
+    assert dse.mac_sym_max_fpga() == pytest.approx(73.728)
+    # the paper's operating point (56.25 MAC/sym) is feasible, K=15 C=5
+    # L=3 V_p=8 (≈ 93.75) is not:
+    assert CNNEqConfig().mac_per_symbol() <= dse.mac_sym_max_fpga()
+    assert CNNEqConfig(kernel=15).mac_per_symbol() > dse.mac_sym_max_fpga()
+    # TPU analogue scales with chips
+    assert dse.mac_sym_max_tpu(chips=2) == 2 * dse.mac_sym_max_tpu(chips=1)
+
+
+def test_cnn_grid_is_paper_sized():
+    assert len(list(dse.cnn_grid())) == 135      # 5·3·3·3 models (paper §3.5)
+
+
+@pytest.mark.slow
+def test_lm_training_reduces_loss():
+    """examples/quickstart-scale: a reduced smollm learns synthetic data."""
+    import dataclasses
+    from repro import configs
+    from repro.models import registry
+    from repro.optim import AdamW
+    from repro.data import PipelineConfig, TokenSource
+
+    cfg = configs.get_config("smollm-135m", reduced=True)
+    model = registry.build(cfg)
+    params = model.init(KEY)
+    opt = AdamW(lr=3e-3, grad_clip_norm=1.0)
+    opt_state = opt.init(params)
+    src = TokenSource(PipelineConfig(seq_len=128, global_batch=8), cfg.vocab)
+
+    @jax.jit
+    def step(params, opt_state, toks):
+        batch = {"tokens": toks, "labels": toks}
+        (loss, _), g = jax.value_and_grad(model.loss_fn, has_aux=True)(
+            params, batch)
+        params, opt_state = opt.update(g, opt_state, params)
+        return params, opt_state, loss
+
+    losses = []
+    for i in range(150):
+        toks = jnp.stack([jnp.asarray(src.block(i, r)) for r in range(8)])
+        params, opt_state, loss = step(params, opt_state, toks)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.4, losses[::30]
