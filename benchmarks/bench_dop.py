@@ -14,7 +14,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import equalizer_lp as LP
+from repro.core import autotune
 from repro.core import equalizer as eq
+from repro.core.engine import EqualizerEngine
 from repro.launch import roofline as rl
 
 from .common import Bench
@@ -48,11 +50,35 @@ def tile_utilization(cfg, tile_m: int) -> dict:
             "bound": "compute" if t_comp > t_mem else "memory"}
 
 
+def measured_tile_sweep(cfg, tiles=(16, 32, 64, 128, 256),
+                        n_syms: int = 1 << 14, iters: int = 3) -> list[dict]:
+    """MEASURED engine throughput per tile_m — the DOP knob on real silicon
+    (interpret mode on CPU; the same sweep the autotuner caches)."""
+    params = eq.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, n_syms * cfg.n_os))
+    rows = []
+    for tile_m in tiles:
+        engine = EqualizerEngine.from_params(params, eq.init_bn_state(cfg),
+                                             cfg, backend="fused_fp32",
+                                             tile_m=tile_m)
+        dt = autotune.time_callable(engine, x, iters=iters)
+        rows.append({"tile_m": tile_m, "syms_per_s": n_syms / dt})
+    return rows
+
+
 def run() -> dict:
     bench = Bench("dop_flexibility", "Fig. 8 / §5.2")
     cfg = LP.CNN
     rows = [tile_utilization(cfg, t) for t in (1, 8, 32, 128, 512)]
     bench.record("tpu_tile_sweep", rows)
+    measured = measured_tile_sweep(cfg)
+    bench.record("measured_engine_tile_sweep", measured)
+    best = autotune.best_tile_m(
+        cfg, "fused_fp32",
+        lambda t: EqualizerEngine.from_params(
+            eq.init(jax.random.PRNGKey(0), cfg), eq.init_bn_state(cfg), cfg,
+            backend="fused_fp32", tile_m=t))
+    bench.record("autotuned_tile_m", best)
     # FPGA reference trade-off (paper Fig. 8b): DOP ↑ ⇒ throughput ↑, power ↑
     fpga = [{"dop": d,
              "throughput_mbps": 4.0 + (110.0 - 4.0) * (d - 1) / (225 - 1),
@@ -65,6 +91,9 @@ def run() -> dict:
     print("[bench_dop] tile sweep:",
           [(r["tile_m"], round(r["throughput_gsyms"], 1), r["bound"])
            for r in rows])
+    print("[bench_dop] measured engine sweep:",
+          [(r["tile_m"], f"{r['syms_per_s']:.3g}") for r in measured],
+          f"autotuned tile_m={best}")
     return bench.finish()
 
 

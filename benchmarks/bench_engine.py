@@ -1,0 +1,85 @@
+"""Engine throughput trajectory — ref vs fused_fp32 vs fused_int8.
+
+Measures end-to-end symbols/sec of every `EqualizerEngine` backend on both
+DOP operating points (equalizer_ht, equalizer_lp) and writes a
+machine-readable `BENCH_engine.json` at the repo root, so future PRs have a
+perf baseline to regress against (the paper's headline is exactly this
+number: the quantized fused datapath's symbol rate).
+
+The int8 backend runs with Q2.5 weight / Q3.4 activation formats — the
+paper's learned formats land in this range for moderate QLFs (Fig. 6).
+On a CPU host the kernels execute in interpret mode, so ABSOLUTE rates are
+not meaningful across machines; the per-backend RATIOS and their evolution
+over PRs are the tracked signal.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import equalizer_ht as HT
+from repro.configs import equalizer_lp as LP
+from repro.core import equalizer as eq
+from repro.core.autotune import time_callable
+from repro.core.engine import BACKENDS, EqualizerEngine
+
+from .common import Bench
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+OUT_PATH = REPO_ROOT / "BENCH_engine.json"
+
+INT8_FORMATS = {"w_int": 2, "w_frac": 5, "a_int": 3, "a_frac": 4}
+
+
+def _qat_params(cfg, key):
+    params = eq.init(key, cfg)
+    params["qat"] = {
+        f"layer{i}": {k: jnp.asarray(float(v))
+                      for k, v in INT8_FORMATS.items()}
+        for i in range(cfg.layers)}
+    return params
+
+
+def _throughput(engine, x, n_syms: int, iters: int = 5) -> float:
+    return n_syms / time_callable(engine, x, iters=iters)
+
+
+def run(n_syms: int = 1 << 15, tile_m: int = 64) -> dict:
+    bench = Bench("engine_throughput", "§7 deployment path")
+    key = jax.random.PRNGKey(0)
+    configs = {"equalizer_ht": HT.CNN, "equalizer_lp": LP.CNN}
+    report = {"n_syms": n_syms, "tile_m": tile_m,
+              "backend_default": jax.default_backend(), "configs": {}}
+
+    for name, cfg in configs.items():
+        params = _qat_params(cfg, key)
+        bn = eq.init_bn_state(cfg)
+        x = jax.random.normal(key, (1, n_syms * cfg.n_os))
+        rates = {}
+        for backend in BACKENDS:
+            engine = EqualizerEngine.from_params(params, bn, cfg,
+                                                 backend=backend,
+                                                 tile_m=tile_m)
+            rates[backend] = _throughput(engine, x, n_syms)
+        report["configs"][name] = {
+            "syms_per_s": rates,
+            "int8_formats": INT8_FORMATS,
+            "speedup_fused_fp32_vs_ref":
+                rates["fused_fp32"] / rates["ref"],
+            "speedup_fused_int8_vs_ref":
+                rates["fused_int8"] / rates["ref"],
+        }
+        print(f"[bench_engine] {name}: " + ", ".join(
+            f"{b}={r:,.0f} sym/s" for b, r in rates.items()))
+
+    OUT_PATH.write_text(json.dumps(report, indent=2))
+    print(f"[bench_engine] wrote {OUT_PATH}")
+    bench.record("report", report)
+    return bench.finish()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,12 +1,18 @@
 """Figs. 5/6 — the 3-phase quantization-aware training for several QLFs:
-course of the average bit width and of the BER, final learned formats, and
-the TPU deployment-dtype mapping."""
+course of the average bit width and of the BER, final learned formats, the
+TPU deployment-dtype mapping, AND the actual deployment: each trained
+quantizer is handed to `EqualizerEngine.from_params`, which goes int8 when
+the learned formats fit — closing the train → deploy loop the paper's
+FPGA flow has."""
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.channels import imdd
+from repro.core import equalizer as eq
 from repro.core import qat as qat_lib
+from repro.core.engine import EqualizerEngine
 from repro.core.equalizer import CNNEqConfig
 from repro.core.train_eq import EqTrainConfig, train_equalizer
 from repro.data.equalizer_data import channel_fn
@@ -32,19 +38,33 @@ def run(steps: int = 600) -> dict:
     for qlf in QLFS:
         qcfg = qat_lib.QATConfig(qlf=qlf, init_int_bits=8.0,
                                  init_frac_bits=8.0)
-        params, _, info = train_equalizer(key, "cnn", cfg, fn, tcfg,
-                                          qat_cfg=qcfg, record_every=25)
-        dep = {name: qat_lib.deployment_dtype(q)
-               for name, q in params["qat"].items()}
+        params, bn_state, info = train_equalizer(key, "cnn", cfg, fn, tcfg,
+                                                 qat_cfg=qcfg,
+                                                 record_every=25)
+        plan = qat_lib.deployment_plan(params["qat"])
+        # the deployment step itself: auto-backend engine from the trained
+        # quantizer (fused_int8 when every layer's format fits 8 bits)
+        engine = EqualizerEngine.from_params(params, bn_state, cfg,
+                                             backend="auto", tile_m=64)
+        rx_probe, _ = fn(jax.random.PRNGKey(7), 1 << 12)
+        y_dep = engine(rx_probe)
+        y_fq, _ = eq.apply(params, rx_probe, cfg, train=False,
+                           bn_state=bn_state, qat_enabled=True)
+        o = cfg.receptive_field_syms
+        dep_err = float(jnp.max(jnp.abs(y_dep[o:-o] - y_fq[o:-o])))
         curves[f"qlf_{qlf:g}"] = {
             "ber": info["ber"],
             "bits_params": info["bits_params"],
             "bits_acts": info["bits_acts"],
-            "deployment_dtypes": dep,
+            "deployment_dtypes": plan["dtypes"],
+            "deployment_backend": engine.backend,
+            "deployment_max_err_vs_fake_quant": dep_err,
             "history": info["history"],
         }
         print(f"[bench_quant] qlf={qlf:g}: {info['bits_params']:.1f}b w / "
-              f"{info['bits_acts']:.1f}b a, BER {info['ber']:.3e} → {dep}")
+              f"{info['bits_acts']:.1f}b a, BER {info['ber']:.3e} → "
+              f"{plan['dtypes']} (engine: {engine.backend}, "
+              f"deploy err {dep_err:.2e})")
     bench.record("qlf_curves", curves)
     # paper claim: a moderate QLF reaches ≈13b weights / ≈10b activations
     # at ~fp32 BER; aggressive QLFs sacrifice BER (Fig. 6)

@@ -14,6 +14,7 @@ from repro.configs import equalizer_ht as HT
 from repro.core import equalizer as eq
 from repro.core import stream_partition as sp
 from repro.core import timing_model as tm
+from repro.core.engine import EqualizerEngine
 
 from .common import Bench
 
@@ -24,14 +25,18 @@ def run(n_syms_per_inst: int = 1024) -> dict:
     n_inst = HT.N_INSTANCES
     key = jax.random.PRNGKey(0)
     params = eq.init(key, cfg)
-    folded = eq.fold_bn(params, eq.init_bn_state(cfg), cfg)
-    apply_fn = lambda chunks: eq.apply_folded(folded, chunks, cfg)
+    # production path: the fused-kernel engine feeds the OGM/SSM pipeline
+    engine = EqualizerEngine.from_params(params, eq.init_bn_state(cfg), cfg,
+                                         backend="fused_fp32", tile_m="auto")
 
     n_syms = n_syms_per_inst * n_inst
     rx, _ = imdd.simulate(key, imdd.IMDDConfig(), n_syms)
 
-    y_split = sp.partitioned_apply(apply_fn, rx, n_inst, cfg)
-    y_ref = apply_fn(rx[None])[0]
+    y_split = sp.partitioned_apply(engine, rx, n_inst, cfg)
+    y_ref = engine(rx)
+    # record AFTER the first call so tile_m shows the resolved value, not
+    # the "auto" placeholder
+    bench.record("engine", engine.describe())
     o = sp.overlap_symbols(cfg)
     interior_err = float(jnp.max(jnp.abs(y_split[o:-o] - y_ref[o:-o])))
 

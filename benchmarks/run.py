@@ -7,6 +7,7 @@ One benchmark per paper table/figure (see DESIGN.md §6):
     bench_quant     Fig. 5/6 3-phase QAT bit-width/BER curves per QLF
     bench_dop       Fig. 8   flexible-DOP study (TPU tile-utilization axis)
     bench_stream    Fig. 9/§7.2  64-instance stream partitioning
+    bench_engine    §7       engine backend throughput → BENCH_engine.json
     bench_timing    Fig. 12  timing model vs simulated measurement
     bench_platform  Fig. 13-15  CPU measured / TPU roofline-projected
     bench_roofline  Table 1 / §Roofline  aggregate the dry-run artifacts
@@ -22,8 +23,9 @@ import sys
 import time
 import traceback
 
-from . import (bench_dop, bench_dse, bench_platform, bench_proakis,
-               bench_quant, bench_roofline, bench_stream, bench_timing)
+from . import (bench_dop, bench_dse, bench_engine, bench_platform,
+               bench_proakis, bench_quant, bench_roofline, bench_stream,
+               bench_timing)
 from .common import REPORT_DIR
 
 
@@ -37,6 +39,7 @@ def main(argv=None) -> int:
     steps = 700 if not args.full else 10_000
     jobs = [
         ("timing", lambda: bench_timing.run()),
+        ("engine", lambda: bench_engine.run()),
         ("stream", lambda: bench_stream.run()),
         ("dop", lambda: bench_dop.run()),
         ("roofline", lambda: bench_roofline.run()),

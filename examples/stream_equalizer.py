@@ -21,25 +21,30 @@ def main_inner(n_inst: int):
     from repro.core import equalizer as eq
     from repro.core import seqlen_opt, stream_partition as sp
     from repro.core import timing_model as tm
+    from repro.core.engine import EqualizerEngine
     from repro.parallel import halo
 
     key = jax.random.PRNGKey(0)
     cfg = eq.CNNEqConfig()
     params = eq.init(key, cfg)
-    folded = eq.fold_bn(params, eq.init_bn_state(cfg), cfg)
-    apply_fn = lambda chunks: eq.apply_folded(folded, chunks, cfg)
+    # the production inference path: BN-folded, fused Pallas kernel,
+    # autotuned tiling ("auto" backend upgrades to int8 when QAT formats
+    # are present in params)
+    engine = EqualizerEngine.from_params(params, eq.init_bn_state(cfg), cfg,
+                                         backend="auto", tile_m="auto")
 
     n_syms = 1024 * n_inst
     rx, _ = imdd.simulate(key, imdd.IMDDConfig(), n_syms)
 
-    y_single = apply_fn(rx[None])[0]
-    y_ref = sp.partitioned_apply(apply_fn, rx, n_inst, cfg)
+    y_single = engine(rx)
+    y_ref = sp.partitioned_apply(engine, rx, n_inst, cfg)
     mesh = jax.make_mesh((n_inst,), ("data",))
-    y_halo = halo.halo_apply(apply_fn, rx, cfg, mesh)
+    y_halo = halo.halo_apply(engine, rx, cfg, mesh)
     o = sp.overlap_symbols(cfg)
     err_ref = float(jnp.max(jnp.abs(y_ref[o:-o] - y_single[o:-o])))
     err_halo = float(jnp.max(jnp.abs(y_halo[o:-o] - y_single[o:-o])))
-    print(f"{n_inst} instances over {len(jax.devices())} devices:")
+    print(f"{n_inst} instances over {len(jax.devices())} devices "
+          f"(engine: {engine.describe()}):")
     print(f"  split-tree reference vs single instance (interior): "
           f"max err {err_ref:.2e}")
     print(f"  halo-exchange shard_map vs single instance (interior): "

@@ -1,0 +1,173 @@
+"""EqualizerEngine — the single production inference path.
+
+Everything downstream of training funnels through this object: stream
+partitioning (`core.stream_partition.partitioned_apply`), halo-exchange
+sharding (`parallel.halo.halo_apply`), the examples, and the equalizer
+benchmarks all consume an engine instead of hand-rolled `apply_folded`
+lambdas. The engine owns:
+
+  * BN folding (done once, at construction — the FPGA deployment step),
+  * backend selection:
+      - "ref"        pure-jnp stream-semantics oracle (kernels.cnn_eq.ref),
+      - "fused_fp32" the fused Pallas kernel — same math as "ref",
+      - "fused_int8" the quantized fused Pallas kernel: int8 weights at
+        QAT's learned per-layer scales, int8×int8 MXU dots with int32
+        accumulation and fused requantization between layers,
+      - "auto"       fused_int8 when trained QAT formats deploy to int8
+        (qat.deployment_plan), else fused_fp32,
+  * tile_m selection: an explicit int, or "auto" → the cached autotune
+    sweep (core.autotune) keyed on (topology, backend).
+
+An engine is a plain callable `(W,) | (B, W) waveform → symbols`, so it
+drops into every site that previously took an `apply_fn`.
+
+All backends share STREAM semantics (one halo pad, VALID convs — see
+kernels/cnn_eq/ref.py), so swapping backends never changes results beyond
+floating-point fusion noise; the property tests in tests/test_engine.py
+assert ≤2-ULP fp32 agreement with the oracle everywhere and ≤1-LSB int8
+agreement with the QAT fake-quant reference (observed: exact).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from . import autotune as autotune_lib
+from . import qat as qat_lib
+from .equalizer import (CNNEqConfig, fold_bn, folded_weights, init_bn_state,
+                        layer_strides)
+
+BACKENDS = ("ref", "fused_fp32", "fused_int8")
+
+Format = Tuple[int, int, int, int]          # (w_int, w_frac, a_int, a_frac)
+
+
+def _folded_fit_grid(weights, formats) -> bool:
+    """True iff every BN-folded weight is representable on its layer's
+    learned Q(w_int).(w_frac) grid without saturating."""
+    for (w, _), (wi, wf, _, _) in zip(weights, formats):
+        hi = 2.0 ** wi - 2.0 ** -wf
+        lo = -(2.0 ** wi)
+        if float(jnp.max(w)) > hi or float(jnp.min(w)) < lo:
+            return False
+    return True
+
+
+@dataclasses.dataclass
+class EqualizerEngine:
+    """Callable quantized/fused inference engine for the CNN equalizer.
+
+    Build with `EqualizerEngine.from_params` (trained params + BN state,
+    QAT formats picked up automatically) or directly from folded weights.
+    """
+    cfg: CNNEqConfig
+    weights: Tuple[Tuple[jnp.ndarray, jnp.ndarray], ...]  # BN-folded, fp32
+    backend: str = "fused_fp32"
+    tile_m: int | str = "auto"
+    formats: Optional[Tuple[Format, ...]] = None          # int8 backend only
+    interpret: Optional[bool] = None
+
+    def __post_init__(self):
+        if self.backend == "auto":
+            self.backend = ("fused_int8" if self._int8_deployable()
+                            else "fused_fp32")
+        if self.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}; "
+                             f"expected one of {BACKENDS + ('auto',)}")
+        if self.backend == "fused_int8":
+            if not self._int8_deployable():
+                raise ValueError(
+                    "fused_int8 needs per-layer formats that fit int8 "
+                    "(qat.deployment_plan(...)['all_int8']); got "
+                    f"{self.formats}")
+            from ..kernels.cnn_eq.cnn_eq import quantize_weights_int8
+            self._qweights = quantize_weights_int8(self.weights, self.formats)
+        self._strides = layer_strides(self.cfg)
+
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def from_params(cls, params: Dict[str, Any], bn_state: Optional[Dict],
+                    cfg: CNNEqConfig, backend: str = "auto",
+                    tile_m: int | str = "auto",
+                    interpret: Optional[bool] = None) -> "EqualizerEngine":
+        """Deployment step: fold BN, derive int8 scales from learned QAT
+        formats (`qat.deployment_plan`), pick the backend.
+
+        QAT learns Q(w_int) on the UNfolded weights; folding multiplies by
+        g = scale/√(var+ε), which can push weights past the learned grid.
+        Silently saturating them would break the train→deploy accuracy
+        contract, so auto-deployment only goes int8 when the FOLDED weights
+        still fit each layer's grid; otherwise it falls back to fused_fp32.
+        """
+        folded = fold_bn(params, bn_state or init_bn_state(cfg), cfg)
+        weights = folded_weights(folded)
+        formats = None
+        if "qat" in params:
+            plan = qat_lib.deployment_plan(params["qat"])
+            if plan["all_int8"] and _folded_fit_grid(weights,
+                                                    plan["formats"]):
+                formats = plan["formats"]
+        return cls(cfg=cfg, weights=weights, backend=backend,
+                   tile_m=tile_m, formats=formats, interpret=interpret)
+
+    @classmethod
+    def from_folded(cls, folded: Dict[str, Any], cfg: CNNEqConfig,
+                    **kw) -> "EqualizerEngine":
+        return cls(cfg=cfg, weights=folded_weights(folded), **kw)
+
+    # -- backend plumbing --------------------------------------------------
+
+    def _int8_deployable(self) -> bool:
+        return (self.formats is not None
+                and all(wi + wf + 1 <= 8 and ai + af + 1 <= 8
+                        for wi, wf, ai, af in self.formats))
+
+    def resolved_tile_m(self) -> int:
+        """The tile width actually used (runs the autotune sweep if 'auto')."""
+        if isinstance(self.tile_m, int):
+            return self.tile_m
+        if self.backend == "ref":
+            return 64                              # ref has no tiling knob
+        best = autotune_lib.best_tile_m(
+            self.cfg, self.backend,
+            lambda t: self._make_fn(t))
+        self.tile_m = best
+        return best
+
+    def _make_fn(self, tile_m: int) -> Callable[[jnp.ndarray], jnp.ndarray]:
+        if self.backend == "ref":
+            from ..kernels.cnn_eq.ref import cnn_eq as ref_fn
+            return functools.partial(ref_fn, weights=self.weights,
+                                     strides=self._strides)
+        if self.backend == "fused_fp32":
+            from ..kernels.cnn_eq.cnn_eq import cnn_eq_fused
+            return lambda x: cnn_eq_fused(x, self.weights, self._strides,
+                                          tile_m=tile_m,
+                                          interpret=self.interpret)
+        from ..kernels.cnn_eq.cnn_eq import cnn_eq_fused_int8
+        return lambda x: cnn_eq_fused_int8(x, self._qweights, self._strides,
+                                           self.formats, tile_m=tile_m,
+                                           interpret=self.interpret)
+
+    # -- the production path -----------------------------------------------
+
+    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        """(S·N_os,) or (B, S·N_os) waveform → (S,) or (B, S) soft symbols."""
+        squeeze = x.ndim == 1
+        if squeeze:
+            x = x[None]
+        y = self._make_fn(self.resolved_tile_m())(x)
+        return y[0] if squeeze else y
+
+    def describe(self) -> Dict[str, Any]:
+        """Deployment summary (for logs / benchmark records)."""
+        return {
+            "backend": self.backend,
+            "tile_m": self.tile_m if isinstance(self.tile_m, int) else "auto",
+            "layers": self.cfg.layers,
+            "formats": self.formats,
+        }

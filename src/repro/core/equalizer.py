@@ -180,6 +180,18 @@ def fold_bn(params: Dict[str, Any], bn_state: Dict[str, Any],
     return folded
 
 
+def folded_weights(folded: Dict[str, Any]) -> Tuple:
+    """Folded params → ((w, b), …) kernel argument layout (single source of
+    truth for the folded-layout convention; engine and kernel ops import
+    this)."""
+    return tuple((l["w"], l["b"]) for l in folded["conv"])
+
+
+def layer_strides(cfg: CNNEqConfig) -> Tuple[int, ...]:
+    """(V_p, 1, …, N_os) — per-layer strides in kernel-argument form."""
+    return tuple(s for _, _, s in cfg.layer_specs())
+
+
 def apply_folded(folded: Dict[str, Any], x: jnp.ndarray, cfg: CNNEqConfig):
     """Inference with BN pre-folded (ReLU still applied between layers)."""
     squeeze = x.ndim == 1

@@ -144,3 +144,51 @@ def deployment_dtype(q: Dict[str, jnp.ndarray]) -> str:
     if total <= 16:
         return "bfloat16"   # 8-bit exponent covers the int range; 8-bit mantissa
     return "float32"
+
+
+def frozen_format(q: Dict[str, jnp.ndarray]):
+    """Learned widths → concrete integer (w_int, w_frac, a_int, a_frac).
+
+    Rounds UP like phase-3 freezing (`freeze_qparams`), so the deployed grid
+    always covers the trained one. This is the per-layer fixed-point format
+    the int8 fused kernel bakes in as its scales and clip bounds.
+    """
+    return (int(jnp.ceil(q["w_int"])), int(jnp.ceil(q["w_frac"])),
+            int(jnp.ceil(q["a_int"])), int(jnp.ceil(q["a_frac"])))
+
+
+def _layer_order(qparams: Dict[str, Any]):
+    """'layer0' … 'layerN' keys in layer order (robust to dict ordering)."""
+    return sorted(qparams, key=lambda n: int("".join(filter(str.isdigit, n))
+                                             or 0))
+
+
+def layer_formats(qparams: Dict[str, Any]):
+    """Ordered tuple of frozen per-layer formats for the whole stack."""
+    return tuple(frozen_format(qparams[n]) for n in _layer_order(qparams))
+
+
+def _format_dtype(total_bits: int) -> str:
+    if total_bits <= 8:
+        return "int8"
+    if total_bits <= 16:
+        return "bfloat16"
+    return "float32"
+
+
+def deployment_plan(qparams: Dict[str, Any]) -> Dict[str, Any]:
+    """Summarize how a trained quantizer deploys on the TPU datapath.
+
+    Returns {"formats": ((w_int, w_frac, a_int, a_frac), …),
+             "dtypes": {layer: dtype}, "all_int8": bool}. Unlike
+    `deployment_dtype` (weight-only, raw learned widths), the per-layer
+    dtype here uses the FROZEN formats and the wider of the weight and
+    activation requirement — the same criterion as `all_int8` — so the
+    record can never say "int8" for a layer the engine refuses to deploy.
+    """
+    names = _layer_order(qparams)
+    formats = tuple(frozen_format(qparams[n]) for n in names)
+    dtypes = {n: _format_dtype(max(wi + wf, ai + af) + 1)
+              for n, (wi, wf, ai, af) in zip(names, formats)}
+    all_int8 = all(d == "int8" for d in dtypes.values())
+    return {"formats": formats, "dtypes": dtypes, "all_int8": all_int8}

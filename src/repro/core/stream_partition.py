@@ -75,15 +75,19 @@ def merge_with_overlap_removal(chunks_syms: jnp.ndarray, o_act: int
     return kept.reshape(-1)
 
 
-def partitioned_apply(apply_fn, x_samples: jnp.ndarray, n_inst: int,
+def partitioned_apply(engine, x_samples: jnp.ndarray, n_inst: int,
                       cfg: CNNEqConfig) -> jnp.ndarray:
     """Run an equalizer over N_i instances with overlap — reference path.
 
-    apply_fn: waveform chunk (batch, W) → symbols (batch, W//N_os).
-    Equivalent (on the interior) to apply_fn on the unsplit stream; the
-    property test in tests/test_stream_partition.py asserts exact equality.
+    engine: the production path is a `repro.core.engine.EqualizerEngine`
+    (any backend); any callable with the same contract — waveform chunks
+    (batch, W) → symbols (batch, W//N_os) — also works, which the oracle
+    tests use. Equivalent (on the interior) to running the engine on the
+    unsplit stream: every kept symbol is ≥ o_act ≥ o_sym away from a chunk
+    edge, so backend choice (ref / fused_fp32 / fused_int8) cannot change
+    the merged result relative to the unsplit one.
     """
     o_act = actual_overlap(cfg, n_inst)
     chunks = split_with_overlap(x_samples, n_inst, o_act, cfg.n_os)
-    y = apply_fn(chunks)  # vmapped over instances by apply_fn's batch dim
+    y = engine(chunks)    # batched over instances via the engine's batch dim
     return merge_with_overlap_removal(y, o_act)

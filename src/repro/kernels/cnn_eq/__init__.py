@@ -1,6 +1,9 @@
-from .cnn_eq import cnn_eq_fused, receptive_halo
+from .cnn_eq import (cnn_eq_fused, cnn_eq_fused_int8, quantize_weights_int8,
+                     receptive_halo)
 from .ops import equalize, strides_of, weights_of
 from .ref import cnn_eq as cnn_eq_ref
+from .ref import cnn_eq_quant as cnn_eq_quant_ref
 
-__all__ = ["cnn_eq_fused", "cnn_eq_ref", "equalize", "receptive_halo",
-           "strides_of", "weights_of"]
+__all__ = ["cnn_eq_fused", "cnn_eq_fused_int8", "cnn_eq_ref",
+           "cnn_eq_quant_ref", "equalize", "quantize_weights_int8",
+           "receptive_halo", "strides_of", "weights_of"]

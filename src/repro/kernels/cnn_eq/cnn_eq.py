@@ -15,10 +15,33 @@ Grid = (batch, sequence tiles): Mosaic overlaps the tile DMAs with compute,
 which is exactly the paper's "each layer starts as soon as first inputs
 arrive" streaming property, realized at tile granularity.
 
-The input tile is element-indexed with a halo of half a receptive field per
-side (`receptive_halo`), the kernel computes VALID convolutions, and the
-wrapper pre-pads the stream so the result equals the SAME_LOWER-padded
-reference (`ref.cnn_eq`) exactly — including at stream edges.
+Each grid step takes its overlapping input window (half a receptive field of
+halo per side, `receptive_halo`) with an in-kernel `pl.ds` dynamic slice of
+the padded stream; the kernel computes VALID convolutions and the wrapper
+pre-pads the stream so the result equals the SAME_LOWER-padded reference
+(`ref.cnn_eq`) — including at stream edges. The fp32 kernel reuses
+`ref.conv_valid_taps` for its layer math (same dots, same accumulation
+order), matching the oracle to ~2 ULP; the int8 kernel matches its
+fake-quant oracle exactly (integer arithmetic has no rounding freedom).
+
+INT8 datapath (`cnn_eq_fused_int8`) — the deployment path when QAT's learned
+per-layer fixed-point formats fit int8 (qat.deployment_dtype == "int8").
+Weights are pre-quantized host-side to int8 at scale 2^w_frac; activations
+are requantized INSIDE the kernel between layers, so the whole quantized
+stack stays fused in VMEM:
+
+      x (fp32 tile, VMEM)
+        │ requant:  q = clip(round(x · 2^af₁))        → int8
+        │ conv1:    int8 × int8 MXU dots              → int32 accum
+        │ rescale:  acc · 2^-(wf₁+af₁) + b₁ (fp32)    → fp32
+        │ ReLU ──▶ requant 2^af₂ → int8 ──▶ conv2 ──▶ … conv_L
+        ▼
+      y (fp32 symbols, VMEM)
+
+The integer dot is exact (|w|·|a| ≤ 127², ΣC_in·K terms ≪ 2³¹) and the
+rescale multiplies by a power of two, so the kernel reproduces the QAT
+fake-quant reference (`ref.cnn_eq_quant`) to within one accumulation LSB —
+quantization error comes ONLY from the learned formats, never the kernel.
 """
 from __future__ import annotations
 
@@ -29,14 +52,7 @@ import jax
 import jax.numpy as jnp
 import jax.experimental.pallas as pl
 
-
-def receptive_halo(kernels: Sequence[int], strides: Sequence[int]) -> int:
-    """Half receptive field of the conv stack, in input samples."""
-    r, jump = 0, 1
-    for k, s in zip(kernels, strides):
-        r += (k // 2) * jump
-        jump *= s
-    return r
+from .ref import conv_valid_taps, receptive_halo
 
 
 def _layer_spans(tile_m: int, kernels: Sequence[int],
@@ -48,30 +64,22 @@ def _layer_spans(tile_m: int, kernels: Sequence[int],
     return list(reversed(spans))  # spans[0] = input samples per tile
 
 
-def _conv_valid(h: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, stride: int,
-                n_out: int) -> jnp.ndarray:
-    """(C_in, W) ⊛ (C_out, C_in, K) → (C_out, n_out), tap-unrolled MXU dots."""
-    k = w.shape[-1]
-    acc = jnp.zeros((w.shape[0], n_out), jnp.float32)
-    for kk in range(k):
-        xk = jax.lax.slice(h, (0, kk), (h.shape[0], kk + (n_out - 1) * stride + 1),
-                           (1, stride))
-        acc = acc + jax.lax.dot(w[:, :, kk].astype(jnp.float32), xk,
-                                preferred_element_type=jnp.float32)
-    return acc + b.astype(jnp.float32)[:, None]
-
-
-def _cnn_eq_kernel(x_ref, *refs, tile_m: int, kernels, strides, v_parallel):
+def _cnn_eq_kernel(x_ref, *refs, tile_m: int, in_tile: int, kernels, strides,
+                   v_parallel: int):
     n_layers = len(kernels)
     w_refs = refs[:-1][0::2]
     b_refs = refs[:-1][1::2]
     o_ref = refs[-1]
     spans = _layer_spans(tile_m, kernels, strides)
+    total_stride = 1
+    for s in strides:
+        total_stride *= s
 
-    h = x_ref[...].astype(jnp.float32)       # (1, in_tile) → C_in = 1
+    start = pl.program_id(1) * (tile_m * total_stride)
+    h = x_ref[:, pl.ds(start, in_tile)].astype(jnp.float32)  # (1, in_tile)
     for i in range(n_layers):
-        h = _conv_valid(h, w_refs[i][...], b_refs[i][...], strides[i],
-                        spans[i + 1])
+        h = conv_valid_taps(h, w_refs[i][...], b_refs[i][...], strides[i],
+                            spans[i + 1])
         if i < n_layers - 1:
             h = jax.nn.relu(h)
     # (V_p, tile_m) → interleave channels: symbol s = m·V_p + c
@@ -79,17 +87,52 @@ def _cnn_eq_kernel(x_ref, *refs, tile_m: int, kernels, strides, v_parallel):
     o_ref[...] = y.astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("strides", "tile_m", "interpret"))
-def cnn_eq_fused(x: jnp.ndarray,
-                 weights: Tuple[Tuple[jnp.ndarray, jnp.ndarray], ...],
-                 strides: Tuple[int, ...], tile_m: int = 64,
-                 interpret: bool | None = None) -> jnp.ndarray:
-    """Fused equalizer forward. x: (B, W) → (B, W//N_os) symbols.
+def _requant(h: jnp.ndarray, a_int: int, a_frac: int) -> jnp.ndarray:
+    """fp32 → int8 on the Q(a_int).(a_frac) grid (values are x·2^a_frac)."""
+    hi = float(2 ** (a_int + a_frac)) - 1.0
+    lo = -float(2 ** (a_int + a_frac))
+    q = jnp.clip(jnp.round(h * float(2.0 ** a_frac)), lo, hi)
+    return q.astype(jnp.int8)
 
-    weights: ((w_1, b_1), …, (w_L, b_L)) — BN pre-folded (equalizer.fold_bn).
-    strides: (V_p, 1, …, N_os). Output length = W // (V_p·N_os) · V_p.
-    """
+
+def _cnn_eq_kernel_int8(x_ref, *refs, tile_m: int, in_tile: int, kernels,
+                        strides, v_parallel: int, formats):
+    n_layers = len(kernels)
+    w_refs = refs[:-1][0::2]     # int8 weights, pre-scaled by 2^w_frac
+    b_refs = refs[:-1][1::2]     # fp32 biases (full-width accumulators)
+    o_ref = refs[-1]
+    spans = _layer_spans(tile_m, kernels, strides)
+    total_stride = 1
+    for s in strides:
+        total_stride *= s
+
+    start = pl.program_id(1) * (tile_m * total_stride)
+    h = x_ref[:, pl.ds(start, in_tile)].astype(jnp.float32)
+    for i in range(n_layers):
+        wi, wf, ai, af = formats[i]
+        hq = _requant(h, ai, af)                     # fused requantization
+        w = w_refs[i][...]
+        n_out = spans[i + 1]
+        k = w.shape[-1]
+        acc = jnp.zeros((w.shape[0], n_out), jnp.int32)
+        for kk in range(k):
+            xk = jax.lax.slice(
+                hq, (0, kk), (hq.shape[0], kk + (n_out - 1) * strides[i] + 1),
+                (1, strides[i]))
+            acc = acc + jax.lax.dot(w[:, :, kk], xk,
+                                    preferred_element_type=jnp.int32)
+        # exact power-of-two rescale back to real units, then fp32 bias
+        h = acc.astype(jnp.float32) * float(2.0 ** -(wf + af)) \
+            + b_refs[i][...].astype(jnp.float32)[:, None]
+        if i < n_layers - 1:
+            h = jax.nn.relu(h)
+    y = jnp.swapaxes(h, 0, 1).reshape(1, tile_m * v_parallel)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _fused_call(kernel_body, x, weights, strides, tile_m, interpret,
+                **kernel_kwargs):
+    """Shared grid/BlockSpec plumbing for the fp32 and int8 kernel bodies."""
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     batch, width = x.shape
@@ -111,16 +154,16 @@ def cnn_eq_fused(x: jnp.ndarray,
     xp = jnp.pad(x, ((0, 0), (halo, max(0, needed - width - halo))))
 
     flat: list[jnp.ndarray] = []
-    in_specs = [pl.BlockSpec((1, pl.Element(in_tile)),
-                             lambda ib, it: (ib, it * tile_m * total_stride))]
+    in_specs = [pl.BlockSpec((1, xp.shape[1]), lambda ib, it: (ib, 0))]
     for w, b in weights:
         flat += [w, b]
         in_specs += [pl.BlockSpec(w.shape, lambda ib, it: (0, 0, 0)),
                      pl.BlockSpec(b.shape, lambda ib, it: (0,))]
 
     out = pl.pallas_call(
-        functools.partial(_cnn_eq_kernel, tile_m=tile_m, kernels=kernels,
-                          strides=strides, v_parallel=v_parallel),
+        functools.partial(kernel_body, tile_m=tile_m, in_tile=in_tile,
+                          kernels=kernels, strides=strides,
+                          v_parallel=v_parallel, **kernel_kwargs),
         grid=(batch, n_tiles),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, tile_m * v_parallel),
@@ -130,3 +173,65 @@ def cnn_eq_fused(x: jnp.ndarray,
         interpret=interpret,
     )(xp, *flat)
     return out[:, :n_syms]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("strides", "tile_m", "interpret"))
+def cnn_eq_fused(x: jnp.ndarray,
+                 weights: Tuple[Tuple[jnp.ndarray, jnp.ndarray], ...],
+                 strides: Tuple[int, ...], tile_m: int = 64,
+                 interpret: bool | None = None) -> jnp.ndarray:
+    """Fused fp32 equalizer forward. x: (B, W) → (B, W//N_os) symbols.
+
+    weights: ((w_1, b_1), …, (w_L, b_L)) — BN pre-folded (equalizer.fold_bn).
+    strides: (V_p, 1, …, N_os). Output length = W // (V_p·N_os) · V_p.
+    """
+    return _fused_call(_cnn_eq_kernel, x, weights, strides, tile_m, interpret)
+
+
+def quantize_weights_int8(
+        weights: Tuple[Tuple[jnp.ndarray, jnp.ndarray], ...],
+        formats: Tuple[Tuple[int, int, int, int], ...],
+) -> Tuple[Tuple[jnp.ndarray, jnp.ndarray], ...]:
+    """Host-side weight quantization: fp32 folded weights → int8 at 2^w_frac.
+
+    formats[l] = (w_int, w_frac, a_int, a_frac); requires w_int+w_frac+1 ≤ 8
+    (qat.deployment_dtype == "int8"). Biases stay fp32.
+    """
+    out = []
+    for (w, b), (wi, wf, _, _) in zip(weights, formats):
+        if wi + wf + 1 > 8:
+            raise ValueError(
+                f"format Q{wi}.{wf} needs {wi + wf + 1} bits > int8")
+        hi = float(2 ** (wi + wf)) - 1.0
+        lo = -float(2 ** (wi + wf))
+        wq = jnp.clip(jnp.round(w.astype(jnp.float32) * float(2.0 ** wf)),
+                      lo, hi).astype(jnp.int8)
+        out.append((wq, b.astype(jnp.float32)))
+    return tuple(out)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("strides", "formats", "tile_m",
+                                    "interpret"))
+def cnn_eq_fused_int8(x: jnp.ndarray,
+                      qweights: Tuple[Tuple[jnp.ndarray, jnp.ndarray], ...],
+                      strides: Tuple[int, ...],
+                      formats: Tuple[Tuple[int, int, int, int], ...],
+                      tile_m: int = 64,
+                      interpret: bool | None = None) -> jnp.ndarray:
+    """Fused INT8 equalizer forward (see module docstring datapath diagram).
+
+    qweights: ((w_q int8, b fp32), …) from `quantize_weights_int8`.
+    formats:  per-layer (w_int, w_frac, a_int, a_frac) — static, baked into
+              the kernel as requant scales/clip bounds. Every format must
+              fit a signed 8-bit grid: the in-kernel requant casts to int8,
+              which would silently WRAP (not saturate) wider grids.
+    """
+    for i, (wi, wf, ai, af) in enumerate(formats):
+        if wi + wf + 1 > 8 or ai + af + 1 > 8:
+            raise ValueError(
+                f"layer {i} format (Q{wi}.{wf} w / Q{ai}.{af} a) does not "
+                f"fit int8; the int8 requant would wrap silently")
+    return _fused_call(_cnn_eq_kernel_int8, x, qweights, strides, tile_m,
+                       interpret, formats=formats)

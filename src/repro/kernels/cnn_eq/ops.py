@@ -1,35 +1,38 @@
-"""Jitted wrapper: run the fused Pallas equalizer from core params."""
+"""Jitted wrappers: run the fused Pallas equalizer from core params.
+
+`equalize` is kept for backward compatibility (quickstart, kernel tests);
+new code should build a `repro.core.engine.EqualizerEngine`, which is the
+production inference path (backend selection, int8 deployment, autotuned
+tiling) — `equalize` is now a thin shim over it.
+"""
 from __future__ import annotations
 
 from typing import Any, Dict
 
 import jax.numpy as jnp
 
-from ...core.equalizer import CNNEqConfig, fold_bn
-from .cnn_eq import cnn_eq_fused
+from ...core.equalizer import (CNNEqConfig, fold_bn, folded_weights,
+                               layer_strides)
+from .cnn_eq import cnn_eq_fused, cnn_eq_fused_int8, quantize_weights_int8
 from .ref import cnn_eq as cnn_eq_ref
 
-
-def strides_of(cfg: CNNEqConfig):
-    return tuple(s for _, _, s in cfg.layer_specs())
-
-
-def weights_of(folded: Dict[str, Any]):
-    return tuple((l["w"], l["b"]) for l in folded["conv"])
+# canonical definitions live next to fold_bn (core/equalizer.py); these
+# aliases keep the historical kernel-side names importable
+strides_of = layer_strides
+weights_of = folded_weights
 
 
 def equalize(params: Dict[str, Any], bn_state, x: jnp.ndarray,
              cfg: CNNEqConfig, use_pallas: bool = True,
              tile_m: int = 64) -> jnp.ndarray:
     """Deployment-path inference: fold BN, run the fused kernel."""
+    from ...core.engine import EqualizerEngine
     folded = fold_bn(params, bn_state, cfg)
-    squeeze = x.ndim == 1
-    if squeeze:
-        x = x[None]
-    fn = cnn_eq_fused if use_pallas else cnn_eq_ref
-    kwargs = {"tile_m": tile_m} if use_pallas else {}
-    y = fn(x, weights_of(folded), strides_of(cfg), **kwargs)
-    return y[0] if squeeze else y
+    engine = EqualizerEngine.from_folded(
+        folded, cfg, backend="fused_fp32" if use_pallas else "ref",
+        tile_m=tile_m)
+    return engine(x)
 
 
-__all__ = ["cnn_eq_fused", "cnn_eq_ref", "equalize", "strides_of", "weights_of"]
+__all__ = ["cnn_eq_fused", "cnn_eq_fused_int8", "cnn_eq_ref", "equalize",
+           "quantize_weights_int8", "strides_of", "weights_of"]

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the fused CNN-equalizer kernel.
+"""Pure-jnp oracle for the fused CNN-equalizer kernel (fp32 + int8 paths).
 
 STREAM semantics (matching the FPGA and the Pallas kernel): the input is
 padded ONCE with half a receptive field of zeros per side and the layer stack
@@ -10,6 +10,22 @@ padding, the training-time definition) ONLY within o_sym symbols of the
 stream edges — exactly the region the paper's overlap machinery discards.
 tests/test_kernels.py asserts: kernel == ref everywhere, and
 kernel == core-module on the interior.
+
+The convolutions here are TAP-UNROLLED (`conv_valid_taps`): each tap k
+contributes one (C_out, C_in) · (C_in, W) dot, accumulated k = 0 … K-1.
+The Pallas kernel reuses this exact helper on its VMEM tiles — same dots,
+same accumulation order; only the tiling differs, and the contraction is
+over C_in and taps only (never the width axis), so tiling cannot change
+the math. The fused fp32 kernel therefore agrees with this oracle to
+within ~2 ULP (XLA may contract mul+add chains into FMAs differently for
+different program shapes; tests assert atol=5e-6, observed ≤1e-6). The
+int8 path is integer arithmetic and reproduces its oracle EXACTLY.
+
+`cnn_eq_quant` is the QAT fake-quant oracle for the int8 datapath: weights
+and per-layer input activations are snapped to their learned fixed-point
+grids (core/qat.quantize_fixed) and the convs run in fp32. The int8 Pallas
+kernel computes the same values with integer arithmetic + power-of-two
+rescaling; tests assert agreement within one accumulation LSB.
 """
 from __future__ import annotations
 
@@ -27,6 +43,41 @@ def receptive_halo(kernels: Sequence[int], strides: Sequence[int]) -> int:
     return r
 
 
+def conv_valid_taps(h: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                    stride: int, n_out: int) -> jnp.ndarray:
+    """(C_in, W) ⊛ (C_out, C_in, K) → (C_out, n_out): tap-unrolled dots.
+
+    The shared definition of one equalizer conv layer — used by this oracle
+    AND inside the Pallas kernel, so both accumulate in the same order.
+    """
+    k = w.shape[-1]
+    acc = jnp.zeros((w.shape[0], n_out), jnp.float32)
+    for kk in range(k):
+        xk = jax.lax.slice(h, (0, kk),
+                           (h.shape[0], kk + (n_out - 1) * stride + 1),
+                           (1, stride))
+        acc = acc + jax.lax.dot(w[:, :, kk].astype(jnp.float32), xk,
+                                preferred_element_type=jnp.float32)
+    return acc + b.astype(jnp.float32)[:, None]
+
+
+def _stack_valid(x_row: jnp.ndarray,
+                 weights: Sequence[Tuple[jnp.ndarray, jnp.ndarray]],
+                 strides: Sequence[int], n_pos: int) -> jnp.ndarray:
+    """Run the halo-padded layer stack on one stream: (W_pad,) → (n_syms,)."""
+    n_layers = len(weights)
+    spans = [n_pos]
+    for (w, _), s in zip(reversed(list(weights)), reversed(list(strides))):
+        spans.append((spans[-1] - 1) * s + int(w.shape[-1]))
+    spans = spans[::-1]
+    h = x_row[None, :].astype(jnp.float32)          # (C_in=1, W_pad)
+    for i, ((w, b), s) in enumerate(zip(weights, strides)):
+        h = conv_valid_taps(h, w, b, s, spans[i + 1])
+        if i < n_layers - 1:
+            h = jax.nn.relu(h)
+    return jnp.swapaxes(h, 0, 1).reshape(-1)        # (n_pos · V_p,)
+
+
 def cnn_eq(x: jnp.ndarray, weights: Sequence[Tuple[jnp.ndarray, jnp.ndarray]],
            strides: Sequence[int]) -> jnp.ndarray:
     """x: (B, W) waveform → (B, W//(∏strides)·V_p) symbols (stream semantics)."""
@@ -36,16 +87,61 @@ def cnn_eq(x: jnp.ndarray, weights: Sequence[Tuple[jnp.ndarray, jnp.ndarray]],
     for s in strides:
         total_stride *= s
     n_pos = x.shape[1] // total_stride
-
-    h = jnp.pad(x, ((0, 0), (halo, halo)))[:, None, :].astype(jnp.float32)
-    n_layers = len(weights)
-    for i, ((w, b), s) in enumerate(zip(weights, strides)):
-        h = jax.lax.conv_general_dilated(
-            h, w.astype(jnp.float32), window_strides=(s,), padding="VALID",
-            dimension_numbers=("NCH", "OIH", "NCH"))
-        h = h + b.astype(jnp.float32)[None, :, None]
-        if i < n_layers - 1:
-            h = jax.nn.relu(h)
-    h = h[:, :, :n_pos]
-    y = jnp.swapaxes(h, 1, 2).reshape(h.shape[0], -1)
+    need = (n_pos - 1) * total_stride + 2 * halo + 1
+    xp = jnp.pad(x, ((0, 0), (halo, max(0, need - x.shape[1] - halo))))
+    y = jax.vmap(lambda row: _stack_valid(row, weights, strides, n_pos))(xp)
     return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# QAT fake-quant oracle (int8 datapath reference)
+# ---------------------------------------------------------------------------
+
+def _fake_quant(x: jnp.ndarray, int_bits: int, frac_bits: int) -> jnp.ndarray:
+    """quantize_fixed without the STE (forward values are identical)."""
+    scale = float(2.0 ** frac_bits)
+    hi = float(2.0 ** int_bits) - 1.0 / scale
+    lo = -float(2.0 ** int_bits)
+    return jnp.clip(jnp.round(x * scale) / scale, lo, hi)
+
+
+def cnn_eq_quant(x: jnp.ndarray,
+                 weights: Sequence[Tuple[jnp.ndarray, jnp.ndarray]],
+                 strides: Sequence[int],
+                 formats: Sequence[Tuple[int, int, int, int]]) -> jnp.ndarray:
+    """Fake-quantized stream-semantics forward — the int8 kernel's oracle.
+
+    formats[l] = (w_int, w_frac, a_int, a_frac): the frozen per-layer
+    fixed-point formats from QAT. Layer l snaps its input activations to
+    Q(a_int).(a_frac) and its (BN-folded) weights to Q(w_int).(w_frac),
+    exactly like `core.equalizer.apply` with qat_enabled, then convolves in
+    fp32. Biases stay fp32 (the FPGA keeps full-width accumulators).
+    """
+    kernels = [int(w.shape[-1]) for w, _ in weights]
+    halo = receptive_halo(kernels, strides)
+    total_stride = 1
+    for s in strides:
+        total_stride *= s
+    n_pos = x.shape[1] // total_stride
+    need = (n_pos - 1) * total_stride + 2 * halo + 1
+    xp = jnp.pad(x, ((0, 0), (halo, max(0, need - x.shape[1] - halo))))
+
+    spans = [n_pos]
+    for k, s in zip(reversed(kernels), reversed(list(strides))):
+        spans.append((spans[-1] - 1) * s + k)
+    spans = spans[::-1]
+
+    n_layers = len(weights)
+
+    def one(row):
+        h = row[None, :].astype(jnp.float32)
+        for i, ((w, b), s) in enumerate(zip(weights, strides)):
+            wi, wf, ai, af = formats[i]
+            wq = _fake_quant(w.astype(jnp.float32), wi, wf)
+            h = _fake_quant(h, ai, af)
+            h = conv_valid_taps(h, wq, b, s, spans[i + 1])
+            if i < n_layers - 1:
+                h = jax.nn.relu(h)
+        return jnp.swapaxes(h, 0, 1).reshape(-1)
+
+    return jax.vmap(one)(xp).astype(x.dtype)

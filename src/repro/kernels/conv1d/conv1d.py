@@ -7,9 +7,9 @@ parallelism. On TPU the same operation is mapped onto the MXU:
   * grid over (batch, output-width tiles) — the "stream" dimension; Mosaic
     double-buffers the HBM→VMEM DMAs across grid steps, which is the TPU
     analogue of the paper's pipelined streaming architecture;
-  * the input tile is an OVERLAPPING window (`pl.Element` indexing) of
-    (tile_w-1)·stride + K samples — the tile-level halo, mirroring the
-    paper's OGM overlap at stream level;
+  * the input tile is an OVERLAPPING window (in-kernel `pl.ds` dynamic
+    slice) of (tile_w-1)·stride + K samples — the tile-level halo,
+    mirroring the paper's OGM overlap at stream level;
   * the K taps are unrolled (DOP_K = K) and each tap contributes a
     (C_out × C_in) · (C_in × tile_w) MXU matmul (DOP_I = C_in, DOP_O = C_out)
     accumulated in f32.
@@ -26,8 +26,9 @@ import jax.experimental.pallas as pl
 
 
 def _conv1d_kernel(x_ref, w_ref, b_ref, o_ref, *, stride: int, kernel: int,
-                   tile_w: int):
-    x = x_ref[0]            # (C_in, in_tile)
+                   tile_w: int, in_tile: int):
+    start = pl.program_id(1) * (tile_w * stride)
+    x = x_ref[0, :, pl.ds(start, in_tile)]      # (C_in, in_tile)
     w = w_ref[...]          # (C_out, C_in, K)
     acc = jnp.zeros((w.shape[0], tile_w), jnp.float32)
     # DOP_K: unrolled taps; each tap is an MXU matmul over (C_out, C_in)
@@ -58,18 +59,17 @@ def conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, stride: int = 1,
     n_tiles = pl.cdiv(w_out, tile_w)
     in_tile = (tile_w - 1) * stride + kernel
 
-    # pad so every (element-indexed) input tile is in bounds
+    # pad so every in-kernel input window is in bounds
     needed = ((n_tiles - 1) * tile_w + tile_w - 1) * stride + kernel
     if needed > width:
         x = jnp.pad(x, ((0, 0), (0, 0), (0, needed - width)))
 
     out = pl.pallas_call(
         functools.partial(_conv1d_kernel, stride=stride, kernel=kernel,
-                          tile_w=tile_w),
+                          tile_w=tile_w, in_tile=in_tile),
         grid=(batch, n_tiles),
         in_specs=[
-            pl.BlockSpec((1, c_in, pl.Element(in_tile)),
-                         lambda ib, iw: (ib, 0, iw * tile_w * stride)),
+            pl.BlockSpec((1, c_in, x.shape[2]), lambda ib, iw: (ib, 0, 0)),
             pl.BlockSpec((c_out, c_in, kernel), lambda ib, iw: (0, 0, 0)),
             pl.BlockSpec((c_out,), lambda ib, iw: (0,)),
         ],

@@ -10,7 +10,7 @@ they are unrolled MAC trees. TPU mapping per sequence tile (all in VMEM):
   order 3:  y3[t] = Σ_i win3[t,i] · (win3[t]ᵀ W3[i] win3[t])
             → M3 unrolled (tile, M3) @ (M3, M3) matmuls
 
-Windows are built with strided slices of the element-indexed input tile
+Windows are built with strided slices of the in-kernel `pl.ds` input window
 (overlapping halo), so no gather is needed in-kernel.
 """
 from __future__ import annotations
@@ -32,8 +32,9 @@ def _win(x: jnp.ndarray, m: int, stride: int, tile: int, off: int
 
 def _volterra_kernel(x_ref, w0_ref, w1_ref, w2_ref, w3_ref, o_ref, *,
                      stride: int, tile: int, m1: int, m2: int, m3: int,
-                     halo: int):
-    x = x_ref[0].astype(jnp.float32)  # (in_tile,)
+                     halo: int, in_tile: int):
+    start = pl.program_id(1) * (tile * stride)
+    x = x_ref[0, pl.ds(start, in_tile)].astype(jnp.float32)  # (in_tile,)
     y = jnp.full((tile,), w0_ref[0], jnp.float32)
 
     win1 = _win(x, m1, stride, tile, halo - m1 // 2)
@@ -82,11 +83,10 @@ def volterra(x: jnp.ndarray, w0: jnp.ndarray, w1: jnp.ndarray,
 
     out = pl.pallas_call(
         functools.partial(_volterra_kernel, stride=stride, tile=tile,
-                          m1=m1, m2=m2, m3=m3, halo=halo),
+                          m1=m1, m2=m2, m3=m3, halo=halo, in_tile=in_tile),
         grid=(batch, n_tiles),
         in_specs=[
-            pl.BlockSpec((1, pl.Element(in_tile)),
-                         lambda ib, it: (ib, it * tile * stride)),
+            pl.BlockSpec((1, xp.shape[1]), lambda ib, it: (ib, 0)),
             pl.BlockSpec((1,), lambda ib, it: (0,)),
             pl.BlockSpec(w1.shape, lambda ib, it: (0,)),
             pl.BlockSpec(w2_in.shape, lambda ib, it: (0, 0)),

@@ -18,9 +18,12 @@ The halo width is the receptive-field formula of paper §6.1 (via
 core.stream_partition.actual_overlap), generalized by `halo_samples` for any
 finite-receptive-field layer (CNN equalizer, Mamba2 conv, SWA attention).
 
-`halo_apply` is the public entry: it wraps ANY per-chunk function
-(waveform → symbols) so the sharded result equals the unsharded oracle
-exactly — asserted by tests/test_halo.py.
+`halo_apply` is the public entry: it wraps the production
+`repro.core.engine.EqualizerEngine` (or any per-chunk callable,
+waveform → symbols) so the sharded result equals the unsharded oracle
+exactly — asserted by tests/test_halo.py. Each mesh device runs the
+engine's fused kernel on its chunk, so the paper's two parallelism axes
+compose: N_i instances (mesh) × fused tiling (kernel grid).
 """
 from __future__ import annotations
 
@@ -30,6 +33,11 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+try:                                     # jax ≥ 0.5 top-level export
+    _shard_map = jax.shard_map
+except AttributeError:                   # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
 
 from ..core.equalizer import CNNEqConfig
 from ..core.stream_partition import actual_overlap
@@ -73,9 +81,10 @@ def halo_apply(apply_fn: Callable[[jnp.ndarray], jnp.ndarray],
                axis: str = "data") -> jnp.ndarray:
     """Equalize a waveform stream sharded over `axis` of `mesh`.
 
-    apply_fn: (batch=1, W_chunk) waveform → (1, W_chunk // N_os) symbols —
-    must have a receptive field ≤ the §6.1 overlap (true for the CNN
-    equalizer by construction).
+    apply_fn: an `EqualizerEngine` (the production path) or any callable
+    (batch=1, W_chunk) waveform → (1, W_chunk // N_os) symbols — must have
+    a receptive field ≤ the §6.1 overlap (true for the CNN equalizer by
+    construction).
     x: (S·N_os,) the full waveform (sharded or shardable over `axis`).
     Returns (S,) symbols, identical to apply_fn on the unsplit stream.
     """
@@ -89,8 +98,10 @@ def halo_apply(apply_fn: Callable[[jnp.ndarray], jnp.ndarray],
         y = apply_fn(ext)                                     # CNN instance
         return y[0, o_sym:y.shape[1] - o_sym]                 # ORM
 
-    fn = jax.shard_map(per_device, mesh=mesh, in_specs=P(axis),
-                       out_specs=P(axis))
+    # check_rep=False: no replication rule exists for pallas_call (the fused
+    # backends); all specs here are fully partitioned so nothing is lost.
+    fn = _shard_map(per_device, mesh=mesh, in_specs=P(axis),
+                    out_specs=P(axis), check_rep=False)
     return fn(x)
 
 
@@ -108,6 +119,6 @@ def halo_apply_batched(apply_fn: Callable, x: jnp.ndarray,
         y = apply_fn(ext)
         return y[:, o_sym:y.shape[1] - o_sym]
 
-    fn = jax.shard_map(per_device, mesh=mesh, in_specs=P(None, axis),
-                       out_specs=P(None, axis))
+    fn = _shard_map(per_device, mesh=mesh, in_specs=P(None, axis),
+                    out_specs=P(None, axis), check_rep=False)
     return fn(x)

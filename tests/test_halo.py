@@ -45,11 +45,40 @@ def test_halo_apply_equals_reference(repo_src):
 
 
 @pytest.mark.slow
+def test_halo_apply_with_engine(repo_src):
+    """The production path: fused-kernel EqualizerEngine per mesh device."""
+    out = run_subprocess_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import equalizer as eq
+        from repro.core import stream_partition as sp
+        from repro.core.engine import EqualizerEngine
+        from repro.parallel import halo
+
+        cfg = eq.CNNEqConfig()
+        key = jax.random.PRNGKey(0)
+        params = eq.init(key, cfg)
+        engine = EqualizerEngine.from_params(
+            params, eq.init_bn_state(cfg), cfg, backend="fused_fp32",
+            tile_m=64)
+
+        n_inst = 8
+        mesh = jax.make_mesh((n_inst,), ("data",))
+        x = jax.random.normal(key, (256 * n_inst * cfg.n_os,))
+        y_halo = halo.halo_apply(engine, x, cfg, mesh, axis="data")
+        y_ref = sp.partitioned_apply(engine, x, n_inst, cfg)
+        np.testing.assert_allclose(np.asarray(y_halo), np.asarray(y_ref),
+                                   rtol=1e-5, atol=1e-5)
+        print("ENGINE-HALO-OK")
+    """, n_devices=8, repo_src=repo_src)
+    assert "ENGINE-HALO-OK" in out
+
+
+@pytest.mark.slow
 def test_halo_exchange_unit(repo_src):
     out = run_subprocess_devices("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
-        from repro.parallel.halo import halo_exchange
+        from repro.parallel.halo import _shard_map, halo_exchange
 
         mesh = jax.make_mesh((4,), ("data",))
         x = jnp.arange(32, dtype=jnp.float32)          # 8 per device
@@ -57,8 +86,8 @@ def test_halo_exchange_unit(repo_src):
         def f(c):
             return halo_exchange(c, 3, "data")
 
-        y = jax.shard_map(f, mesh=mesh, in_specs=P("data"),
-                          out_specs=P("data"))(x)
+        y = _shard_map(f, mesh=mesh, in_specs=P("data"),
+                       out_specs=P("data"))(x)
         y = np.asarray(y).reshape(4, 14)
         # device 1 holds [8..16); halo = [5,6,7] + [16,17,18]
         np.testing.assert_array_equal(y[1][:3], [5, 6, 7])
@@ -77,6 +106,7 @@ def test_grad_compression_psum(repo_src):
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from repro.optim import grad_comp
+        from repro.parallel.halo import _shard_map
 
         mesh = jax.make_mesh((4,), ("pod",))
         g = jax.random.normal(jax.random.PRNGKey(0), (4, 256))
@@ -87,8 +117,8 @@ def test_grad_compression_psum(repo_src):
             return mean["w"][None], new_err["w"][None]
 
         err0 = jnp.zeros((4, 256))
-        mean, err1 = jax.shard_map(f, mesh=mesh, in_specs=(P("pod"), P("pod")),
-                                   out_specs=(P("pod"), P("pod")))(g, err0)
+        mean, err1 = _shard_map(f, mesh=mesh, in_specs=(P("pod"), P("pod")),
+                                out_specs=(P("pod"), P("pod")))(g, err0)
         want = jnp.mean(g, axis=0)
         got = np.asarray(mean).reshape(4, 256)[0]
         # int8 quantization error is bounded by scale/2 per pod

@@ -1,10 +1,16 @@
 """Learned-bit-width QAT (paper §4): fixed-point quantizer properties
-(hypothesis), differentiability of the width interpolation, loss term."""
+(hypothesis — skipped cleanly when the package is absent), differentiability
+of the width interpolation, loss term, deployment-format derivation."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:          # keep the deterministic tests runnable
+    HAVE_HYPOTHESIS = False
 
 from repro.core import qat
 
@@ -12,16 +18,10 @@ F32 = np.float32
 
 
 # ---------------------------------------------------------------------------
-# quantize_fixed — property-based
+# quantize_fixed — property-based (requires hypothesis)
 # ---------------------------------------------------------------------------
 
-@given(
-    x=st.lists(st.floats(-100, 100, width=32), min_size=1, max_size=64),
-    ib=st.integers(0, 8),
-    fb=st.integers(0, 12),
-)
-@settings(max_examples=60, deadline=None)
-def test_quantize_fixed_properties(x, ib, fb):
+def _quantize_fixed_properties(x, ib, fb):
     xs = jnp.asarray(x, jnp.float32)
     q = qat.quantize_fixed(xs, jnp.asarray(float(ib)), jnp.asarray(float(fb)))
     qn = np.asarray(q, F32)
@@ -41,13 +41,35 @@ def test_quantize_fixed_properties(x, ib, fb):
     assert np.all(err[in_range] <= 0.5 / scale + 1e-6)
 
 
-@given(st.integers(1, 6), st.integers(0, 10))
-@settings(max_examples=30, deadline=None)
-def test_quantize_monotone(ib, fb):
+def _quantize_monotone(ib, fb):
     xs = jnp.linspace(-5, 5, 101)
     q = np.asarray(qat.quantize_fixed(xs, jnp.asarray(float(ib)),
                                       jnp.asarray(float(fb))), F32)
     assert np.all(np.diff(q) >= -1e-7)         # non-decreasing
+
+
+if HAVE_HYPOTHESIS:
+    test_quantize_fixed_properties = settings(
+        max_examples=60, deadline=None)(given(
+            x=st.lists(st.floats(-100, 100, width=32), min_size=1,
+                       max_size=64),
+            ib=st.integers(0, 8),
+            fb=st.integers(0, 12),
+        )(_quantize_fixed_properties))
+
+    test_quantize_monotone = settings(max_examples=30, deadline=None)(
+        given(st.integers(1, 6), st.integers(0, 10))(_quantize_monotone))
+else:
+    @pytest.mark.parametrize("ib,fb", [(0, 0), (2, 6), (8, 12)])
+    def test_quantize_fixed_properties(ib, fb):
+        """Deterministic fallback sweep when hypothesis is unavailable."""
+        rng = np.random.default_rng(0)
+        _quantize_fixed_properties(rng.uniform(-100, 100, 64).tolist(),
+                                   ib, fb)
+
+    @pytest.mark.parametrize("ib,fb", [(1, 0), (3, 5), (6, 10)])
+    def test_quantize_monotone(ib, fb):
+        _quantize_monotone(ib, fb)
 
 
 def test_interp_matches_fixed_at_integers():
@@ -101,3 +123,23 @@ def test_deployment_dtype_mapping():
     assert qat.deployment_dtype(mk(2.0, 5.0)) == "int8"
     assert qat.deployment_dtype(mk(3.0, 9.0)) == "bfloat16"   # ~13b weights
     assert qat.deployment_dtype(mk(8.0, 12.0)) == "float32"
+
+
+def test_deployment_plan_and_formats():
+    mk = lambda wi, wf, ai, af: {
+        "w_int": jnp.asarray(wi), "w_frac": jnp.asarray(wf),
+        "a_int": jnp.asarray(ai), "a_frac": jnp.asarray(af)}
+    qp = {"layer0": mk(2.0, 5.0, 3.0, 4.0),
+          "layer1": mk(1.7, 4.2, 2.1, 3.9),   # non-integer → ceil
+          "layer2": mk(2.0, 5.0, 2.0, 5.0)}
+    assert qat.frozen_format(qp["layer1"]) == (2, 5, 3, 4)
+    fmts = qat.layer_formats(qp)
+    assert fmts == ((2, 5, 3, 4), (2, 5, 3, 4), (2, 5, 2, 5))
+    plan = qat.deployment_plan(qp)
+    assert plan["formats"] == fmts
+    assert plan["all_int8"]
+    assert set(plan["dtypes"].values()) == {"int8"}
+    # one wide layer breaks int8 deployability for the whole stack
+    qp["layer1"] = mk(4.0, 9.0, 2.0, 3.0)
+    assert not qat.deployment_plan(qp)["all_int8"]
+    assert qat.deployment_plan(qp)["dtypes"]["layer1"] == "bfloat16"
