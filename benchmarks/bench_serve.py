@@ -1,0 +1,147 @@
+"""Serving throughput/latency — micro-batched multi-tenant vs sequential.
+
+The axis the paper's GPU baseline lost on: per-link calls too small to fill
+the device. `repro.serve` answers with dynamic micro-batching — pending
+chunks from every tenant sharing a topology+backend coalesce into ONE
+stacked fused-kernel launch with per-row tenant weights. This bench drives
+both DOP operating points (`equalizer_ht` → int8 QAT formats,
+`equalizer_lp` → 12-bit formats deploying bf16) with the round-robin load
+generator and records, per tenant count:
+
+  * serve:       aggregate syms/s + p50/p99 request latency + mean batch
+                 occupancy through the micro-batcher (max_batch = N),
+  * sequential:  the SAME streaming workload with batching disabled
+                 (max_batch = 1 → one engine launch per tenant chunk),
+  * offline_oneshot_syms_per_s: each tenant's full stream in one
+                 engine call (non-streaming upper reference).
+
+Writes machine-readable `BENCH_serve.json` at the repo root — the committed
+baseline `benchmarks/run.py --check` regresses against. Absolute rates are
+host-dependent (CPU hosts run the kernels in interpret mode); the tracked
+signals are the serve-vs-sequential ratio and its trajectory over PRs.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import equalizer_ht as HT
+from repro.configs import equalizer_lp as LP
+from repro.core import equalizer as eq
+from repro.serve import BatchPolicy, ServeRuntime, TenantSpec, chop, replay
+from repro.serve.loadgen import random_waveforms
+
+from .common import Bench
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+OUT_PATH = REPO_ROOT / "BENCH_serve.json"
+
+# learned-format stand-ins (paper Fig. 6): ht lands int8, lp mid-curve bf16
+FORMATS = {
+    "equalizer_ht": {"w_int": 2, "w_frac": 5, "a_int": 3, "a_frac": 4},
+    "equalizer_lp": {"w_int": 3, "w_frac": 8, "a_int": 3, "a_frac": 8},
+}
+TILE_M = 16          # serving tile: chunks are short; big tiles waste skip
+
+
+def _tenant_spec(op_name, cfg, tenant_idx) -> TenantSpec:
+    params = eq.init(jax.random.PRNGKey(1000 + tenant_idx), cfg)
+    params["qat"] = {
+        f"layer{i}": {k: jnp.asarray(float(v))
+                      for k, v in FORMATS[op_name].items()}
+        for i in range(cfg.layers)}
+    return TenantSpec(f"{op_name}-t{tenant_idx}", cfg, params=params,
+                      bn_state=eq.init_bn_state(cfg), backend="auto",
+                      tile_m=TILE_M)
+
+
+def _run_streaming(specs, waves, chunk_samples, max_batch) -> Dict:
+    def one_pass():
+        rt = ServeRuntime(BatchPolicy(max_batch=max_batch, max_wait_s=1e9),
+                          max_engines=64)
+        for s in specs:
+            rt.open(s)
+        streams = {s.tenant_id: chop(w, chunk_samples, seed=i, jitter=0.0)
+                   for i, (s, w) in enumerate(zip(specs, waves))}
+        return rt, replay(rt, streams)
+
+    one_pass()                 # warm-up: compile every (B, W) launch shape
+    # best-of-3 (compile excluded): interpret-mode hosts are noisy and the
+    # --check regression gate needs a stable statistic
+    rt, rep = max((one_pass() for _ in range(3)),
+                  key=lambda p: p[1]["agg_syms_per_s"])
+    stats = rt.stats()
+    return {
+        "agg_syms_per_s": rep["agg_syms_per_s"],
+        "total_syms": rep["total_syms"],
+        "elapsed_s": rep["elapsed_s"],
+        "mean_batch": stats.get("mean_batch", 1.0),
+        "launches": stats.get("launches", 0),
+        "p50_latency_ms": stats.get("p50_latency_ms", 0.0),
+        "p99_latency_ms": stats.get("p99_latency_ms", 0.0),
+    }
+
+
+def _offline_oneshot(specs, waves) -> float:
+    engines = [s.build_engine() for s in specs]
+    xs = [jnp.asarray(w[None]) for w in waves]
+    for e, x in zip(engines, xs):                  # warm-up compile
+        jax.block_until_ready(e(x))
+    t0 = time.perf_counter()
+    n = 0
+    for e, x in zip(engines, xs):
+        n += jax.block_until_ready(e(x)).shape[1]
+    return n / (time.perf_counter() - t0)
+
+
+def run(n_syms: int = 4096, chunk_syms: int = 512,
+        tenant_counts=(1, 2, 4, 8),
+        out_path: Optional[pathlib.Path] = OUT_PATH) -> dict:
+    bench = Bench("serve_multitenant", "§5.3 DOP-parallel datapath, served")
+    report = {"n_syms": n_syms, "chunk_syms": chunk_syms, "tile_m": TILE_M,
+              "backend_default": jax.default_backend(), "configs": {}}
+    ops = {"equalizer_ht": HT.CNN, "equalizer_lp": LP.CNN}
+
+    for op_idx, (op_name, cfg) in enumerate(ops.items()):
+        chunk_samples = chunk_syms * cfg.n_os
+        entry = {"formats": FORMATS[op_name], "tenants": {},
+                 "backend": _tenant_spec(op_name, cfg, 0)
+                 .build_engine().backend}
+        for n_t in tenant_counts:
+            specs = [_tenant_spec(op_name, cfg, i) for i in range(n_t)]
+            # fixed per-op seed: str hash() is randomized per process and
+            # would feed --check different waveforms than the baseline saw
+            waves = random_waveforms(n_t, n_syms, cfg.n_os, seed=op_idx)
+            serve = _run_streaming(specs, waves, chunk_samples,
+                                   max_batch=max(n_t, 1))
+            seq = _run_streaming(specs, waves, chunk_samples, max_batch=1)
+            entry["tenants"][str(n_t)] = {
+                "serve": serve,
+                "sequential": seq,
+                "offline_oneshot_syms_per_s": _offline_oneshot(specs, waves),
+                "speedup_serve_vs_sequential":
+                    serve["agg_syms_per_s"] / seq["agg_syms_per_s"],
+            }
+            print(f"[bench_serve] {op_name} N={n_t} "
+                  f"({entry['backend']}): serve "
+                  f"{serve['agg_syms_per_s']:,.0f} sym/s "
+                  f"(batch {serve['mean_batch']:.1f}, "
+                  f"p99 {serve['p99_latency_ms']:.1f} ms) vs sequential "
+                  f"{seq['agg_syms_per_s']:,.0f} sym/s → "
+                  f"{serve['agg_syms_per_s'] / seq['agg_syms_per_s']:.2f}×")
+        report["configs"][op_name] = entry
+
+    if out_path is not None:
+        out_path.write_text(json.dumps(report, indent=2))
+        print(f"[bench_serve] wrote {out_path}")
+    bench.record("report", report)
+    return bench.finish()
+
+
+if __name__ == "__main__":
+    run()

@@ -8,25 +8,80 @@ One benchmark per paper table/figure (see DESIGN.md §6):
     bench_dop       Fig. 8   flexible-DOP study (TPU tile-utilization axis)
     bench_stream    Fig. 9/§7.2  64-instance stream partitioning
     bench_engine    §7       engine backend throughput → BENCH_engine.json
+    bench_serve     §5.3     multi-tenant serving → BENCH_serve.json
     bench_timing    Fig. 12  timing model vs simulated measurement
     bench_platform  Fig. 13-15  CPU measured / TPU roofline-projected
     bench_roofline  Table 1 / §Roofline  aggregate the dry-run artifacts
 
 `--full` runs paper-scale sweeps (hours); the default is a reduced pass
 whose orderings (not absolute BERs) carry the claims.
+
+`--check` is the perf-regression gate: it re-measures bench_engine and
+bench_serve (without overwriting the committed baselines) and exits
+non-zero if any tracked throughput fell more than 10% below the
+`BENCH_engine.json` / `BENCH_serve.json` committed at the repo root.
+Compare like with like: the committed baseline must come from the same
+host class (CPU hosts run the kernels in interpret mode).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import pathlib
 import sys
 import time
 import traceback
 
 from . import (bench_dop, bench_dse, bench_engine, bench_platform,
-               bench_proakis, bench_quant, bench_roofline, bench_stream,
-               bench_timing)
+               bench_proakis, bench_quant, bench_roofline, bench_serve,
+               bench_stream, bench_timing)
 from .common import REPORT_DIR
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _engine_rates(rep: dict) -> dict:
+    return {f"engine/{c}/{b}": r
+            for c, e in rep.get("configs", {}).items()
+            for b, r in e.get("syms_per_s", {}).items()}
+
+
+def _serve_rates(rep: dict) -> dict:
+    return {f"serve/{c}/N{n}": t["serve"]["agg_syms_per_s"]
+            for c, e in rep.get("configs", {}).items()
+            for n, t in e.get("tenants", {}).items()}
+
+
+def check(tol: float = 0.10) -> int:
+    """Regress fresh engine/serve throughput against committed baselines."""
+    gates = (
+        ("engine", REPO_ROOT / "BENCH_engine.json",
+         lambda: bench_engine.run(out_path=None), _engine_rates),
+        ("serve", REPO_ROOT / "BENCH_serve.json",
+         lambda: bench_serve.run(out_path=None), _serve_rates))
+    # validate the configuration before burning minutes of re-measurement
+    missing = [p.name for _, p, _, _ in gates if not p.exists()]
+    if missing:
+        print(f"[check] FAIL: no committed baseline(s): {', '.join(missing)}")
+        return 2
+    failures = []
+    compared = 0
+    for name, path, bench_fn, extract in gates:
+        baseline = extract(json.loads(path.read_text()))
+        fresh = extract(bench_fn()["results"]["report"])
+        for key in sorted(baseline):
+            if key not in fresh:
+                print(f"[check] warn: {key} in baseline but not re-measured")
+                continue
+            compared += 1
+            ratio = fresh[key] / baseline[key]
+            status = "ok" if ratio >= 1.0 - tol else "REGRESSION"
+            print(f"[check] {status}: {key} {fresh[key]:,.0f} vs baseline "
+                  f"{baseline[key]:,.0f} sym/s ({ratio:.2f}x)")
+            if ratio < 1.0 - tol:
+                failures.append(key)
+    print(f"[check] {compared} rates compared, {len(failures)} regressions")
+    return 1 if failures else 0
 
 
 def main(argv=None) -> int:
@@ -34,12 +89,22 @@ def main(argv=None) -> int:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sweeps (hours)")
     ap.add_argument("--only", nargs="*", default=None)
+    ap.add_argument("--check", action="store_true",
+                    help="re-measure engine/serve throughput and fail on "
+                         ">10%% regression vs the committed BENCH_*.json")
+    ap.add_argument("--tol", type=float, default=0.10,
+                    help="--check regression tolerance (fraction; raise on "
+                         "noisy shared hosts)")
     args = ap.parse_args(argv)
+
+    if args.check:
+        return check(tol=args.tol)
 
     steps = 700 if not args.full else 10_000
     jobs = [
         ("timing", lambda: bench_timing.run()),
         ("engine", lambda: bench_engine.run()),
+        ("serve", lambda: bench_serve.run()),
         ("stream", lambda: bench_stream.run()),
         ("dop", lambda: bench_dop.run()),
         ("roofline", lambda: bench_roofline.run()),

@@ -40,8 +40,11 @@ def cache_key(cfg: CNNEqConfig, backend: str) -> Tuple:
 
 
 def _key_str(key: Tuple) -> str:
-    l, k, c, vp, nos, backend, platform = key
-    return f"L{l}_K{k}_C{c}_Vp{vp}_Nos{nos}__{backend}__{platform}"
+    l, k, c, vp, nos, backend, platform = key[:7]
+    s = f"L{l}_K{k}_C{c}_Vp{vp}_Nos{nos}__{backend}__{platform}"
+    if len(key) > 7:                   # batched-serving sweep (probe_batch>1)
+        s += f"__B{key[7]}"
+    return s
 
 
 def _load_disk() -> Dict[str, int]:
@@ -77,16 +80,22 @@ def best_tile_m(cfg: CNNEqConfig, backend: str,
                 make_fn: Callable[[int], Callable[[jnp.ndarray], jnp.ndarray]],
                 candidates: Optional[Iterable[int]] = None,
                 probe_syms: int = 4096,
-                use_disk: bool = True) -> int:
+                use_disk: bool = True,
+                probe_batch: int = 1) -> int:
     """Sweep tile_m candidates for (cfg, backend); return the fastest.
 
     make_fn(tile_m) must return a jit-able callable (B, W) → (B, S). The
-    probe input is one batch row of `probe_syms` symbols — long enough that
-    every candidate runs multiple grid tiles.
+    probe input is `probe_batch` rows of `probe_syms` symbols — long enough
+    that every candidate runs multiple grid tiles. probe_batch > 1 models
+    the multi-tenant serving shape (repro.serve stacks B tenant chunks per
+    launch) and gets its own cache slot — the best tile for one long stream
+    is not necessarily best when B rows split VMEM.
     """
     if candidates is None:
         candidates = DEFAULT_TILES       # resolved at call time (testable)
     key = cache_key(cfg, backend)
+    if probe_batch != 1:
+        key = key + (probe_batch,)
     if key in _memory_cache:
         return _memory_cache[key]
     if use_disk:
@@ -96,7 +105,7 @@ def best_tile_m(cfg: CNNEqConfig, backend: str,
             return int(hit)
 
     x = jax.random.normal(jax.random.PRNGKey(0),
-                          (1, probe_syms * cfg.n_os), jnp.float32)
+                          (probe_batch, probe_syms * cfg.n_os), jnp.float32)
     timings: Dict[int, float] = {}
     for tile_m in candidates:
         timings[int(tile_m)] = time_callable(make_fn(int(tile_m)), x)

@@ -10,22 +10,33 @@ lambdas. The engine owns:
   * backend selection:
       - "ref"        pure-jnp stream-semantics oracle (kernels.cnn_eq.ref),
       - "fused_fp32" the fused Pallas kernel — same math as "ref",
+      - "fused_bf16" the fused Pallas kernel with bf16 tap dots and fp32
+        accumulation — the native datapath for QAT formats in the 9–16-bit
+        range (qat.deployment_dtype == "bfloat16"),
       - "fused_int8" the quantized fused Pallas kernel: int8 weights at
         QAT's learned per-layer scales, int8×int8 MXU dots with int32
         accumulation and fused requantization between layers,
       - "auto"       fused_int8 when trained QAT formats deploy to int8
-        (qat.deployment_plan), else fused_fp32,
+        AND the BN-folded weights still fit the learned grid; else
+        fused_bf16 when every layer's frozen format fits 16 bits; else
+        fused_fp32,
   * tile_m selection: an explicit int, or "auto" → the cached autotune
     sweep (core.autotune) keyed on (topology, backend).
 
 An engine is a plain callable `(W,) | (B, W) waveform → symbols`, so it
-drops into every site that previously took an `apply_fn`.
+drops into every site that previously took an `apply_fn`. Engines that
+share a `group_key()` (topology + backend + static kernel config) can be
+fused into ONE batched launch with per-row weights via
+`stacked_engine_fn` — the multi-tenant serving path (repro.serve): batch
+row i is computed with engine i's weights, bitwise-identical to engine i
+run alone.
 
 All backends share STREAM semantics (one halo pad, VALID convs — see
 kernels/cnn_eq/ref.py), so swapping backends never changes results beyond
 floating-point fusion noise; the property tests in tests/test_engine.py
-assert ≤2-ULP fp32 agreement with the oracle everywhere and ≤1-LSB int8
-agreement with the QAT fake-quant reference (observed: exact).
+assert ≤2-ULP fp32 agreement with the oracle everywhere, bitwise bf16
+agreement with the bf16 oracle, and ≤1-LSB int8 agreement with the QAT
+fake-quant reference (observed: exact).
 """
 from __future__ import annotations
 
@@ -40,7 +51,7 @@ from . import qat as qat_lib
 from .equalizer import (CNNEqConfig, fold_bn, folded_weights, init_bn_state,
                         layer_strides)
 
-BACKENDS = ("ref", "fused_fp32", "fused_int8")
+BACKENDS = ("ref", "fused_fp32", "fused_bf16", "fused_int8")
 
 Format = Tuple[int, int, int, int]          # (w_int, w_frac, a_int, a_frac)
 
@@ -72,8 +83,16 @@ class EqualizerEngine:
 
     def __post_init__(self):
         if self.backend == "auto":
-            self.backend = ("fused_int8" if self._int8_deployable()
-                            else "fused_fp32")
+            # int8 only when the FOLDED weights still fit the learned grid
+            # (see from_params); a vetoed int8 or a 9–16-bit format deploys
+            # bf16 — bf16's range covers any learned int width natively.
+            if (self._int8_deployable()
+                    and _folded_fit_grid(self.weights, self.formats)):
+                self.backend = "fused_int8"
+            elif self._bf16_deployable():
+                self.backend = "fused_bf16"
+            else:
+                self.backend = "fused_fp32"
         if self.backend not in BACKENDS:
             raise ValueError(f"unknown backend {self.backend!r}; "
                              f"expected one of {BACKENDS + ('auto',)}")
@@ -85,6 +104,9 @@ class EqualizerEngine:
                     f"{self.formats}")
             from ..kernels.cnn_eq.cnn_eq import quantize_weights_int8
             self._qweights = quantize_weights_int8(self.weights, self.formats)
+        if self.backend == "fused_bf16":
+            from ..kernels.cnn_eq.cnn_eq import cast_weights_bf16
+            self._bweights = cast_weights_bf16(self.weights)
         self._strides = layer_strides(self.cfg)
 
     # -- construction ------------------------------------------------------
@@ -94,23 +116,32 @@ class EqualizerEngine:
                     cfg: CNNEqConfig, backend: str = "auto",
                     tile_m: int | str = "auto",
                     interpret: Optional[bool] = None) -> "EqualizerEngine":
-        """Deployment step: fold BN, derive int8 scales from learned QAT
-        formats (`qat.deployment_plan`), pick the backend.
+        """Deployment step: fold BN, derive quantized-deployment formats
+        from learned QAT widths (`qat.deployment_plan`), pick the backend.
 
         QAT learns Q(w_int) on the UNfolded weights; folding multiplies by
         g = scale/√(var+ε), which can push weights past the learned grid.
         Silently saturating them would break the train→deploy accuracy
         contract, so auto-deployment only goes int8 when the FOLDED weights
-        still fit each layer's grid; otherwise it falls back to fused_fp32.
+        still fit each layer's grid; a vetoed int8 (and any learned format
+        in the 9–16-bit range) deploys fused_bf16, whose exponent covers
+        the overflow with no clipping; only >16-bit formats (or no QAT at
+        all) fall back to fused_fp32.
         """
         folded = fold_bn(params, bn_state or init_bn_state(cfg), cfg)
         weights = folded_weights(folded)
         formats = None
         if "qat" in params:
             plan = qat_lib.deployment_plan(params["qat"])
-            if plan["all_int8"] and _folded_fit_grid(weights,
-                                                    plan["formats"]):
+            if qat_lib.plan_backend(plan) != "fused_fp32":
                 formats = plan["formats"]
+        if (backend == "fused_int8" and formats is not None
+                and not _folded_fit_grid(weights, formats)):
+            raise ValueError(
+                "explicit fused_int8 requested but the BN-folded weights "
+                "overflow the learned Q(w_int) grids — deploying would "
+                "silently saturate; use backend='auto' (deploys bf16) or "
+                "retrain with folding-aware QAT")
         return cls(cfg=cfg, weights=weights, backend=backend,
                    tile_m=tile_m, formats=formats, interpret=interpret)
 
@@ -124,6 +155,11 @@ class EqualizerEngine:
     def _int8_deployable(self) -> bool:
         return (self.formats is not None
                 and all(wi + wf + 1 <= 8 and ai + af + 1 <= 8
+                        for wi, wf, ai, af in self.formats))
+
+    def _bf16_deployable(self) -> bool:
+        return (self.formats is not None
+                and all(max(wi + wf, ai + af) + 1 <= 16
                         for wi, wf, ai, af in self.formats))
 
     def resolved_tile_m(self) -> int:
@@ -148,10 +184,23 @@ class EqualizerEngine:
             return lambda x: cnn_eq_fused(x, self.weights, self._strides,
                                           tile_m=tile_m,
                                           interpret=self.interpret)
+        if self.backend == "fused_bf16":
+            from ..kernels.cnn_eq.cnn_eq import cnn_eq_fused_bf16
+            return lambda x: cnn_eq_fused_bf16(x, self._bweights,
+                                               self._strides, tile_m=tile_m,
+                                               interpret=self.interpret)
         from ..kernels.cnn_eq.cnn_eq import cnn_eq_fused_int8
         return lambda x: cnn_eq_fused_int8(x, self._qweights, self._strides,
                                            self.formats, tile_m=tile_m,
                                            interpret=self.interpret)
+
+    def _layer_weights(self):
+        """The weight pytree the active backend's kernel consumes."""
+        if self.backend == "fused_int8":
+            return self._qweights
+        if self.backend == "fused_bf16":
+            return self._bweights
+        return self.weights
 
     # -- the production path -----------------------------------------------
 
@@ -163,6 +212,37 @@ class EqualizerEngine:
         y = self._make_fn(self.resolved_tile_m())(x)
         return y[0] if squeeze else y
 
+    # -- multi-tenant serving surface --------------------------------------
+
+    @property
+    def total_stride(self) -> int:
+        """Input samples consumed per network pass (V_p · N_os)."""
+        n = 1
+        for s in self._strides:
+            n *= s
+        return n
+
+    @property
+    def halo_samples(self) -> int:
+        """Half a receptive field per side, in SAMPLES — the overlap a
+        streaming chunker must carry between chunks."""
+        from ..kernels.cnn_eq.ref import receptive_halo
+        kernels = tuple(int(w.shape[-1]) for w, _ in self.weights)
+        return receptive_halo(kernels, self._strides)
+
+    def group_key(self) -> Tuple:
+        """Hashable key of everything a batched launch must share.
+
+        Two engines with equal group keys can be stacked into one fused
+        launch (`stacked_engine_fn`) — same topology, backend, static
+        kernel config (int8 formats are baked into the kernel as requant
+        scales) and tile width. Weights are NOT in the key: they ride in
+        per-row stacked kernel operands.
+        """
+        fmts = self.formats if self.backend == "fused_int8" else None
+        return (self.cfg, self.backend, fmts, self.resolved_tile_m(),
+                self.interpret)
+
     def describe(self) -> Dict[str, Any]:
         """Deployment summary (for logs / benchmark records)."""
         return {
@@ -171,3 +251,52 @@ class EqualizerEngine:
             "layers": self.cfg.layers,
             "formats": self.formats,
         }
+
+
+def stacked_engine_fn(engines) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    """Fuse same-group engines into ONE batched launch with per-row weights.
+
+    engines: a sequence of `EqualizerEngine`s whose `group_key()`s agree.
+    Returns a callable (B, W) → (B, S) where batch row i runs through
+    engine i's weights — bitwise-identical to `engines[i](x[i:i+1])` (same
+    kernel body, same tile shapes; only the BlockSpec row index differs).
+    This is the TPU analogue of the paper's DOP-parallel datapath serving
+    many links at once: one kernel grid, many tenants.
+
+    The "ref" backend has no batched-weights kernel; it falls back to a
+    per-row loop (kept so every backend can be served and tested).
+    """
+    if not engines:
+        raise ValueError("stacked_engine_fn needs at least one engine")
+    e0 = engines[0]
+    key = e0.group_key()
+    for e in engines[1:]:
+        if e.group_key() != key:
+            raise ValueError(
+                f"engines are not batch-compatible: {e.group_key()} != {key}")
+    if len(engines) == 1:
+        return lambda x: e0(x)
+    if e0.backend == "ref":
+        fns = [e._make_fn(e.resolved_tile_m()) for e in engines]
+        return lambda x: jnp.concatenate(
+            [fn(x[i:i + 1]) for i, fn in enumerate(fns)], axis=0)
+
+    per = [e._layer_weights() for e in engines]
+    stacked = tuple(
+        (jnp.stack([p[layer][0] for p in per]),
+         jnp.stack([p[layer][1] for p in per]))
+        for layer in range(len(per[0])))
+    tile_m = e0.resolved_tile_m()
+    strides = e0._strides
+    if e0.backend == "fused_fp32":
+        from ..kernels.cnn_eq.cnn_eq import cnn_eq_fused
+        return lambda x: cnn_eq_fused(x, stacked, strides, tile_m=tile_m,
+                                      interpret=e0.interpret)
+    if e0.backend == "fused_bf16":
+        from ..kernels.cnn_eq.cnn_eq import cnn_eq_fused_bf16
+        return lambda x: cnn_eq_fused_bf16(x, stacked, strides,
+                                           tile_m=tile_m,
+                                           interpret=e0.interpret)
+    from ..kernels.cnn_eq.cnn_eq import cnn_eq_fused_int8
+    return lambda x: cnn_eq_fused_int8(x, stacked, strides, e0.formats,
+                                       tile_m=tile_m, interpret=e0.interpret)

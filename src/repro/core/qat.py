@@ -176,6 +176,23 @@ def _format_dtype(total_bits: int) -> str:
     return "float32"
 
 
+def plan_backend(plan: Dict[str, Any]) -> str:
+    """Map a deployment plan to the engine backend that serves it natively.
+
+    all layers int8        → "fused_int8"   (int8 MXU dots, int32 accum)
+    all layers ≤ 16 bits   → "fused_bf16"   (bf16 MXU dots, fp32 accum —
+                              bf16's exponent covers any learned int width,
+                              its 8-bit mantissa the 9–16-bit fractions)
+    anything wider         → "fused_fp32"
+    """
+    dts = set(plan["dtypes"].values())
+    if dts <= {"int8"}:
+        return "fused_int8"
+    if dts <= {"int8", "bfloat16"}:
+        return "fused_bf16"
+    return "fused_fp32"
+
+
 def deployment_plan(qparams: Dict[str, Any]) -> Dict[str, Any]:
     """Summarize how a trained quantizer deploys on the TPU datapath.
 

@@ -52,7 +52,7 @@ import jax
 import jax.numpy as jnp
 import jax.experimental.pallas as pl
 
-from .ref import conv_valid_taps, receptive_halo
+from .ref import conv_valid_taps, conv_valid_taps_bf16, receptive_halo
 
 
 def _layer_spans(tile_m: int, kernels: Sequence[int],
@@ -64,8 +64,29 @@ def _layer_spans(tile_m: int, kernels: Sequence[int],
     return list(reversed(spans))  # spans[0] = input samples per tile
 
 
+def _layer_wb(w_ref, b_ref):
+    """Read one layer's (w, b) block, squeezing the per-row tenant dim.
+
+    Weights arrive either SHARED across the batch (w: (C_out, C_in, K),
+    b: (C_out,) — every grid row sees the same block) or STACKED per row
+    (w: (1, C_out, C_in, K), b: (1, C_out) — the BlockSpec selected THIS
+    row's tenant weights). The kernel math is identical after the squeeze;
+    this is what lets one fused launch serve many tenants (repro.serve).
+    """
+    w = w_ref[...]
+    b = b_ref[...]
+    if w.ndim == 4:
+        w = w[0]
+    if b.ndim == 2:
+        b = b[0]
+    return w, b
+
+
 def _cnn_eq_kernel(x_ref, *refs, tile_m: int, in_tile: int, kernels, strides,
-                   v_parallel: int):
+                   v_parallel: int, conv_fn=conv_valid_taps):
+    """Float kernel body; conv_fn picks the datapath — `conv_valid_taps`
+    (fp32) or `conv_valid_taps_bf16` (bf16 dots, fp32 accum) — mirroring
+    the conv_fn parameterization of the oracle (`ref._stack_valid`)."""
     n_layers = len(kernels)
     w_refs = refs[:-1][0::2]
     b_refs = refs[:-1][1::2]
@@ -78,8 +99,8 @@ def _cnn_eq_kernel(x_ref, *refs, tile_m: int, in_tile: int, kernels, strides,
     start = pl.program_id(1) * (tile_m * total_stride)
     h = x_ref[:, pl.ds(start, in_tile)].astype(jnp.float32)  # (1, in_tile)
     for i in range(n_layers):
-        h = conv_valid_taps(h, w_refs[i][...], b_refs[i][...], strides[i],
-                            spans[i + 1])
+        w, b = _layer_wb(w_refs[i], b_refs[i])
+        h = conv_fn(h, w, b, strides[i], spans[i + 1])
         if i < n_layers - 1:
             h = jax.nn.relu(h)
     # (V_p, tile_m) → interleave channels: symbol s = m·V_p + c
@@ -87,12 +108,25 @@ def _cnn_eq_kernel(x_ref, *refs, tile_m: int, in_tile: int, kernels, strides,
     o_ref[...] = y.astype(o_ref.dtype)
 
 
-def _requant(h: jnp.ndarray, a_int: int, a_frac: int) -> jnp.ndarray:
-    """fp32 → int8 on the Q(a_int).(a_frac) grid (values are x·2^a_frac)."""
+def requant_int8(h: jnp.ndarray, a_int: int, a_frac: int) -> jnp.ndarray:
+    """fp32 → int8 on the Q(a_int).(a_frac) grid (values are x·2^a_frac).
+
+    Idempotent through `dequant_int8`: requant(dequant(q)) == q exactly
+    (power-of-two scale, round of an on-grid value). The int8 kernel uses it
+    between layers; `parallel.halo` uses it to ship int8 halo samples.
+    """
     hi = float(2 ** (a_int + a_frac)) - 1.0
     lo = -float(2 ** (a_int + a_frac))
     q = jnp.clip(jnp.round(h * float(2.0 ** a_frac)), lo, hi)
     return q.astype(jnp.int8)
+
+
+def dequant_int8(q: jnp.ndarray, a_frac: int) -> jnp.ndarray:
+    """int8 grid values → fp32 real units (inverse scale of requant_int8)."""
+    return q.astype(jnp.float32) * float(2.0 ** -a_frac)
+
+
+_requant = requant_int8          # kernel-internal alias
 
 
 def _cnn_eq_kernel_int8(x_ref, *refs, tile_m: int, in_tile: int, kernels,
@@ -111,7 +145,7 @@ def _cnn_eq_kernel_int8(x_ref, *refs, tile_m: int, in_tile: int, kernels,
     for i in range(n_layers):
         wi, wf, ai, af = formats[i]
         hq = _requant(h, ai, af)                     # fused requantization
-        w = w_refs[i][...]
+        w, b = _layer_wb(w_refs[i], b_refs[i])
         n_out = spans[i + 1]
         k = w.shape[-1]
         acc = jnp.zeros((w.shape[0], n_out), jnp.int32)
@@ -123,7 +157,7 @@ def _cnn_eq_kernel_int8(x_ref, *refs, tile_m: int, in_tile: int, kernels,
                                     preferred_element_type=jnp.int32)
         # exact power-of-two rescale back to real units, then fp32 bias
         h = acc.astype(jnp.float32) * float(2.0 ** -(wf + af)) \
-            + b_refs[i][...].astype(jnp.float32)[:, None]
+            + b.astype(jnp.float32)[:, None]
         if i < n_layers - 1:
             h = jax.nn.relu(h)
     y = jnp.swapaxes(h, 0, 1).reshape(1, tile_m * v_parallel)
@@ -132,12 +166,23 @@ def _cnn_eq_kernel_int8(x_ref, *refs, tile_m: int, in_tile: int, kernels,
 
 def _fused_call(kernel_body, x, weights, strides, tile_m, interpret,
                 **kernel_kwargs):
-    """Shared grid/BlockSpec plumbing for the fp32 and int8 kernel bodies."""
+    """Shared grid/BlockSpec plumbing for all fused kernel bodies.
+
+    Weights are either SHARED — w: (C_out, C_in, K) broadcast to every batch
+    row — or STACKED per row — w: (B, C_out, C_in, K), b: (B, C_out), batch
+    row i computed with weight set i. The stacked form is the multi-tenant
+    serving path: one launch, per-tenant weights selected by the BlockSpec.
+    """
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     batch, width = x.shape
+    stacked = weights[0][0].ndim == 4
+    if stacked and int(weights[0][0].shape[0]) != batch:
+        raise ValueError(
+            f"stacked weights carry {int(weights[0][0].shape[0])} rows but "
+            f"x has batch {batch}")
     kernels = tuple(int(w.shape[-1]) for w, _ in weights)
-    v_parallel = int(weights[-1][0].shape[0])
+    v_parallel = int(weights[-1][0].shape[1 if stacked else 0])
     total_stride = 1
     for s in strides:
         total_stride *= s
@@ -157,8 +202,14 @@ def _fused_call(kernel_body, x, weights, strides, tile_m, interpret,
     in_specs = [pl.BlockSpec((1, xp.shape[1]), lambda ib, it: (ib, 0))]
     for w, b in weights:
         flat += [w, b]
-        in_specs += [pl.BlockSpec(w.shape, lambda ib, it: (0, 0, 0)),
-                     pl.BlockSpec(b.shape, lambda ib, it: (0,))]
+        if stacked:
+            in_specs += [pl.BlockSpec((1,) + w.shape[1:],
+                                      lambda ib, it: (ib, 0, 0, 0)),
+                         pl.BlockSpec((1, b.shape[1]),
+                                      lambda ib, it: (ib, 0))]
+        else:
+            in_specs += [pl.BlockSpec(w.shape, lambda ib, it: (0, 0, 0)),
+                         pl.BlockSpec(b.shape, lambda ib, it: (0,))]
 
     out = pl.pallas_call(
         functools.partial(kernel_body, tile_m=tile_m, in_tile=in_tile,
@@ -184,9 +235,39 @@ def cnn_eq_fused(x: jnp.ndarray,
     """Fused fp32 equalizer forward. x: (B, W) → (B, W//N_os) symbols.
 
     weights: ((w_1, b_1), …, (w_L, b_L)) — BN pre-folded (equalizer.fold_bn).
-    strides: (V_p, 1, …, N_os). Output length = W // (V_p·N_os) · V_p.
+    Shared (w: (C_out, C_in, K)) or per-row stacked (w: (B, C_out, C_in, K))
+    — see `_fused_call`. strides: (V_p, 1, …, N_os).
+    Output length = W // (V_p·N_os) · V_p.
     """
     return _fused_call(_cnn_eq_kernel, x, weights, strides, tile_m, interpret)
+
+
+def cast_weights_bf16(
+        weights: Tuple[Tuple[jnp.ndarray, jnp.ndarray], ...],
+) -> Tuple[Tuple[jnp.ndarray, jnp.ndarray], ...]:
+    """Host-side bf16 deployment cast: fp32 folded weights → bf16; biases
+    stay fp32 (full-width accumulators, like the int8 path)."""
+    return tuple((w.astype(jnp.bfloat16), b.astype(jnp.float32))
+                 for w, b in weights)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("strides", "tile_m", "interpret"))
+def cnn_eq_fused_bf16(x: jnp.ndarray,
+                      bweights: Tuple[Tuple[jnp.ndarray, jnp.ndarray], ...],
+                      strides: Tuple[int, ...], tile_m: int = 64,
+                      interpret: bool | None = None) -> jnp.ndarray:
+    """Fused bf16 equalizer forward: bf16 tap dots, fp32 accumulation.
+
+    The deployment path for QAT formats in the 9–16-bit range
+    (`qat.deployment_dtype() == "bfloat16"`). bweights from
+    `cast_weights_bf16` (fp32 weights also accepted — cast in-kernel).
+    Matches the pure-jnp oracle `ref.cnn_eq_bf16` bitwise (shared
+    `conv_valid_taps_bf16` tap math). Shared or per-row stacked weights,
+    like `cnn_eq_fused`.
+    """
+    return _fused_call(_cnn_eq_kernel, x, bweights, strides, tile_m,
+                       interpret, conv_fn=conv_valid_taps_bf16)
 
 
 def quantize_weights_int8(

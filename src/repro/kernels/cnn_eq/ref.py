@@ -61,10 +61,56 @@ def conv_valid_taps(h: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
     return acc + b.astype(jnp.float32)[:, None]
 
 
+def conv_valid_taps_bf16(h: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                         stride: int, n_out: int) -> jnp.ndarray:
+    """bf16 variant of `conv_valid_taps`: bf16 MXU dots, fp32 accumulation.
+
+    Inputs and weights are cast to bfloat16 immediately before each tap dot
+    (weights may already be bf16 — the cast is then a no-op); the accumulator,
+    bias add, and the activations BETWEEN layers stay fp32. This is the
+    deployment datapath for QAT formats in the 9–16-bit range
+    (`qat.deployment_dtype() == "bfloat16"`): bf16's 8-bit mantissa covers the
+    learned fraction widths and its exponent covers any integer width, so no
+    clipping/saturation logic is needed. Shared by the pure-jnp oracle
+    (`cnn_eq_bf16`) and the fused Pallas kernel — same dots, same order.
+    """
+    k = w.shape[-1]
+    hb = h.astype(jnp.bfloat16)
+    wb = w.astype(jnp.bfloat16)
+    acc = jnp.zeros((w.shape[0], n_out), jnp.float32)
+    for kk in range(k):
+        xk = jax.lax.slice(hb, (0, kk),
+                           (hb.shape[0], kk + (n_out - 1) * stride + 1),
+                           (1, stride))
+        acc = acc + jax.lax.dot(wb[:, :, kk], xk,
+                                preferred_element_type=jnp.float32)
+    return acc + b.astype(jnp.float32)[:, None]
+
+
+def _halo_pad(x: jnp.ndarray, kernels: Sequence[int],
+              strides: Sequence[int]):
+    """Stream-semantics padding shared by every oracle: ONE halo of zeros
+    on the left, zeros on the right up to the last position's window."""
+    halo = receptive_halo(kernels, strides)
+    total_stride = 1
+    for s in strides:
+        total_stride *= s
+    n_pos = x.shape[1] // total_stride
+    need = (n_pos - 1) * total_stride + 2 * halo + 1
+    xp = jnp.pad(x, ((0, 0), (halo, max(0, need - x.shape[1] - halo))))
+    return xp, n_pos
+
+
 def _stack_valid(x_row: jnp.ndarray,
                  weights: Sequence[Tuple[jnp.ndarray, jnp.ndarray]],
-                 strides: Sequence[int], n_pos: int) -> jnp.ndarray:
-    """Run the halo-padded layer stack on one stream: (W_pad,) → (n_syms,)."""
+                 strides: Sequence[int], n_pos: int,
+                 conv_fn=conv_valid_taps) -> jnp.ndarray:
+    """Run the halo-padded layer stack on one stream: (W_pad,) → (n_syms,).
+
+    conv_fn picks the datapath: `conv_valid_taps` (fp32, the default) or
+    `conv_valid_taps_bf16` — the surrounding span/ReLU machinery is the
+    single shared definition of stream semantics.
+    """
     n_layers = len(weights)
     spans = [n_pos]
     for (w, _), s in zip(reversed(list(weights)), reversed(list(strides))):
@@ -72,7 +118,7 @@ def _stack_valid(x_row: jnp.ndarray,
     spans = spans[::-1]
     h = x_row[None, :].astype(jnp.float32)          # (C_in=1, W_pad)
     for i, ((w, b), s) in enumerate(zip(weights, strides)):
-        h = conv_valid_taps(h, w, b, s, spans[i + 1])
+        h = conv_fn(h, w, b, s, spans[i + 1])
         if i < n_layers - 1:
             h = jax.nn.relu(h)
     return jnp.swapaxes(h, 0, 1).reshape(-1)        # (n_pos · V_p,)
@@ -82,13 +128,7 @@ def cnn_eq(x: jnp.ndarray, weights: Sequence[Tuple[jnp.ndarray, jnp.ndarray]],
            strides: Sequence[int]) -> jnp.ndarray:
     """x: (B, W) waveform → (B, W//(∏strides)·V_p) symbols (stream semantics)."""
     kernels = [int(w.shape[-1]) for w, _ in weights]
-    halo = receptive_halo(kernels, strides)
-    total_stride = 1
-    for s in strides:
-        total_stride *= s
-    n_pos = x.shape[1] // total_stride
-    need = (n_pos - 1) * total_stride + 2 * halo + 1
-    xp = jnp.pad(x, ((0, 0), (halo, max(0, need - x.shape[1] - halo))))
+    xp, n_pos = _halo_pad(x, kernels, strides)
     y = jax.vmap(lambda row: _stack_valid(row, weights, strides, n_pos))(xp)
     return y.astype(x.dtype)
 
@@ -118,13 +158,7 @@ def cnn_eq_quant(x: jnp.ndarray,
     fp32. Biases stay fp32 (the FPGA keeps full-width accumulators).
     """
     kernels = [int(w.shape[-1]) for w, _ in weights]
-    halo = receptive_halo(kernels, strides)
-    total_stride = 1
-    for s in strides:
-        total_stride *= s
-    n_pos = x.shape[1] // total_stride
-    need = (n_pos - 1) * total_stride + 2 * halo + 1
-    xp = jnp.pad(x, ((0, 0), (halo, max(0, need - x.shape[1] - halo))))
+    xp, n_pos = _halo_pad(x, kernels, strides)
 
     spans = [n_pos]
     for k, s in zip(reversed(kernels), reversed(list(strides))):
@@ -145,3 +179,21 @@ def cnn_eq_quant(x: jnp.ndarray,
         return jnp.swapaxes(h, 0, 1).reshape(-1)
 
     return jax.vmap(one)(xp).astype(x.dtype)
+
+
+def cnn_eq_bf16(x: jnp.ndarray,
+                weights: Sequence[Tuple[jnp.ndarray, jnp.ndarray]],
+                strides: Sequence[int]) -> jnp.ndarray:
+    """bf16-datapath stream-semantics forward — the fused_bf16 oracle.
+
+    Same halo/VALID structure as `cnn_eq` (shared `_stack_valid`
+    machinery), but every conv runs through `conv_valid_taps_bf16` (bf16
+    dots, fp32 accum). Weights may be fp32 (cast there) or pre-cast bf16
+    (the engine's deployment form) — both give identical results because
+    the cast is idempotent.
+    """
+    kernels = [int(w.shape[-1]) for w, _ in weights]
+    xp, n_pos = _halo_pad(x, kernels, strides)
+    y = jax.vmap(lambda row: _stack_valid(row, weights, strides, n_pos,
+                                          conv_fn=conv_valid_taps_bf16))(xp)
+    return y.astype(x.dtype)

@@ -1,0 +1,22 @@
+"""Multi-tenant streaming equalizer serving runtime (see runtime.py).
+
+Layers:
+  chunker    — stateful overlap-save: arbitrary chunk sizes, offline-exact
+  pool       — LRU-bounded engine pool (session-manager memory bound)
+  session    — TenantSpec / Session / SessionManager
+  scheduler  — BatchPolicy / MicroBatcher: dynamic micro-batching into
+               stacked fused-kernel launches with per-row tenant weights
+  runtime    — ServeRuntime facade
+  loadgen    — reproducible tenant traffic for benches/examples
+"""
+from .chunker import ChunkPlan, StreamChunker
+from .loadgen import chop, random_waveforms, replay
+from .pool import EnginePool
+from .runtime import ServeRuntime
+from .scheduler import BatchPolicy, MicroBatcher, Request
+from .session import Session, SessionManager, TenantSpec
+
+__all__ = ["BatchPolicy", "ChunkPlan", "EnginePool", "MicroBatcher",
+           "Request", "ServeRuntime", "Session", "SessionManager",
+           "StreamChunker", "TenantSpec", "chop", "random_waveforms",
+           "replay"]

@@ -1,0 +1,155 @@
+"""Stateful overlap-save chunking — streaming ⇒ offline equivalence.
+
+A tenant streams waveform samples in ARBITRARY chunk sizes (including chunks
+smaller than the receptive field); the serving runtime must emit exactly the
+symbols the offline engine would produce on the concatenated stream —
+bitwise for the fp32/bf16 datapaths, ≤1 LSB (observed: bitwise) for int8.
+
+This is the paper's OGM/ORM overlap machinery turned stateful: instead of
+splitting one long recorded stream into overlapped chunks (stream_partition),
+the chunker carries the receptive-field tail of an UNBOUNDED stream between
+arrivals.
+
+How bitwise equivalence is achieved
+-----------------------------------
+The fused kernel computes output position p (one network pass = V_p symbols)
+from the input window  x[p·ts − halo, p·ts + halo]  (ts = V_p·N_os samples
+per pass, halo = half a receptive field in samples), processing positions in
+tiles of `tile_m` with identical per-tile shapes everywhere in the stream.
+Each output element is an independent chain of tap dots over its own window
+— no cross-position reduction — so an element's value depends ONLY on
+
+  (a) its window's sample values, and
+  (b) its position WITHIN a tile (which fixes the op shapes around it).
+
+The chunker therefore keeps its carry aligned to TILE boundaries: the buffer
+always starts at a sample offset  o = o_pos·ts  with  o_pos ≡ 0 (mod
+tile_m), so every position lands in the same tile column as in the offline
+call, and its window content is identical ⇒ bitwise-equal output. The
+positions recomputed for alignment/context (≤ tile_m + ⌈halo/ts⌉ per launch)
+are sliced off before emission.
+
+`StreamChunker` is pure bookkeeping (numpy, host-side) — it never runs the
+engine. It hands out `ChunkPlan`s: (engine input row, positions to skip,
+positions to emit); the micro-batcher pads plans from many tenants to a
+common width bucket and runs them as ONE stacked fused launch.
+
+One boundary: the bitwise contract is against an offline call that
+actually tiles at `tile_m` — for a TOTAL stream shorter than one tile the
+offline kernel shrinks its tile to the stream (`tile_m = min(tile_m,
+n_pos)` in `_fused_call`) while serve launches keep full-tile buckets, so
+such micro-streams agree to ~1 ULP instead (int8 stays exact either way).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ChunkPlan:
+    """One pending engine launch for one tenant stream.
+
+    data:    (W,) fp32 engine input — carry + new samples (+ flush padding).
+    skip:    leading output positions to DROP (alignment/context recompute).
+    n_emit:  output positions to emit after `skip` (V_p symbols each).
+    """
+    data: np.ndarray
+    skip: int
+    n_emit: int
+
+    @property
+    def width(self) -> int:
+        return int(self.data.shape[0])
+
+
+class StreamChunker:
+    """Carries the receptive-field tail of one tenant's sample stream.
+
+    halo:         half receptive field, in samples (engine.halo_samples).
+    total_stride: samples consumed per output position (engine.total_stride).
+    tile_m:       the engine's resolved tile width — carry stays tile-aligned
+                  so chunked output is bitwise-equal to offline (see module
+                  docstring).
+    """
+
+    def __init__(self, halo: int, total_stride: int, tile_m: int):
+        if total_stride <= 0 or tile_m <= 0 or halo < 0:
+            raise ValueError("halo ≥ 0, total_stride ≥ 1, tile_m ≥ 1")
+        self.halo = halo
+        self.ts = total_stride
+        self.tile_m = tile_m
+        # positions needed as left context before the next unemitted one
+        self._ctx_pos = -(-halo // total_stride)           # ceil
+        self._buf = np.zeros((0,), np.float32)
+        self._o_pos = 0          # global position index of buf sample 0
+        self._next_pos = 0       # next global position to emit
+        self._total_samples = 0  # total samples pushed so far
+        self.finished = False
+
+    # -- stream input ------------------------------------------------------
+
+    def push(self, samples: np.ndarray) -> None:
+        """Append a chunk of waveform samples (any length ≥ 0)."""
+        if self.finished:
+            raise RuntimeError("stream already finished")
+        s = np.asarray(samples, np.float32).reshape(-1)
+        self._buf = np.concatenate([self._buf, s])
+        self._total_samples += s.shape[0]
+
+    def finish(self) -> None:
+        """Mark end-of-stream: remaining positions flush with zero right-
+        padding, exactly like the offline engine pads its stream tail."""
+        self.finished = True
+
+    # -- launch planning ---------------------------------------------------
+
+    def pending_positions(self) -> int:
+        """Positions ready to emit right now (full real-sample windows; at
+        end-of-stream, everything up to ⌊total/ts⌋ — the offline count)."""
+        if self.finished:
+            total = self._total_samples // self.ts
+            return max(0, total - self._next_pos)
+        n = self._buf.shape[0]
+        if n <= self.halo:
+            return 0
+        avail = (n - 1 - self.halo) // self.ts + 1         # windows complete
+        avail = min(avail, n // self.ts)                   # engine computes
+        return max(0, avail - (self._next_pos - self._o_pos))
+
+    def plan(self) -> Optional[ChunkPlan]:
+        """Build the next launch plan, or None if nothing is emittable."""
+        n_emit = self.pending_positions()
+        if n_emit == 0:
+            return None
+        skip = self._next_pos - self._o_pos
+        data = self._buf
+        need = (skip + n_emit) * self.ts                   # engine n_pos cover
+        if data.shape[0] < need:                           # flush tail pad
+            data = np.concatenate(
+                [data, np.zeros((need - data.shape[0],), np.float32)])
+        return ChunkPlan(data=data, skip=skip, n_emit=n_emit)
+
+    def commit(self, plan: ChunkPlan) -> None:
+        """Advance the stream past `plan` and trim the carry tile-aligned."""
+        self._next_pos += plan.n_emit
+        # keep ≥ ctx_pos positions of context, rounded DOWN to a tile edge
+        new_o = max(0, ((self._next_pos - self._ctx_pos)
+                        // self.tile_m) * self.tile_m)
+        new_o = max(new_o, self._o_pos)                    # monotonic
+        drop = (new_o - self._o_pos) * self.ts
+        if drop:
+            self._buf = self._buf[drop:]
+            self._o_pos = new_o
+
+    # -- introspection -----------------------------------------------------
+
+    @property
+    def carry_samples(self) -> int:
+        return int(self._buf.shape[0])
+
+    @property
+    def emitted_positions(self) -> int:
+        return self._next_pos

@@ -1,0 +1,57 @@
+"""Keyed, LRU-bounded engine pool — the session manager's memory bound.
+
+Millions of tenants cannot all keep a live `EqualizerEngine` (folded fp32
+weights + backend-specific quantized copies) resident. The pool holds at
+most `max_engines` built engines, keyed by tenant identity; a hit refreshes
+recency, a miss builds via the caller-supplied factory and evicts the least
+recently used entry. Evicting an engine loses NO stream state — chunker
+carries live in the `Session`, and the factory rebuilds the engine
+deterministically from the tenant's spec (BN folding and weight
+quantization are pure functions of the trained params).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Callable, Dict, Hashable
+
+
+class EnginePool:
+    """LRU cache of built engines: key → engine (max_engines bound)."""
+
+    def __init__(self, max_engines: int = 32):
+        if max_engines < 1:
+            raise ValueError("max_engines must be ≥ 1")
+        self.max_engines = max_engines
+        self._entries: "OrderedDict[Hashable, Any]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key: Hashable, build: Callable[[], Any]) -> Any:
+        """Return the cached engine for `key`, building (and possibly
+        evicting the LRU entry) on a miss."""
+        if key in self._entries:
+            self.hits += 1
+            self._entries.move_to_end(key)
+            return self._entries[key]
+        self.misses += 1
+        engine = build()
+        self._entries[key] = engine
+        if len(self._entries) > self.max_engines:
+            self._entries.popitem(last=False)          # evict LRU
+            self.evictions += 1
+        return engine
+
+    def __contains__(self, key: Hashable) -> bool:     # no recency touch
+        return key in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def drop(self, key: Hashable) -> None:
+        self._entries.pop(key, None)
+
+    def stats(self) -> Dict[str, int]:
+        return {"size": len(self._entries), "max_engines": self.max_engines,
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions}

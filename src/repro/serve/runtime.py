@@ -1,0 +1,94 @@
+"""ServeRuntime — the multi-tenant streaming equalizer serving facade.
+
+    rt = ServeRuntime(BatchPolicy(max_batch=8, max_wait_s=2e-3))
+    rt.open(TenantSpec("link-a", cfg, params=params_a))
+    rt.open(TenantSpec("link-b", cfg, params=params_b))
+    ...
+    rt.submit("link-a", samples)        # arbitrary chunk sizes
+    rt.submit("link-b", samples)        # coalesced into one fused launch
+    ...
+    rt.pump()                           # honour max_wait while idle
+    syms = rt.close("link-a")           # flush tail, return the stream
+
+Single-threaded and synchronous by design: launches happen inside
+`submit`/`pump`/`drain` on the caller's thread, which keeps results
+deterministic (bitwise-reproducible vs the offline engine — the tier-1
+test surface) while still modelling the real coalescing policy with
+timestamps. An async front-end would merely move WHERE pump() is called.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+from .pool import EnginePool
+from .scheduler import BatchPolicy, MicroBatcher, Request
+from .session import Session, SessionManager, TenantSpec
+
+
+class ServeRuntime:
+    def __init__(self, policy: Optional[BatchPolicy] = None,
+                 max_engines: int = 32,
+                 clock: Callable[[], float] = time.perf_counter):
+        self.sessions = SessionManager(max_engines=max_engines)
+        self.batcher = MicroBatcher(policy, clock=clock)
+
+    # -- tenant lifecycle --------------------------------------------------
+
+    def open(self, spec: TenantSpec) -> Session:
+        """Admit a tenant: build (or pool-hit) its engine, start a stream."""
+        return self.sessions.open(spec)
+
+    def close(self, tenant_id: str) -> np.ndarray:
+        """End a tenant's stream: flush the receptive-field tail, launch
+        ONLY this tenant's pending requests (other tenants' partial
+        batches keep waiting for their policy), release the session;
+        returns the full symbol stream (identical to the offline engine
+        on the whole waveform)."""
+        self.finish(tenant_id)
+        self.batcher.flush_session(self.sessions.get(tenant_id))
+        return self.sessions.close(tenant_id).output()
+
+    # -- streaming ---------------------------------------------------------
+
+    def submit(self, tenant_id: str, samples) -> Optional[Request]:
+        """Feed a chunk of waveform samples; may trigger batched launches
+        (max_batch reached, or another group's max_wait expired)."""
+        s = self.sessions.get(tenant_id)
+        s.chunker.push(np.asarray(samples))
+        req = self.batcher.enqueue(s)
+        self.batcher.pump()
+        return req
+
+    def finish(self, tenant_id: str) -> Optional[Request]:
+        """End-of-stream marker: queue the zero-padded tail flush."""
+        s = self.sessions.get(tenant_id)
+        if not s.chunker.finished:
+            s.chunker.finish()
+        return self.batcher.enqueue(s)
+
+    def pump(self) -> int:
+        """Time-based flush (call while idle to honour max_wait_s)."""
+        return self.batcher.pump()
+
+    def drain(self) -> int:
+        """Launch every pending request now."""
+        return self.batcher.drain()
+
+    def output(self, tenant_id: str) -> np.ndarray:
+        return self.sessions.get(tenant_id).output()
+
+    # -- accounting --------------------------------------------------------
+
+    @property
+    def pool(self) -> EnginePool:
+        return self.sessions.pool
+
+    def stats(self) -> Dict:
+        st = {"tenants": len(self.sessions),
+              "pending": self.batcher.pending(),
+              "pool": self.pool.stats()}
+        st.update(self.batcher.latency_stats())
+        return st

@@ -1,0 +1,249 @@
+"""Dynamic micro-batching — many tenant streams, one fused-kernel launch.
+
+The paper's FPGA hits its throughput target by instantiating N_i parallel
+CNN instances and streaming one link through each; the GPU baseline it beats
+by three orders of magnitude loses exactly because small per-link calls
+cannot fill the device. The TPU serving answer is the same shape as the
+FPGA's: keep the datapath full by running MANY links per launch — here by
+stacking the pending chunks of all tenants that share a `group_key()`
+(topology + backend + static kernel config) into one batched fused kernel
+with per-row tenant weights (`core.engine.stacked_engine_fn`).
+
+Coalescing policy (the classic dynamic-batching trade-off):
+  * max_batch   — launch as soon as this many tenant chunks are pending
+                  in a group (throughput knob);
+  * max_wait_s  — … or as soon as the OLDEST pending chunk has waited this
+                  long (tail-latency knob);
+  * `drain()`   — launch everything now (end of stream / shutdown).
+
+Every request carries submit/launch/done timestamps; `latency_stats()`
+reports p50/p99 queueing and total latency plus batch-occupancy history —
+the numbers `benchmarks/bench_serve.py` publishes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.engine import stacked_engine_fn
+from .chunker import ChunkPlan
+from .session import Session
+
+_CONSUMED = np.zeros((0,), np.float32)     # placeholder for launched inputs
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchPolicy:
+    max_batch: int = 8           # coalesce up to this many tenant chunks
+    max_wait_s: float = 2e-3     # flush when the oldest waits this long
+    width_bucket: int = 0        # row padding quantum; 0 → tile_m·ts (auto)
+
+
+@dataclasses.dataclass
+class Request:
+    """One tenant chunk queued for a batched launch."""
+    session: Session
+    plan: ChunkPlan
+    t_submit: float
+    t_launch: float = 0.0
+    t_done: float = 0.0
+    batch_size: int = 0
+    symbols: Optional[np.ndarray] = None
+
+    @property
+    def done(self) -> bool:
+        return self.symbols is not None
+
+    @property
+    def wait_s(self) -> float:
+        return self.t_launch - self.t_submit
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_done - self.t_submit
+
+
+class MicroBatcher:
+    """Groups pending requests by engine `group_key()` and launches them as
+    stacked fused calls under the max-batch / max-wait policy."""
+
+    # stacked-fn cache bound: steady-state traffic cycles through few
+    # distinct (ordered) tenant sets; 64 covers many groups without
+    # pinning unbounded weight stacks
+    FN_CACHE_MAX = 64
+    # latency records kept for stats — a bounded window, not the full
+    # history (unbounded streams would otherwise leak one Request, with
+    # its symbols array, per chunk forever)
+    COMPLETED_MAX = 8192
+
+    def __init__(self, policy: Optional[BatchPolicy] = None,
+                 clock: Callable[[], float] = time.perf_counter):
+        self.policy = policy or BatchPolicy()
+        self.clock = clock
+        self._groups: Dict[Tuple, List[Request]] = {}
+        # (id(engine), …) → (engine refs, stacked fn). Holding the refs
+        # keeps the ids valid; bounded FIFO so evicted engines can be GC'd.
+        self._fn_cache: "Dict[Tuple, Tuple[list, Callable]]" = {}
+        self.completed: Deque[Request] = deque(maxlen=self.COMPLETED_MAX)
+        self.batch_sizes: Deque[int] = deque(maxlen=self.COMPLETED_MAX)
+        self.total_requests = 0
+        self.launches = 0
+
+    # -- queueing ----------------------------------------------------------
+
+    def enqueue(self, session: Session) -> Optional[Request]:
+        """Turn the session's pending stream samples into a queued request
+        (None if the chunker has nothing emittable yet).
+
+        The chunker commits here — at enqueue, not at launch — so a tenant
+        can queue several requests back-to-back without double-planning the
+        same positions. That is safe because a plan is a self-contained
+        input snapshot: a failed launch re-queues its requests (see pump /
+        flush_session) and never needs the chunker rewound.
+        """
+        plan = session.chunker.plan()
+        if plan is None:
+            return None
+        session.chunker.commit(plan)
+        req = Request(session=session, plan=plan, t_submit=self.clock())
+        key = session.engine.group_key()
+        self._groups.setdefault(key, []).append(req)
+        return req
+
+    def pending(self) -> int:
+        return sum(len(v) for v in self._groups.values())
+
+    # -- policy / launching ------------------------------------------------
+
+    def pump(self, force: bool = False) -> int:
+        """Launch every group that meets the policy (or all, if force).
+        Returns the number of launches performed."""
+        now = self.clock()
+        n = 0
+        for key in list(self._groups):
+            reqs = self._groups[key]
+            while reqs and (
+                    force
+                    or len(reqs) >= self.policy.max_batch
+                    or now - reqs[0].t_submit >= self.policy.max_wait_s):
+                take = reqs[:self.policy.max_batch]
+                del reqs[:self.policy.max_batch]
+                try:
+                    self._launch(take)
+                except Exception:
+                    # plans are self-contained input snapshots, so a failed
+                    # launch (transient device error) is retryable: put the
+                    # requests back in order and surface the error
+                    reqs[:0] = take
+                    raise
+                n += 1
+            if not reqs:
+                del self._groups[key]
+        return n
+
+    def drain(self) -> int:
+        return self.pump(force=True)
+
+    def flush_session(self, session: Session) -> int:
+        """Launch ONLY this session's pending requests (tenant close/tail
+        flush). Other tenants' partial batches stay queued so their
+        max_batch/max_wait policy — and batch occupancy — is untouched."""
+        n = 0
+        for key in list(self._groups):
+            reqs = self._groups[key]
+            mine = [r for r in reqs if r.session is session]
+            if not mine:
+                continue
+            rest = [r for r in reqs if r.session is not session]
+            if rest:
+                self._groups[key] = rest
+            else:
+                del self._groups[key]
+            for i in range(0, len(mine), self.policy.max_batch):
+                try:
+                    self._launch(mine[i:i + self.policy.max_batch])
+                except Exception:
+                    # re-queue this tenant's unlaunched plans (retryable,
+                    # same rationale as pump)
+                    pending = mine[i:]
+                    self._groups.setdefault(key, [])[:0] = pending
+                    raise
+                n += 1
+        return n
+
+    def _bucket_width(self, reqs: List[Request]) -> int:
+        e = reqs[0].session.engine
+        tile_q = e.resolved_tile_m() * e.total_stride
+        q = self.policy.width_bucket
+        # the bucket MUST be a whole number of tiles: a sub-tile-width row
+        # would shrink the kernel's effective tile (n_pos < tile_m) and
+        # void the chunker's tile-alignment ⇒ bitwise-offline invariant,
+        # so a user quantum is rounded up to the tile quantum
+        q = tile_q if q <= 0 else (-(-q // tile_q) * tile_q)
+        w = max(r.plan.width for r in reqs)
+        return -(-w // q) * q                      # ceil to bucket quantum
+
+    def _group_fn(self, engines) -> Callable:
+        """Memoized stacked launch fn: steady-state round-robin traffic
+        re-batches the SAME engines in the SAME order every round, so the
+        per-launch weight re-stack (and its host→device transfer) is paid
+        once per tenant set, not once per launch."""
+        key = tuple(id(e) for e in engines)
+        hit = self._fn_cache.get(key)
+        if hit is not None:
+            return hit[1]
+        fn = stacked_engine_fn(engines)
+        self._fn_cache[key] = (list(engines), fn)
+        while len(self._fn_cache) > self.FN_CACHE_MAX:
+            self._fn_cache.pop(next(iter(self._fn_cache)))
+        return fn
+
+    def _launch(self, reqs: List[Request]) -> None:
+        """ONE stacked fused-kernel launch for ≤ max_batch tenant chunks."""
+        t_launch = self.clock()
+        engines = [r.session.engine for r in reqs]
+        fn = self._group_fn(engines)
+        width = self._bucket_width(reqs)
+        x = np.zeros((len(reqs), width), np.float32)
+        for i, r in enumerate(reqs):
+            x[i, :r.plan.width] = r.plan.data      # right zero-pad = offline
+        y = fn(jnp.asarray(x))
+        y = np.asarray(jax.block_until_ready(y))
+        t_done = self.clock()
+        for i, r in enumerate(reqs):
+            vp = r.session.v_parallel
+            syms = y[i, r.plan.skip * vp:(r.plan.skip + r.plan.n_emit) * vp]
+            r.symbols = syms
+            r.t_launch, r.t_done, r.batch_size = t_launch, t_done, len(reqs)
+            r.session.append_output(syms)
+            r.plan.data = _CONSUMED        # release the input buffer; the
+            self.completed.append(r)       # record keeps only timing+syms
+        self.total_requests += len(reqs)
+        self.batch_sizes.append(len(reqs))
+        self.launches += 1
+
+    # -- accounting --------------------------------------------------------
+
+    def latency_stats(self) -> Dict[str, float]:
+        """Percentiles over the last COMPLETED_MAX requests (full history
+        for any run shorter than the window, e.g. the benches)."""
+        if not self.completed:
+            return {"requests": 0}
+        lat = np.array([r.latency_s for r in self.completed])
+        wait = np.array([r.wait_s for r in self.completed])
+        occ = np.array(self.batch_sizes, np.float64)
+        return {
+            "requests": self.total_requests,
+            "launches": self.launches,
+            "mean_batch": float(occ.mean()),
+            "p50_latency_ms": float(np.percentile(lat, 50) * 1e3),
+            "p99_latency_ms": float(np.percentile(lat, 99) * 1e3),
+            "p50_wait_ms": float(np.percentile(wait, 50) * 1e3),
+            "p99_wait_ms": float(np.percentile(wait, 99) * 1e3),
+        }

@@ -1,0 +1,115 @@
+"""Tenant sessions — channel config + trained params + QAT formats → engine.
+
+A TENANT is one equalized link (an optical channel, a magnetic-recording
+head, …) with its own trained parameters and learned fixed-point formats.
+A SESSION is a tenant's live streaming state: the overlap-save chunker
+carry, output accumulator, and latency counters. Engines themselves live in
+the LRU `EnginePool` (pool.py) and are rebuilt on demand after eviction —
+sessions never pin one.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from ..core.engine import EqualizerEngine
+from ..core.equalizer import CNNEqConfig
+from .chunker import StreamChunker
+from .pool import EnginePool
+
+
+@dataclasses.dataclass
+class TenantSpec:
+    """Everything needed to (re)build a tenant's engine deterministically.
+
+    Either trained `params` (+ optional bn_state; QAT formats picked up
+    automatically → the auto backend ladder) or pre-folded `weights`
+    (+ explicit formats for int8).
+    """
+    tenant_id: str
+    cfg: CNNEqConfig
+    params: Optional[Dict[str, Any]] = None
+    bn_state: Optional[Dict[str, Any]] = None
+    weights: Optional[tuple] = None
+    formats: Optional[tuple] = None
+    backend: str = "auto"
+    tile_m: int | str = "auto"
+
+    def build_engine(self) -> EqualizerEngine:
+        if (self.params is None) == (self.weights is None):
+            raise ValueError(
+                f"tenant {self.tenant_id!r}: exactly one of params/weights")
+        if self.params is not None:
+            return EqualizerEngine.from_params(
+                self.params, self.bn_state, self.cfg,
+                backend=self.backend, tile_m=self.tile_m)
+        return EqualizerEngine(cfg=self.cfg, weights=self.weights,
+                               backend=self.backend, tile_m=self.tile_m,
+                               formats=self.formats)
+
+
+class Session:
+    """One tenant's live stream state (engine NOT held — see pool)."""
+
+    def __init__(self, spec: TenantSpec, pool: EnginePool):
+        self.spec = spec
+        self._pool = pool
+        engine = self.engine                     # build once up front …
+        self.chunker = StreamChunker(            # … to size the chunker
+            halo=engine.halo_samples,
+            total_stride=engine.total_stride,
+            tile_m=engine.resolved_tile_m())
+        self.v_parallel = engine.cfg.v_parallel
+        self._out: List[np.ndarray] = []
+        self.syms_emitted = 0
+
+    @property
+    def engine(self) -> EqualizerEngine:
+        """Fetch (or rebuild after LRU eviction) this tenant's engine."""
+        return self._pool.get(self.spec.tenant_id, self.spec.build_engine)
+
+    def append_output(self, syms: np.ndarray) -> None:
+        self._out.append(syms)
+        self.syms_emitted += int(syms.shape[0])
+
+    def output(self) -> np.ndarray:
+        """All symbols emitted so far, in stream order."""
+        if not self._out:
+            return np.zeros((0,), np.float32)
+        return np.concatenate(self._out)
+
+
+class SessionManager:
+    """tenant_id → Session registry over a shared LRU engine pool."""
+
+    def __init__(self, pool: Optional[EnginePool] = None,
+                 max_engines: int = 32):
+        self.pool = pool if pool is not None else EnginePool(max_engines)
+        self._sessions: Dict[str, Session] = {}
+
+    def open(self, spec: TenantSpec) -> Session:
+        if spec.tenant_id in self._sessions:
+            raise ValueError(f"tenant {spec.tenant_id!r} already open")
+        s = Session(spec, self.pool)
+        self._sessions[spec.tenant_id] = s
+        return s
+
+    def get(self, tenant_id: str) -> Session:
+        return self._sessions[tenant_id]
+
+    def close(self, tenant_id: str) -> Session:
+        s = self._sessions.pop(tenant_id)
+        self.pool.drop(tenant_id)
+        return s
+
+    def __contains__(self, tenant_id: str) -> bool:
+        return tenant_id in self._sessions
+
+    def __len__(self) -> int:
+        return len(self._sessions)
+
+    @property
+    def sessions(self) -> Dict[str, Session]:
+        return dict(self._sessions)

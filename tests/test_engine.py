@@ -140,6 +140,69 @@ def test_int8_kernel_rejects_wide_activation_formats():
 
 
 # ---------------------------------------------------------------------------
+# fused_bf16 vs bf16 oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cfg", [
+    HT.CNN,
+    eq.CNNEqConfig(layers=4, kernel=15, channels=4, v_parallel=4),
+])
+def test_fused_bf16_matches_oracle(cfg):
+    """bf16 kernel and oracle share conv_valid_taps_bf16 → bitwise."""
+    engine, folded = _engine(cfg, "fused_bf16", tile_m=16)
+    weights = tuple((l["w"], l["b"]) for l in folded["conv"])
+    strides = tuple(s for _, _, s in cfg.layer_specs())
+    x = jax.random.normal(KEY, (2, 1021 * cfg.n_os))         # odd length
+    got = engine(x)
+    want = cnn_ref.cnn_eq_bf16(x, weights, strides)
+    assert got.shape == want.shape
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fused_bf16_error_is_bounded():
+    """bf16 differs from fp32 only by mantissa-rounding noise, not junk."""
+    cfg = eq.CNNEqConfig()
+    eb, folded = _engine(cfg, "fused_bf16")
+    e32 = EqualizerEngine.from_folded(folded, cfg, backend="fused_fp32",
+                                      tile_m=64)
+    x = jax.random.normal(KEY, (1, 2048))
+    err = float(jnp.max(jnp.abs(eb(x) - e32(x))))
+    assert 0 < err < 0.2         # ~2^-8 relative at O(1) activations
+
+
+# ---------------------------------------------------------------------------
+# stacked multi-tenant launch (serving path)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_stacked_engine_fn_matches_individual(backend):
+    """One batched launch with per-row weights ≡ each engine run alone —
+    the bitwise contract the serve micro-batcher relies on."""
+    from repro.core.engine import stacked_engine_fn
+    cfg = eq.CNNEqConfig()
+    formats = (tuple(INT8_FMT for _ in range(cfg.layers))
+               if backend == "fused_int8" else None)
+    engines = [_engine(cfg, backend, tile_m=32, key=jax.random.PRNGKey(i),
+                       formats=formats)[0]
+               for i in range(3)]
+    fn = stacked_engine_fn(engines)
+    x = jax.random.normal(KEY, (3, 512 * cfg.n_os))
+    y = np.asarray(fn(x))
+    for i, e in enumerate(engines):
+        np.testing.assert_array_equal(y[i:i + 1],
+                                      np.asarray(e(x[i:i + 1])))
+
+
+def test_stacked_engine_fn_rejects_mixed_groups():
+    from repro.core.engine import stacked_engine_fn
+    cfg = eq.CNNEqConfig()
+    e_a, _ = _engine(cfg, "fused_fp32", tile_m=32)
+    e_b, _ = _engine(cfg, "fused_fp32", tile_m=64)          # different tile
+    with pytest.raises(ValueError, match="not batch-compatible"):
+        stacked_engine_fn([e_a, e_b])
+
+
+# ---------------------------------------------------------------------------
 # backend selection / deployment
 # ---------------------------------------------------------------------------
 
@@ -163,9 +226,12 @@ def test_auto_backend_selection():
     # learned 8-bit formats → int8
     p8 = _qat_params(cfg, 2, 5, 3, 4)
     assert EqualizerEngine.from_params(p8, bn, cfg).backend == "fused_int8"
-    # wide learned formats → graceful fp32 fallback
+    # 9–16-bit learned formats → native bf16 deployment
     p16 = _qat_params(cfg, 4, 9, 4, 9)
-    assert EqualizerEngine.from_params(p16, bn, cfg).backend == "fused_fp32"
+    assert EqualizerEngine.from_params(p16, bn, cfg).backend == "fused_bf16"
+    # wider than 16 bits → fp32
+    p32 = _qat_params(cfg, 8, 12, 8, 12)
+    assert EqualizerEngine.from_params(p32, bn, cfg).backend == "fused_fp32"
     # explicit request still honoured
     assert EqualizerEngine.from_params(p8, bn, cfg,
                                        backend="ref").backend == "ref"
@@ -176,7 +242,8 @@ def test_auto_backend_selection():
 def test_auto_backend_falls_back_when_folding_overflows_grid():
     """QAT learns Q(w_int) on UNfolded weights; trained BN stats with tiny
     running variance scale the folded weights past the learned grid. The
-    engine must refuse silent int8 saturation and fall back to fp32."""
+    engine must refuse silent int8 saturation — it deploys bf16 instead
+    (the exponent covers the overflowed range, no clipping)."""
     cfg = eq.CNNEqConfig()
     params = _qat_params(cfg, 2, 5, 3, 4)
     bn = eq.init_bn_state(cfg)
@@ -184,10 +251,13 @@ def test_auto_backend_falls_back_when_folding_overflows_grid():
     bn = {"bn": [{"mean": s["mean"], "var": 1e-4 * jnp.ones_like(s["var"])}
                  for s in bn["bn"]]}
     engine = EqualizerEngine.from_params(params, bn, cfg)
-    assert engine.backend == "fused_fp32"
+    assert engine.backend == "fused_bf16"
     # benign BN stats keep the int8 deployment
     assert EqualizerEngine.from_params(params, eq.init_bn_state(cfg),
                                        cfg).backend == "fused_int8"
+    # EXPLICIT int8 under the same overflow must refuse, not saturate
+    with pytest.raises(ValueError, match="saturate"):
+        EqualizerEngine.from_params(params, bn, cfg, backend="fused_int8")
 
 
 def test_from_params_int8_matches_fake_quant_apply():

@@ -74,6 +74,56 @@ def test_halo_apply_with_engine(repo_src):
 
 
 @pytest.mark.slow
+def test_halo_apply_int8_engine_exchanges_int8(repo_src):
+    """fused_int8 engine → the halo travels as requantized int8 (4× less
+    ppermute traffic) and the sharded result is BIT-identical to the
+    unsharded engine (requantization to the layer-0 grid is idempotent)."""
+    out = run_subprocess_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import equalizer as eq
+        from repro.core.engine import EqualizerEngine
+        from repro.parallel import halo
+
+        cfg = eq.CNNEqConfig()
+        key = jax.random.PRNGKey(0)
+        params = eq.init(key, cfg)
+        fmt = tuple((2, 5, 3, 4) for _ in range(cfg.layers))
+        folded = eq.fold_bn(params, eq.init_bn_state(cfg), cfg)
+        engine = EqualizerEngine.from_folded(
+            folded, cfg, backend="fused_int8", formats=fmt, tile_m=32)
+        assert halo._engine_halo_quant(engine) == (3, 4)
+
+        n_inst = 8
+        mesh = jax.make_mesh((n_inst,), ("data",))
+        x = jax.random.normal(key, (256 * n_inst * cfg.n_os,))
+        y_halo = halo.halo_apply(engine, x, cfg, mesh, axis="data")
+        y_whole = engine(x)
+        np.testing.assert_array_equal(np.asarray(y_halo),
+                                      np.asarray(y_whole))
+
+        # the exchanged payload really is int8: jaxpr has int8 ppermutes
+        # and no fp32 ones
+        n_inst_sub = 4
+        import jax.core
+        def body(c):
+            return halo.halo_exchange(
+                c[None, :], halo.halo_samples(cfg, n_inst_sub), "data",
+                quant=(3, 4))
+        from jax.sharding import PartitionSpec as P
+        mesh4 = jax.make_mesh((8,), ("data",))
+        jaxpr = jax.make_jaxpr(halo._shard_map(
+            lambda c: body(c)[0], mesh=mesh4, in_specs=P("data"),
+            out_specs=P("data"), check_rep=False))(x)
+        perm_dtypes = {str(e.invars[0].aval.dtype)
+                       for e in jaxpr.jaxpr.eqns[0].params["jaxpr"].eqns
+                       if e.primitive.name == "ppermute"}
+        assert perm_dtypes == {"int8"}, perm_dtypes
+        print("INT8-HALO-OK")
+    """, n_devices=8, repo_src=repo_src)
+    assert "INT8-HALO-OK" in out
+
+
+@pytest.mark.slow
 def test_halo_exchange_unit(repo_src):
     out = run_subprocess_devices("""
         import jax, jax.numpy as jnp, numpy as np

@@ -1,0 +1,303 @@
+"""Serving runtime (repro.serve) — the ISSUE-3 acceptance surface.
+
+  * chunked-streaming equivalence: a property-style sweep over chunk sizes
+    (including chunks smaller than the receptive field) asserting
+    serve output == offline engine output per backend — BITWISE for the
+    fused fp32/bf16/int8 datapaths; ≤2 ULP for "ref" (the pure-jnp oracle's
+    dot widths depend on stream length, so XLA may contract differently);
+  * engine-pool LRU eviction (rebuild-after-evict keeps streams correct);
+  * micro-batching policy: max_batch and max_wait triggers, grouping by
+    engine group_key, latency accounting;
+  * chunker unit behaviour (carry bound, tile alignment, end-of-stream).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import equalizer as eq
+from repro.core.engine import BACKENDS, EqualizerEngine
+from repro.serve import (BatchPolicy, EnginePool, ServeRuntime,
+                         StreamChunker, TenantSpec, chop)
+
+CFG = eq.CNNEqConfig()
+INT8_FMT = tuple((2, 5, 3, 4) for _ in range(CFG.layers))
+KEY = jax.random.PRNGKey(0)
+ULP_TOL = 5e-6
+
+
+def _spec(tid, backend, seed, cfg=CFG, tile_m=32):
+    params = eq.init(jax.random.PRNGKey(seed), cfg)
+    folded = eq.fold_bn(params, eq.init_bn_state(cfg), cfg)
+    return TenantSpec(
+        tid, cfg, weights=eq.folded_weights(folded),
+        formats=INT8_FMT if backend == "fused_int8" else None,
+        backend=backend, tile_m=tile_m)
+
+
+def _offline(spec, wave):
+    return np.asarray(spec.build_engine()(jnp.asarray(wave[None])))[0]
+
+
+def _replay_round_robin(rt, streams):
+    ids = list(streams)
+    iters = {t: iter(streams[t]) for t in ids}
+    live = set(ids)
+    while live:
+        for t in list(live):
+            c = next(iters[t], None)
+            if c is None:
+                live.discard(t)
+                rt.finish(t)
+            else:
+                rt.submit(t, c)
+    rt.drain()
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+# ---------------------------------------------------------------------------
+# chunked-streaming equivalence sweep
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("chunk_samples", [
+    17,       # smaller than the receptive field (halo = 68 samples)
+    160,      # a few positions per chunk, not stride-aligned
+    10_000,   # whole stream in one chunk
+])
+def test_chunked_serve_equals_offline(backend, chunk_samples):
+    n_tenants, n_syms = 2, 523                       # odd on purpose
+    rt = ServeRuntime(BatchPolicy(max_batch=n_tenants, max_wait_s=1e9))
+    specs = [_spec(f"t{i}", backend, seed=i) for i in range(n_tenants)]
+    rng = np.random.default_rng(42)
+    waves = [rng.standard_normal(n_syms * CFG.n_os).astype(np.float32)
+             for _ in range(n_tenants)]
+    for s in specs:
+        rt.open(s)
+    streams = {s.tenant_id: chop(w, chunk_samples, seed=i, jitter=0.5)
+               for i, (s, w) in enumerate(zip(specs, waves))}
+    _replay_round_robin(rt, streams)
+    for s, w in zip(specs, waves):
+        got = rt.output(s.tenant_id)
+        want = _offline(s, w)
+        assert got.shape == want.shape
+        if backend == "ref":
+            np.testing.assert_allclose(got, want, rtol=0, atol=ULP_TOL)
+        else:
+            # fused backends: BITWISE — the chunker keeps its carry tile-
+            # aligned so every emitted position repeats the offline tile
+            # computation exactly (int8 thereby also beats its ≤1-LSB bound)
+            np.testing.assert_array_equal(got, want)
+
+
+def test_chunked_serve_single_sample_trickle():
+    """Degenerate arrival pattern: 1-sample chunks still reassemble the
+    offline stream bitwise (fp32 fused)."""
+    rt = ServeRuntime(BatchPolicy(max_batch=64, max_wait_s=1e9))
+    spec = _spec("drip", "fused_fp32", seed=7)
+    rt.open(spec)
+    rng = np.random.default_rng(3)
+    wave = rng.standard_normal(120 * CFG.n_os).astype(np.float32)
+    for v in wave:
+        rt.submit("drip", np.array([v], np.float32))
+    got_stream = rt.close("drip")
+    np.testing.assert_array_equal(got_stream, _offline(spec, wave))
+
+
+def test_close_flushes_tail_and_matches_offline():
+    rt = ServeRuntime(BatchPolicy(max_batch=4, max_wait_s=1e9))
+    spec = _spec("solo", "fused_int8", seed=1)
+    rt.open(spec)
+    rng = np.random.default_rng(5)
+    wave = rng.standard_normal(301 * CFG.n_os + 7).astype(np.float32)
+    for c in chop(wave, 200, seed=1, jitter=0.3):
+        rt.submit("solo", c)
+    got = rt.close("solo")                 # finish + drain + release
+    np.testing.assert_array_equal(got, _offline(spec, wave))
+    assert "solo" not in rt.sessions
+
+
+# ---------------------------------------------------------------------------
+# engine pool / session manager
+# ---------------------------------------------------------------------------
+
+def test_engine_pool_lru_eviction():
+    pool = EnginePool(max_engines=2)
+    built = []
+
+    def mk(name):
+        def build():
+            built.append(name)
+            return f"engine-{name}"
+        return build
+
+    assert pool.get("a", mk("a")) == "engine-a"
+    assert pool.get("b", mk("b")) == "engine-b"
+    assert pool.get("a", mk("a")) == "engine-a"      # hit refreshes a
+    assert pool.get("c", mk("c")) == "engine-c"      # evicts b (LRU)
+    assert "b" not in pool and "a" in pool and "c" in pool
+    assert pool.get("b", mk("b")) == "engine-b"      # rebuild, evicts a
+    assert "a" not in pool
+    assert built == ["a", "b", "c", "b"]
+    st = pool.stats()
+    assert st["evictions"] == 2 and st["hits"] == 1 and st["misses"] == 4
+    assert len(pool) == 2
+
+
+def test_streams_survive_engine_eviction():
+    """More tenants than pool slots: engines are rebuilt on demand and the
+    streams stay bitwise-correct (chunker state is session-owned)."""
+    n_tenants = 4
+    rt = ServeRuntime(BatchPolicy(max_batch=n_tenants, max_wait_s=1e9),
+                      max_engines=2)                 # < n_tenants slots
+    specs = [_spec(f"s{i}", "fused_fp32", seed=10 + i)
+             for i in range(n_tenants)]
+    rng = np.random.default_rng(11)
+    waves = [rng.standard_normal(257 * CFG.n_os).astype(np.float32)
+             for _ in range(n_tenants)]
+    for s in specs:
+        rt.open(s)
+    streams = {s.tenant_id: chop(w, 300, seed=i)
+               for i, (s, w) in enumerate(zip(specs, waves))}
+    _replay_round_robin(rt, streams)
+    assert rt.pool.stats()["evictions"] > 0          # pressure really hit
+    for s, w in zip(specs, waves):
+        np.testing.assert_array_equal(rt.output(s.tenant_id),
+                                      _offline(s, w))
+
+
+# ---------------------------------------------------------------------------
+# micro-batching policy
+# ---------------------------------------------------------------------------
+
+def test_max_batch_triggers_immediate_coalesced_launch():
+    clock = FakeClock()
+    rt = ServeRuntime(BatchPolicy(max_batch=3, max_wait_s=1e9), clock=clock)
+    specs = [_spec(f"m{i}", "fused_fp32", seed=20 + i) for i in range(3)]
+    rng = np.random.default_rng(13)
+    waves = [rng.standard_normal(128 * CFG.n_os).astype(np.float32)
+             for _ in range(3)]
+    for s in specs:
+        rt.open(s)
+    rt.submit("m0", waves[0])
+    rt.submit("m1", waves[1])
+    assert rt.batcher.launches == 0                  # below max_batch, no t
+    rt.submit("m2", waves[2])                        # 3rd pending → launch
+    assert rt.batcher.launches == 1
+    assert list(rt.batcher.batch_sizes) == [3]       # ONE stacked call
+    st = rt.stats()
+    assert st["requests"] == 3 and st["mean_batch"] == 3.0
+    assert st["p99_latency_ms"] >= 0.0
+
+
+def test_max_wait_triggers_time_flush():
+    clock = FakeClock()
+    rt = ServeRuntime(BatchPolicy(max_batch=100, max_wait_s=0.5),
+                      clock=clock)
+    spec = _spec("w0", "fused_fp32", seed=31)
+    rt.open(spec)
+    rng = np.random.default_rng(17)
+    wave = rng.standard_normal(128 * CFG.n_os).astype(np.float32)
+    rt.submit("w0", wave)
+    assert rt.batcher.launches == 0
+    clock.advance(0.1)
+    assert rt.pump() == 0                            # not old enough yet
+    clock.advance(0.6)                               # oldest now > max_wait
+    assert rt.pump() == 1
+    assert rt.batcher.launches == 1
+    np.testing.assert_array_equal(
+        rt.output("w0"), _offline(spec, wave)[:len(rt.output("w0"))])
+
+
+def test_close_does_not_drain_other_tenants():
+    """Closing one tenant launches only ITS pending requests; another
+    tenant's partial batch keeps waiting for its max_batch/max_wait."""
+    clock = FakeClock()
+    rt = ServeRuntime(BatchPolicy(max_batch=8, max_wait_s=1e9), clock=clock)
+    a = _spec("closer", "fused_fp32", seed=60)
+    b = _spec("waiter", "fused_fp32", seed=61)
+    rng = np.random.default_rng(37)
+    # ≥ one tile of positions (tile_m=32 → 512 syms) so the offline call
+    # tiles exactly like serve (see chunker docstring boundary note)
+    wa = rng.standard_normal(600 * CFG.n_os).astype(np.float32)
+    wb = rng.standard_normal(600 * CFG.n_os).astype(np.float32)
+    rt.open(a)
+    rt.open(b)
+    rt.submit("closer", wa)
+    rt.submit("waiter", wb)
+    got = rt.close("closer")                         # flushes only "closer"
+    np.testing.assert_array_equal(got, _offline(a, wa))
+    assert rt.batcher.pending() == 1                 # waiter still queued
+    assert all(s <= 2 for s in rt.batcher.batch_sizes)
+    rt.drain()
+    assert rt.batcher.pending() == 0
+
+
+def test_groups_split_by_backend():
+    """Tenants on different backends never share a stacked launch."""
+    clock = FakeClock()
+    rt = ServeRuntime(BatchPolicy(max_batch=4, max_wait_s=1e9), clock=clock)
+    specs = ([_spec(f"g32-{i}", "fused_fp32", seed=40 + i) for i in range(2)]
+             + [_spec(f"g8-{i}", "fused_int8", seed=50 + i)
+                for i in range(2)])
+    rng = np.random.default_rng(23)
+    for s in specs:
+        rt.open(s)
+        rt.submit(s.tenant_id,
+                  rng.standard_normal(200 * CFG.n_os).astype(np.float32))
+    assert rt.batcher.launches == 0
+    rt.drain()
+    assert sorted(rt.batcher.batch_sizes) == [2, 2]  # one per group
+
+
+# ---------------------------------------------------------------------------
+# chunker unit behaviour
+# ---------------------------------------------------------------------------
+
+def test_chunker_carry_is_bounded_and_tile_aligned():
+    ch = StreamChunker(halo=68, total_stride=16, tile_m=8)
+    rng = np.random.default_rng(29)
+    for _ in range(50):
+        ch.push(rng.standard_normal(130).astype(np.float32))
+        plan = ch.plan()
+        if plan is not None:
+            ch.commit(plan)
+            assert ch._o_pos % ch.tile_m == 0        # tile-aligned carry
+    # carry never exceeds context + one tile + one pending stride round
+    assert ch.carry_samples <= (ch._ctx_pos + ch.tile_m + 1) * ch.ts + 130
+
+
+def test_chunker_rejects_push_after_finish():
+    ch = StreamChunker(halo=4, total_stride=2, tile_m=4)
+    ch.push(np.zeros(8, np.float32))
+    ch.finish()
+    with pytest.raises(RuntimeError, match="finished"):
+        ch.push(np.zeros(2, np.float32))
+
+
+def test_chunker_emits_exact_offline_position_count():
+    ch = StreamChunker(halo=68, total_stride=16, tile_m=16)
+    total = 0
+    rng = np.random.default_rng(31)
+    for n in (7, 100, 33, 501, 16, 3):
+        ch.push(rng.standard_normal(n).astype(np.float32))
+        total += n
+    ch.finish()
+    emitted = 0
+    while True:
+        p = ch.plan()
+        if p is None:
+            break
+        ch.commit(p)
+        emitted += p.n_emit
+    assert emitted == total // 16                    # ⌊W/ts⌋, like offline
