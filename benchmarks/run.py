@@ -16,17 +16,23 @@ One benchmark per paper table/figure (see DESIGN.md §6):
 `--full` runs paper-scale sweeps (hours); the default is a reduced pass
 whose orderings (not absolute BERs) carry the claims.
 
-`--check` is the perf-regression gate: it re-measures bench_engine and
-bench_serve (without overwriting the committed baselines) and exits
-non-zero if any tracked throughput fell more than 10% below the
-`BENCH_engine.json` / `BENCH_serve.json` committed at the repo root.
+`--check` is the perf-regression gate: it verifies the docs references
+(tools/check_docs.py), then re-measures bench_engine and bench_serve
+(without overwriting the committed baselines) and exits non-zero if any
+tracked throughput fell more than `--tol` below the `BENCH_engine.json` /
+`BENCH_serve.json` committed at the repo root — after normalizing out the
+uniform host-speed drift per gate group (geomean over shared keys), so
+only RELATIVE per-path regressions fire the gate (default tol: 10% on
+accelerators, 35% on interpret-mode CPU hosts — see `_default_tol`).
 Compare like with like: the committed baseline must come from the same
-host class (CPU hosts run the kernels in interpret mode).
+host class AND be recorded in the gate's in-process order
+(`--only engine serve`); CPU hosts run the kernels in interpret mode.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import math
 import pathlib
 import sys
 import time
@@ -36,6 +42,9 @@ from . import (bench_dop, bench_dse, bench_engine, bench_platform,
                bench_proakis, bench_quant, bench_roofline, bench_serve,
                bench_stream, bench_timing)
 from .common import REPORT_DIR
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+from tools import check_docs  # noqa: E402  (repo-root import, no package)
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
@@ -52,8 +61,55 @@ def _serve_rates(rep: dict) -> dict:
             for n, t in e.get("tenants", {}).items()}
 
 
-def check(tol: float = 0.10) -> int:
-    """Regress fresh engine/serve throughput against committed baselines."""
+def _default_tol() -> float:
+    """Host-class-aware gate width. Real accelerators get the tight 10%
+    gate; interpret-mode CPU hosts run the kernels ~50× slower with
+    ±25–40% per-key noise even after drift normalization (see
+    docs/ARCHITECTURE.md), where a 10% gate fires on noise in most clean
+    runs — the honest per-key bound there is 35%, and serve-vs-sequential
+    RATIOS carry the fine-grained regression signal instead."""
+    import jax
+    return 0.10 if jax.default_backend() != "cpu" else 0.35
+
+
+def _geomean(vals) -> float:
+    vals = [v for v in vals if v > 0]
+    if not vals:
+        return 1.0
+    return math.exp(sum(math.log(v) for v in vals) / len(vals))
+
+
+def check(tol: float | None = None) -> int:
+    """Regress fresh engine/serve throughput against committed baselines.
+
+    Rates are compared DRIFT-NORMALIZED: within each gate group (engine,
+    serve) both the fresh and the baseline rates are divided by their
+    geometric mean over the shared keys, so a uniform host-speed change
+    (this host drifts up to 2× over minutes; a TPU pool may simply be a
+    different machine) cancels and the gate fires only when one path
+    regressed RELATIVE to the others. The raw drift factor is printed so a
+    genuinely slower build still leaves a visible trace. The gate is
+    >`tol` below baseline on any normalized rate (default: 10% on
+    accelerator hosts, 35% on interpret-mode CPU hosts — see
+    `_default_tol`), and a regression must REPRODUCE: suspect groups are
+    re-measured once and only keys regressed in both passes fail (noise
+    spikes don't repeat; real regressions do). Methodology and
+    interpret-mode caveats in docs/ARCHITECTURE.md "Benchmarks and the
+    regression gate".
+    Also runs the docs reference check (tools/check_docs.py) first — stale
+    docs fail the same gate as stale baselines. On failure, every
+    regressed key is listed with its fresh rate, baseline rate, and the
+    normalized drop.
+    """
+    if tol is None:
+        tol = _default_tol()
+        print(f"[check] tolerance {tol:.0%} (host-class default; "
+              f"override with --tol)")
+    doc_rc = check_docs.main([])
+    if doc_rc != 0:
+        print("[check] FAIL: docs reference check (see above); "
+              "fix docs/*.md before measuring perf")
+        return doc_rc
     gates = (
         ("engine", REPO_ROOT / "BENCH_engine.json",
          lambda: bench_engine.run(out_path=None), _engine_rates),
@@ -64,7 +120,19 @@ def check(tol: float = 0.10) -> int:
     if missing:
         print(f"[check] FAIL: no committed baseline(s): {', '.join(missing)}")
         return 2
-    failures = []
+    def _normalized_ratios(baseline, fresh, label):
+        """Per-key fresh/baseline ratios with the group's uniform
+        host-speed drift (geomean over shared keys) divided out."""
+        shared = [k for k in sorted(baseline) if k in fresh]
+        if not shared:
+            return {}
+        drift = (_geomean(fresh[k] for k in shared)
+                 / _geomean(baseline[k] for k in shared))
+        print(f"[check] {label}: host-speed drift vs baseline {drift:.2f}x "
+              f"(normalized out of the per-key gate)")
+        return {k: fresh[k] / baseline[k] / drift for k in shared}
+
+    failures = []          # (key, fresh, baseline, normalized ratio)
     compared = 0
     for name, path, bench_fn, extract in gates:
         baseline = extract(json.loads(path.read_text()))
@@ -72,15 +140,41 @@ def check(tol: float = 0.10) -> int:
         for key in sorted(baseline):
             if key not in fresh:
                 print(f"[check] warn: {key} in baseline but not re-measured")
-                continue
+        ratios = _normalized_ratios(baseline, fresh, name)
+        suspects = {k: r for k, r in ratios.items() if r < 1.0 - tol}
+        if suspects:
+            # a real regression reproduces; a noise spike (this host's CPU
+            # allocation varies over seconds) almost never does twice — so
+            # fail only keys that regress in BOTH of two measurements
+            print(f"[check] {name}: {len(suspects)} suspect(s) "
+                  f"{sorted(suspects)} — re-measuring to confirm")
+            fresh2 = extract(bench_fn()["results"]["report"])
+            ratios2 = _normalized_ratios(baseline, fresh2, f"{name}#2")
+            for k in list(suspects):
+                if ratios2.get(k, 0.0) >= 1.0 - tol:
+                    print(f"[check] {name}: {k} recovered on re-measure "
+                          f"({ratios2.get(k, 0.0):.2f}x) — noise, not gated")
+                    ratios[k] = ratios2[k]
+                else:
+                    ratios[k] = max(suspects[k], ratios2.get(k, 0.0))
+        for key, ratio in ratios.items():
             compared += 1
-            ratio = fresh[key] / baseline[key]
             status = "ok" if ratio >= 1.0 - tol else "REGRESSION"
             print(f"[check] {status}: {key} {fresh[key]:,.0f} vs baseline "
-                  f"{baseline[key]:,.0f} sym/s ({ratio:.2f}x)")
+                  f"{baseline[key]:,.0f} sym/s ({ratio:.2f}x normalized)")
             if ratio < 1.0 - tol:
-                failures.append(key)
+                failures.append((key, fresh[key], baseline[key], ratio))
     print(f"[check] {compared} rates compared, {len(failures)} regressions")
+    if failures:
+        print(f"[check] FAIL — rates more than {tol:.0%} below baseline "
+              f"after drift normalization:")
+        for key, f, b, r in failures:
+            print(f"[check]   {key}: {f:,.0f} sym/s vs baseline {b:,.0f} "
+                  f"sym/s — {(1.0 - r):.1%} relative drop "
+                  f"(allowed {tol:.0%})")
+        print("[check] interpret-mode CPU hosts are noisy (±25–40% per "
+              "key); if this host class matches the baseline, re-run or "
+              "raise --tol (see docs/ARCHITECTURE.md)")
     return 1 if failures else 0
 
 
@@ -91,10 +185,11 @@ def main(argv=None) -> int:
     ap.add_argument("--only", nargs="*", default=None)
     ap.add_argument("--check", action="store_true",
                     help="re-measure engine/serve throughput and fail on "
-                         ">10%% regression vs the committed BENCH_*.json")
-    ap.add_argument("--tol", type=float, default=0.10,
-                    help="--check regression tolerance (fraction; raise on "
-                         "noisy shared hosts)")
+                         ">tol regression vs the committed BENCH_*.json")
+    ap.add_argument("--tol", type=float, default=None,
+                    help="--check regression tolerance (fraction; default "
+                         "0.10 on accelerators, 0.35 on interpret-mode CPU "
+                         "hosts; raise on noisy shared hosts)")
     args = ap.parse_args(argv)
 
     if args.check:

@@ -14,7 +14,15 @@ backends form separate batch groups. At the end each tenant's streamed
 output is checked against the offline engine on its full waveform —
 bitwise-identical for every fused backend.
 
-    PYTHONPATH=src python examples/serve_equalizer.py [--tenants-per-op 3]
+`--driver async` (the default) runs the same workload through
+`AsyncServeRuntime`: submits return per-chunk futures, the max_wait timer
+fires from the runtime's own thread, and stacked-input assembly overlaps
+device launches (double buffering). `--driver sync` uses the synchronous
+`ServeRuntime`. The parity check is identical either way — only the
+driving loop changes.
+
+    PYTHONPATH=src python examples/serve_equalizer.py \
+        [--tenants-per-op 3] [--driver async|sync]
 """
 import argparse
 
@@ -26,7 +34,8 @@ from repro.channels import imdd, proakis
 from repro.configs import equalizer_ht as HT
 from repro.configs import equalizer_lp as LP
 from repro.core import equalizer as eq
-from repro.serve import BatchPolicy, ServeRuntime, TenantSpec, chop, replay
+from repro.serve import (AsyncServeRuntime, BatchPolicy, ServeRuntime,
+                         TenantSpec, chop, replay)
 
 FORMATS = {
     "ht": {"w_int": 2, "w_frac": 5, "a_int": 3, "a_frac": 4},   # → int8
@@ -57,10 +66,13 @@ def main(argv=None) -> int:
     ap.add_argument("--tenants-per-op", type=int, default=3)
     ap.add_argument("--n-syms", type=int, default=2048)
     ap.add_argument("--chunk-syms", type=int, default=256)
+    ap.add_argument("--driver", choices=("async", "sync"), default="async")
     args = ap.parse_args(argv)
 
-    rt = ServeRuntime(BatchPolicy(max_batch=args.tenants_per_op,
-                                  max_wait_s=1e9))
+    policy = BatchPolicy(max_batch=args.tenants_per_op, max_wait_s=1e9)
+    rt = (AsyncServeRuntime(policy) if args.driver == "async"
+          else ServeRuntime(policy))
+    print(f"driver: {args.driver} ({type(rt).__name__})")
     tenants = [make_tenant(op, i, args.n_syms)
                for op in ("ht", "lp") for i in range(args.tenants_per_op)]
     for spec, _ in tenants:
@@ -70,7 +82,7 @@ def main(argv=None) -> int:
     streams = {spec.tenant_id: chop(w, args.chunk_syms * spec.cfg.n_os,
                                     seed=i, jitter=0.5)
                for i, (spec, w) in enumerate(tenants)}
-    rep = replay(rt, streams)
+    rep = replay(rt, streams)       # async: drain() waits for all landings
 
     worst = 0.0
     for spec, w in tenants:
@@ -92,6 +104,8 @@ def main(argv=None) -> int:
     print(f"  engine pool: {st['pool']}")
     print(f"  streamed output == offline engine: bitwise "
           f"(max |Δ| = {worst:.1e}) for all tenants")
+    if args.driver == "async":
+        rt.shutdown()
     return 0
 
 

@@ -44,6 +44,8 @@ def _key_str(key: Tuple) -> str:
     s = f"L{l}_K{k}_C{c}_Vp{vp}_Nos{nos}__{backend}__{platform}"
     if len(key) > 7:                   # batched-serving sweep (probe_batch>1)
         s += f"__B{key[7]}"
+    if len(key) > 8:                   # serve-aware sweep: live-traffic width
+        s += f"_S{key[8]}"
     return s
 
 
@@ -88,14 +90,17 @@ def best_tile_m(cfg: CNNEqConfig, backend: str,
     probe input is `probe_batch` rows of `probe_syms` symbols — long enough
     that every candidate runs multiple grid tiles. probe_batch > 1 models
     the multi-tenant serving shape (repro.serve stacks B tenant chunks per
-    launch) and gets its own cache slot — the best tile for one long stream
-    is not necessarily best when B rows split VMEM.
+    launch) and gets its own cache slot, keyed on BOTH the batch and the
+    probe width — the best tile for one long stream is not necessarily best
+    when B rows split VMEM, and the serve-aware re-tune
+    (`repro.serve.runtime` `_serve_tile`) probes with the width observed in
+    live traffic rather than the default.
     """
     if candidates is None:
         candidates = DEFAULT_TILES       # resolved at call time (testable)
     key = cache_key(cfg, backend)
     if probe_batch != 1:
-        key = key + (probe_batch,)
+        key = key + (probe_batch, probe_syms)
     if key in _memory_cache:
         return _memory_cache[key]
     if use_disk:

@@ -230,6 +230,20 @@ class EqualizerEngine:
         kernels = tuple(int(w.shape[-1]) for w, _ in self.weights)
         return receptive_halo(kernels, self._strides)
 
+    def tune_key(self) -> Tuple:
+        """Hashable (topology, backend, static kernel config) identity —
+        the group key WITHOUT the tile width.
+
+        This is the granularity at which the serving layer aggregates
+        traffic statistics for serve-aware autotune (`repro.serve`):
+        engines that differ only in tile_m share one live width/occupancy
+        histogram, and a re-tune picks a new tile FOR this key. Never
+        triggers an autotune sweep itself (unlike `group_key`, it does not
+        resolve tile_m).
+        """
+        fmts = self.formats if self.backend == "fused_int8" else None
+        return (self.cfg, self.backend, fmts, self.interpret)
+
     def group_key(self) -> Tuple:
         """Hashable key of everything a batched launch must share.
 
@@ -237,11 +251,11 @@ class EqualizerEngine:
         launch (`stacked_engine_fn`) — same topology, backend, static
         kernel config (int8 formats are baked into the kernel as requant
         scales) and tile width. Weights are NOT in the key: they ride in
-        per-row stacked kernel operands.
+        per-row stacked kernel operands. Structurally this is
+        `tune_key() + (tile_m,)`; the serving scheduler relies on that to
+        map launches back to their traffic-stats bucket.
         """
-        fmts = self.formats if self.backend == "fused_int8" else None
-        return (self.cfg, self.backend, fmts, self.resolved_tile_m(),
-                self.interpret)
+        return self.tune_key() + (self.resolved_tile_m(),)
 
     def describe(self) -> Dict[str, Any]:
         """Deployment summary (for logs / benchmark records)."""

@@ -1,22 +1,28 @@
-"""Multi-tenant streaming equalizer serving runtime (see runtime.py).
+"""Multi-tenant streaming equalizer serving runtime (see runtime.py and
+docs/ARCHITECTURE.md).
 
 Layers:
   chunker    — stateful overlap-save: arbitrary chunk sizes, offline-exact
   pool       — LRU-bounded engine pool (session-manager memory bound)
   session    — TenantSpec / Session / SessionManager
   scheduler  — BatchPolicy / MicroBatcher: dynamic micro-batching into
-               stacked fused-kernel launches with per-row tenant weights
-  runtime    — ServeRuntime facade
+               stacked fused-kernel launches with per-row tenant weights,
+               split into assemble/execute/descatter phases; TrafficStats
+               feed the serve-aware autotune
+  runtime    — ServeRuntime (sync) / AsyncServeRuntime (threaded
+               front-end: timer-driven pump, double-buffered launches,
+               per-chunk futures)
   loadgen    — reproducible tenant traffic for benches/examples
 """
 from .chunker import ChunkPlan, StreamChunker
 from .loadgen import chop, random_waveforms, replay
 from .pool import EnginePool
-from .runtime import ServeRuntime
-from .scheduler import BatchPolicy, MicroBatcher, Request
+from .runtime import AsyncServeRuntime, ServeRuntime
+from .scheduler import (BatchPolicy, LaunchBatch, MicroBatcher, Request,
+                        TrafficStats)
 from .session import Session, SessionManager, TenantSpec
 
-__all__ = ["BatchPolicy", "ChunkPlan", "EnginePool", "MicroBatcher",
-           "Request", "ServeRuntime", "Session", "SessionManager",
-           "StreamChunker", "TenantSpec", "chop", "random_waveforms",
-           "replay"]
+__all__ = ["AsyncServeRuntime", "BatchPolicy", "ChunkPlan", "EnginePool",
+           "LaunchBatch", "MicroBatcher", "Request", "ServeRuntime",
+           "Session", "SessionManager", "StreamChunker", "TenantSpec",
+           "TrafficStats", "chop", "random_waveforms", "replay"]

@@ -68,11 +68,19 @@ class ChunkPlan:
 class StreamChunker:
     """Carries the receptive-field tail of one tenant's sample stream.
 
-    halo:         half receptive field, in samples (engine.halo_samples).
-    total_stride: samples consumed per output position (engine.total_stride).
-    tile_m:       the engine's resolved tile width — carry stays tile-aligned
-                  so chunked output is bitwise-equal to offline (see module
-                  docstring).
+    halo:         half receptive field, in SAMPLES (engine.halo_samples;
+                  ≥ 0 or __init__ raises ValueError).
+    total_stride: samples consumed per output position, V_p · N_os
+                  (engine.total_stride; ≥ 1 or ValueError).
+    tile_m:       the engine's resolved tile width, in POSITIONS (≥ 1 or
+                  ValueError) — carry stays tile-aligned so chunked output
+                  is bitwise-equal to offline (see module docstring). Must
+                  be the tile the launches actually use; fixed for the
+                  stream's lifetime.
+
+    Failure modes: `push()` after `finish()` raises RuntimeError (the
+    stream contract is append-then-seal); everything else is total —
+    `plan()` returns None rather than raising when nothing is emittable.
     """
 
     def __init__(self, halo: int, total_stride: int, tile_m: int):

@@ -9,11 +9,11 @@ job. Used by `benchmarks/bench_serve.py` and `examples/serve_equalizer.py`.
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Sequence
+from typing import Dict, List, Sequence, Union
 
 import numpy as np
 
-from .runtime import ServeRuntime
+from .runtime import AsyncServeRuntime, ServeRuntime
 
 
 def chop(waveform: np.ndarray, chunk_samples: int, seed: int = 0,
@@ -43,11 +43,14 @@ def random_waveforms(n_tenants: int, n_syms: int, n_os: int = 2,
             for _ in range(n_tenants)]
 
 
-def replay(runtime: ServeRuntime, streams: Dict[str, Sequence[np.ndarray]],
+def replay(runtime: Union[ServeRuntime, AsyncServeRuntime],
+           streams: Dict[str, Sequence[np.ndarray]],
            pump_between: bool = True) -> Dict[str, float]:
     """Round-robin replay: submit one chunk per tenant per round until all
     streams are exhausted, then flush tails and drain. Returns wall-clock
-    accounting. Tenants must already be open on `runtime`."""
+    accounting. Tenants must already be open on `runtime`. Works unchanged
+    against both drivers — the async runtime's `drain()` blocks until every
+    launch has landed, so `total_syms` is complete either way."""
     ids = list(streams)
     iters = {t: iter(streams[t]) for t in ids}
     live = set(ids)

@@ -16,7 +16,17 @@ from typing import Any, Callable, Dict, Hashable
 
 
 class EnginePool:
-    """LRU cache of built engines: key → engine (max_engines bound)."""
+    """LRU cache of built engines: key → engine.
+
+    max_engines: resident-engine bound (count; default 32; must be ≥ 1 or
+                 __init__ raises ValueError). Sizing note: one engine holds
+                 folded fp32 weights plus a backend-specific quantized copy
+                 (int8/bf16), so the bound is effectively a host-memory
+                 knob. A bound smaller than the number of concurrently
+                 ACTIVE tenants still works — engines rebuild on demand —
+                 but turns steady-state traffic into rebuild churn
+                 (`stats()["evictions"]` is the tell).
+    """
 
     def __init__(self, max_engines: int = 32):
         if max_engines < 1:

@@ -1,34 +1,140 @@
-"""ServeRuntime — the multi-tenant streaming equalizer serving facade.
+"""ServeRuntime / AsyncServeRuntime — multi-tenant streaming serving facades.
+
+Synchronous facade (the deterministic tier-1 parity surface):
 
     rt = ServeRuntime(BatchPolicy(max_batch=8, max_wait_s=2e-3))
     rt.open(TenantSpec("link-a", cfg, params=params_a))
-    rt.open(TenantSpec("link-b", cfg, params=params_b))
-    ...
     rt.submit("link-a", samples)        # arbitrary chunk sizes
-    rt.submit("link-b", samples)        # coalesced into one fused launch
-    ...
     rt.pump()                           # honour max_wait while idle
     syms = rt.close("link-a")           # flush tail, return the stream
 
-Single-threaded and synchronous by design: launches happen inside
-`submit`/`pump`/`drain` on the caller's thread, which keeps results
-deterministic (bitwise-reproducible vs the offline engine — the tier-1
-test surface) while still modelling the real coalescing policy with
-timestamps. An async front-end would merely move WHERE pump() is called.
+Asynchronous front-end (the production shape — ROADMAP "async serve
+front-end"):
+
+    with AsyncServeRuntime(BatchPolicy(max_batch=8)) as rt:
+        rt.open(TenantSpec("link-a", cfg, params=params_a))
+        fut = rt.submit("link-a", samples)   # returns a per-chunk future
+        ...
+        syms = rt.close("link-a")            # waits for in-flight launches
+
+Why threads, not asyncio
+------------------------
+The device phase of a launch is `fn(x)` + `jax.block_until_ready` — a
+blocking C++ call with no awaitable completion hook. Under asyncio it would
+have to run in an executor thread anyway, so an event loop would add a
+second scheduling layer without removing the thread. The runtime therefore
+uses two plain daemon threads and `concurrent.futures.Future` per chunk:
+
+  * a LAUNCHER thread owns the device: it pops assembled `LaunchBatch`es
+    from a bounded queue, runs the fused kernel, and de-scatters results;
+  * a TIMER thread fires the `max_wait_s` pump — time-based flushes no
+    longer depend on the caller happening to call `pump()`.
+
+asyncio callers lose nothing: `asyncio.wrap_future(rt.submit(...))` turns
+the per-chunk handle into a native awaitable.
+
+Double buffering
+----------------
+`submit()` does the HOST half of the pipeline on the caller's thread: push
+samples into the chunker, enqueue, check the batch policy, and — when a
+group is ready — assemble the padded stacked input and per-row weight fn
+(`MicroBatcher.take_ready`). The assembled batch is handed to the launcher
+through a depth-bounded queue, so while launch k executes on device the
+caller/timer threads are already assembling launch k+1 and de-scattering
+happens as each launch lands. The queue bound (`queue_depth`, default 2 =
+one executing + one assembled-and-waiting) is the double-buffer depth and
+doubles as backpressure: submit blocks rather than letting assembly run
+unboundedly ahead of the device.
+
+The parity contract survives because ONLY the driving loop changes: same
+chunker, same `take_ready` policy/assembly, same stacked launches, and a
+single FIFO launcher thread preserves per-session emission order — chunked
+streaming output stays bitwise-equal to the offline engine on all fused
+backends (tests/test_serve.py runs the parity sweep under both drivers).
+
+Launch failures: the launcher retries a failed batch in place (the
+assembled input is a self-contained snapshot) up to `launch_retries` times;
+a terminal failure fails the affected chunk futures AND poisons the
+affected sessions (`Session.failed`) so `output()`/`close()` raise instead
+of silently returning a stream with a hole.
+
+Serve-aware autotune (ROADMAP "serve-aware autotune") lives in
+`_serve_tile`, shared by both facades: tenants opened with tile_m="auto"
+after a tune-key's traffic histograms are warm (≥ `BatchPolicy.retune_after`
+launches) get `best_tile_m(probe_batch=mode occupancy,
+probe_syms=median live width)` instead of the single-stream default.
 """
 from __future__ import annotations
 
+import concurrent.futures
+import queue
+import threading
 import time
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
+from ..core import autotune as autotune_lib
+from ..core.engine import EqualizerEngine
 from .pool import EnginePool
-from .scheduler import BatchPolicy, MicroBatcher, Request
+from .scheduler import BatchPolicy, LaunchBatch, MicroBatcher, Request
 from .session import Session, SessionManager, TenantSpec
+
+# sentinel that tells the launcher thread to exit (after the queue drains)
+_SHUTDOWN = object()
+
+# serve-aware probe floor: below this the sweep can't distinguish tiles
+_MIN_PROBE_SYMS = 64
+
+
+def _serve_tile(batcher: MicroBatcher,
+                engine: EqualizerEngine) -> Optional[int]:
+    """Serve-aware tile for a NEW session, or None to keep the engine's
+    single-stream autotune choice.
+
+    Returns a tile only once the engine's tune-key has ≥
+    `BatchPolicy.retune_after` recorded launches (the histogram warm-up)
+    AND steady-state occupancy is actually batched (mode > 1) — otherwise
+    the single-stream tile is already the right model. The sweep probes
+    `best_tile_m` with the OBSERVED mode batch occupancy and median launch
+    width, and is cached (memory + disk) under the batched
+    (probe_batch, probe_syms) key, so one sweep serves every subsequent
+    open on this traffic shape.
+    """
+    pol = batcher.policy
+    if pol.retune_after <= 0 or engine.backend == "ref":
+        return None                    # disabled, or no tiling knob at all
+    stats = batcher.traffic.get(engine.tune_key())
+    if stats is None or stats.launches < pol.retune_after:
+        return None                    # histogram not warm yet
+    occupancy = stats.mode_occupancy()
+    if occupancy <= 1:
+        return None                    # effectively single-stream traffic
+    probe_syms = max(_MIN_PROBE_SYMS,
+                     stats.median_width() // engine.cfg.n_os)
+    return autotune_lib.best_tile_m(
+        engine.cfg, engine.backend, engine._make_fn,
+        probe_batch=occupancy, probe_syms=probe_syms)
 
 
 class ServeRuntime:
+    """Synchronous single-threaded serving facade.
+
+    Launches happen inside `submit`/`pump`/`drain` on the caller's thread,
+    which keeps results deterministic (bitwise-reproducible vs the offline
+    engine — the tier-1 test surface) while still modelling the real
+    coalescing policy with timestamps. `AsyncServeRuntime` moves WHERE the
+    phases run without changing any of them.
+
+    policy:       `BatchPolicy` coalescing knobs (default: max_batch=8,
+                  max_wait_s=2 ms).
+    max_engines:  LRU engine-pool bound (count; default 32). Evicting an
+                  engine loses no stream state — it rebuilds from the
+                  tenant's spec on next use.
+    clock:        timestamp source (seconds; default time.perf_counter) —
+                  injectable for deterministic policy tests.
+    """
+
     def __init__(self, policy: Optional[BatchPolicy] = None,
                  max_engines: int = 32,
                  clock: Callable[[], float] = time.perf_counter):
@@ -38,8 +144,11 @@ class ServeRuntime:
     # -- tenant lifecycle --------------------------------------------------
 
     def open(self, spec: TenantSpec) -> Session:
-        """Admit a tenant: build (or pool-hit) its engine, start a stream."""
-        return self.sessions.open(spec)
+        """Admit a tenant: build (or pool-hit) its engine, start a stream.
+        Raises ValueError if the tenant_id is already open. Specs with
+        tile_m="auto" may receive a serve-aware tile (see `_serve_tile`)."""
+        return self.sessions.open(
+            spec, tile_tuner=lambda e: _serve_tile(self.batcher, e))
 
     def close(self, tenant_id: str) -> np.ndarray:
         """End a tenant's stream: flush the receptive-field tail, launch
@@ -55,7 +164,9 @@ class ServeRuntime:
 
     def submit(self, tenant_id: str, samples) -> Optional[Request]:
         """Feed a chunk of waveform samples; may trigger batched launches
-        (max_batch reached, or another group's max_wait expired)."""
+        (max_batch reached, or another group's max_wait expired). Returns
+        the queued request (symbols populated once launched) or None when
+        the chunk is buffered below one emittable position."""
         s = self.sessions.get(tenant_id)
         s.chunker.push(np.asarray(samples))
         req = self.batcher.enqueue(s)
@@ -89,6 +200,298 @@ class ServeRuntime:
     def stats(self) -> Dict:
         st = {"tenants": len(self.sessions),
               "pending": self.batcher.pending(),
-              "pool": self.pool.stats()}
+              "pool": self.pool.stats(),
+              "traffic": self.batcher.traffic_stats()}
         st.update(self.batcher.latency_stats())
         return st
+
+
+class AsyncServeRuntime:
+    """Event-loop serving front-end: same chunker, same policy, same
+    stacked launches as `ServeRuntime` — driven by threads instead of the
+    caller (see module docstring for the full design rationale).
+
+    policy:         `BatchPolicy` coalescing knobs. `max_wait_s` is
+                    honoured by the built-in timer thread — no caller
+                    pump() needed.
+    max_engines:    LRU engine-pool bound (count; default 32).
+    clock:          timestamp source (seconds; default time.perf_counter).
+    queue_depth:    double-buffer depth — assembled launches allowed ahead
+                    of the device (count; default 2 = one executing + one
+                    waiting). submit() blocks when full (backpressure).
+    launch_retries: in-place retries for a failed device launch before the
+                    batch is declared lost (count; default 2). Terminal
+                    failure fails the chunk futures, records the error in
+                    `errors`, and poisons the sessions involved.
+
+    Thread-safety: `submit`/`finish`/`pump`/`drain`/`open`/`close`/
+    `output`/`stats` may be called from any thread; per-TENANT calls must
+    not race each other (one producer per stream — chunk order would
+    otherwise be ambiguous anyway). Always `shutdown()` (or use as a
+    context manager): abandoned runtimes leak two daemon threads until
+    process exit.
+    """
+
+    def __init__(self, policy: Optional[BatchPolicy] = None,
+                 max_engines: int = 32,
+                 clock: Callable[[], float] = time.perf_counter,
+                 queue_depth: int = 2,
+                 launch_retries: int = 2):
+        if queue_depth < 1:
+            raise ValueError("queue_depth must be ≥ 1")
+        self.sessions = SessionManager(max_engines=max_engines)
+        self.batcher = MicroBatcher(policy, clock=clock)
+        self.launch_retries = launch_retries
+        self.errors: List[BaseException] = []
+        self._lock = threading.RLock()
+        # serializes take→enqueue sequences: without it, thread A could
+        # pop batch k under the lock, get preempted before the queue put,
+        # and thread B (timer vs producer) could put batch k+1 first —
+        # inverting the FIFO the per-session emission order relies on.
+        # Ordering: _dispatch_mutex is always taken BEFORE _lock, and the
+        # launcher thread never touches it, so a blocking put (queue full)
+        # cannot deadlock against descatter.
+        self._dispatch_mutex = threading.Lock()
+        self._done = threading.Condition(self._lock)
+        self._inflight = 0             # requests taken but not yet landed
+        self._launch_q: "queue.Queue" = queue.Queue(maxsize=queue_depth)
+        self._stop = threading.Event()
+        self._launcher = threading.Thread(
+            target=self._launch_loop, name="serve-launcher", daemon=True)
+        self._timer = threading.Thread(
+            target=self._timer_loop, name="serve-pump-timer", daemon=True)
+        self._launcher.start()
+        self._timer.start()
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def shutdown(self) -> None:
+        """Stop the timer and launcher threads (idempotent). Pending
+        batches already queued are still executed; pending requests that
+        never assembled stay unlaunched — call `drain()` first for a clean
+        flush."""
+        if self._stop.is_set():
+            return
+        self._stop.set()
+        self._timer.join()
+        self._launch_q.put(_SHUTDOWN)
+        self._launcher.join()
+
+    def __enter__(self) -> "AsyncServeRuntime":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+    # -- tenant lifecycle --------------------------------------------------
+
+    def open(self, spec: TenantSpec) -> Session:
+        """Admit a tenant (see `ServeRuntime.open`). A serve-aware autotune
+        sweep (cold cache + warm histograms) runs under the runtime lock —
+        rare and bounded, but expect the first such open to pause other
+        host-side progress for the sweep duration."""
+        with self._lock:
+            self._check_running()
+            return self.sessions.open(
+                spec, tile_tuner=lambda e: _serve_tile(self.batcher, e))
+
+    def close(self, tenant_id: str) -> np.ndarray:
+        """End a tenant's stream: flush the tail, launch ONLY this tenant's
+        pending requests, WAIT for its in-flight launches to land, release
+        the session, and return the full stream (bitwise-equal to the
+        offline engine). Raises RuntimeError if a launch for this stream
+        was lost (see `launch_retries`)."""
+        with self._dispatch_mutex:
+            with self._lock:
+                self._check_running()
+                s = self.sessions.get(tenant_id)
+                if not s.chunker.finished:
+                    s.chunker.finish()
+                req = self.batcher.enqueue(s)
+                if req is not None:
+                    req.future = concurrent.futures.Future()
+                batches = self._take(self.batcher.take_session(s))
+            self._dispatch(batches)
+        with self._done:
+            while s.inflight > 0 and s.failed is None:
+                self._done.wait(0.05)
+            return self.sessions.close(tenant_id).output()
+
+    # -- streaming ---------------------------------------------------------
+
+    def submit(self, tenant_id: str,
+               samples) -> Optional[concurrent.futures.Future]:
+        """Feed a chunk of waveform samples. Returns a per-chunk future
+        resolving to this chunk's emitted symbols (np.ndarray) — or None
+        when the samples were buffered without reaching an emittable
+        position (they will ride in a later chunk's future). The future
+        raises the terminal launch error if the chunk's batch was lost.
+        Blocks only on backpressure (launch queue full)."""
+        with self._dispatch_mutex:
+            with self._lock:
+                self._check_running()
+                s = self.sessions.get(tenant_id)
+                s.chunker.push(np.asarray(samples))
+                req = self.batcher.enqueue(s)
+                if req is not None:
+                    req.future = concurrent.futures.Future()
+                batches = self._take(self.batcher.take_ready())
+            self._dispatch(batches)
+        return req.future if req is not None else None
+
+    def finish(self, tenant_id: str) -> Optional[concurrent.futures.Future]:
+        """End-of-stream marker: queue the zero-padded tail flush. Returns
+        the tail chunk's future (None if the stream had no residue)."""
+        with self._dispatch_mutex:
+            with self._lock:
+                self._check_running()
+                s = self.sessions.get(tenant_id)
+                if not s.chunker.finished:
+                    s.chunker.finish()
+                req = self.batcher.enqueue(s)
+                if req is not None:
+                    req.future = concurrent.futures.Future()
+                batches = self._take(self.batcher.take_ready())
+            self._dispatch(batches)
+        return req.future if req is not None else None
+
+    def pump(self) -> int:
+        """Manual scheduling pass (normally unnecessary — the timer thread
+        owns max_wait flushes). Returns launches SCHEDULED, not landed."""
+        with self._dispatch_mutex:
+            with self._lock:
+                batches = self._take(self.batcher.take_ready())
+            self._dispatch(batches)
+        return len(batches)
+
+    def drain(self) -> int:
+        """Schedule every pending request and BLOCK until the pipeline is
+        empty (all launches landed or terminally failed). Returns the
+        number of launches scheduled by this call."""
+        n = 0
+        while True:
+            with self._dispatch_mutex:
+                with self._lock:
+                    batches = self._take(
+                        self.batcher.take_ready(force=True))
+                self._dispatch(batches)
+            if batches:
+                n += len(batches)
+                continue
+            with self._done:
+                while self._inflight > 0:
+                    self._done.wait(0.05)
+                if self.batcher.pending() == 0:
+                    return n
+
+    def output(self, tenant_id: str) -> np.ndarray:
+        """Symbols emitted so far (stream order). NOT a barrier: in-flight
+        launches land asynchronously — use the chunk futures, `drain()`, or
+        `close()` for completion. Raises if the stream lost a chunk."""
+        with self._lock:
+            return self.sessions.get(tenant_id).output()
+
+    # -- accounting --------------------------------------------------------
+
+    @property
+    def pool(self) -> EnginePool:
+        return self.sessions.pool
+
+    def stats(self) -> Dict:
+        with self._lock:
+            st = {"tenants": len(self.sessions),
+                  "pending": self.batcher.pending(),
+                  "inflight": self._inflight,
+                  "queue_depth": self._launch_q.maxsize,
+                  "errors": len(self.errors),
+                  "pool": self.pool.stats(),
+                  "traffic": self.batcher.traffic_stats()}
+            st.update(self.batcher.latency_stats())
+            return st
+
+    # -- internals ---------------------------------------------------------
+
+    def _check_running(self) -> None:
+        if self._stop.is_set():
+            raise RuntimeError("runtime is shut down")
+
+    def _take(self, batches: List[LaunchBatch]) -> List[LaunchBatch]:
+        """Account freshly assembled batches as in-flight (lock held)."""
+        for b in batches:
+            for r in b.reqs:
+                r.session.inflight += 1
+            self._inflight += len(b.reqs)
+        return batches
+
+    def _dispatch(self, batches: List[LaunchBatch]) -> None:
+        """Hand assembled batches to the launcher thread. Blocking put on
+        the depth-bounded queue = the backpressure/double-buffer bound.
+        Always called holding `_dispatch_mutex` but NEVER `_lock` (the
+        launcher needs the latter to land batches and free queue slots).
+        If a put fails, the un-dispatched batches are un-accounted and
+        requeued so drain()/close() cannot wait on work that will never
+        execute."""
+        for i, b in enumerate(batches):
+            try:
+                self._launch_q.put(b)
+            except BaseException:
+                with self._lock:
+                    for rb in reversed(batches[i:]):
+                        self.batcher.requeue(rb)
+                        for r in rb.reqs:
+                            r.session.inflight -= 1
+                        self._inflight -= len(rb.reqs)
+                    self._done.notify_all()
+                raise
+
+    def _timer_loop(self) -> None:
+        """The event loop's clock: fire a pump pass on a max_wait_s-scaled
+        cadence so time-based flushes don't depend on caller activity."""
+        while not self._stop.is_set():
+            wait = self.batcher.policy.max_wait_s
+            self._stop.wait(min(max(wait / 4.0, 1e-3), 0.05))
+            if self._stop.is_set():
+                return
+            try:
+                with self._dispatch_mutex:
+                    with self._lock:
+                        batches = self._take(self.batcher.take_ready())
+                    self._dispatch(batches)
+            except Exception as e:  # noqa: BLE001 — keep the clock alive
+                with self._lock:
+                    self.errors.append(e)
+
+    def _launch_loop(self) -> None:
+        """The device owner: execute each assembled batch (NO lock — this
+        is the overlap window), then land it under the lock. A failed
+        execute retries in place, preserving FIFO order and therefore
+        per-session stream order."""
+        while True:
+            batch = self._launch_q.get()
+            if batch is _SHUTDOWN:
+                self._launch_q.task_done()
+                return
+            y, err = None, None
+            for _ in range(self.launch_retries + 1):
+                try:
+                    y = self.batcher.execute(batch)
+                    err = None
+                    break
+                except Exception as e:  # noqa: BLE001 — retried/reported
+                    err = e
+            with self._lock:
+                try:
+                    if err is None:
+                        self.batcher.descatter(batch, y)
+                    else:
+                        self.errors.append(err)
+                        self.batcher.fail(batch, err)
+                except Exception as e:  # noqa: BLE001 — launcher must live
+                    self.errors.append(e)
+                    self.batcher.fail(batch, e)
+                finally:
+                    for r in batch.reqs:
+                        r.session.inflight -= 1
+                    self._inflight -= len(batch.reqs)
+                    self._done.notify_all()
+            self._launch_q.task_done()

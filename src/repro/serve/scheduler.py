@@ -16,16 +16,36 @@ Coalescing policy (the classic dynamic-batching trade-off):
                   long (tail-latency knob);
   * `drain()`   — launch everything now (end of stream / shutdown).
 
+A launch is split into three phases so an async front-end can pipeline
+them (see `runtime.AsyncServeRuntime`):
+
+  take_ready()  policy check + pop + ASSEMBLE: build the padded stacked
+                input and look up the memoized per-group launch fn — pure
+                host work (numpy, dict lookups);
+  execute()     the device phase: dispatch the fused kernel and block
+                until the stacked output is ready;
+  descatter()   host work again: slice each tenant's rows out, append to
+                its session, resolve its future, record latency/traffic.
+
+The synchronous `pump()`/`drain()`/`flush_session()` drivers run all three
+phases inline on the caller's thread (deterministic, single-threaded — the
+tier-1 parity surface); `AsyncServeRuntime` runs execute() on a dedicated
+launcher thread so the host phases of launch k+1 overlap the device phase
+of launch k.
+
 Every request carries submit/launch/done timestamps; `latency_stats()`
 reports p50/p99 queueing and total latency plus batch-occupancy history —
-the numbers `benchmarks/bench_serve.py` publishes.
+the numbers `benchmarks/bench_serve.py` publishes. Per tune-key
+`TrafficStats` (batch-occupancy and launch-width histograms) additionally
+feed the serve-aware autotune re-tune (`runtime.py`).
 """
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
 import time
-from collections import deque
-from typing import Callable, Deque, Dict, List, Optional, Tuple
+from collections import Counter, deque
+from typing import (Callable, Deque, Dict, List, Optional, Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -40,14 +60,48 @@ _CONSUMED = np.zeros((0,), np.float32)     # placeholder for launched inputs
 
 @dataclasses.dataclass(frozen=True)
 class BatchPolicy:
-    max_batch: int = 8           # coalesce up to this many tenant chunks
-    max_wait_s: float = 2e-3     # flush when the oldest waits this long
-    width_bucket: int = 0        # row padding quantum; 0 → tile_m·ts (auto)
+    """Micro-batching policy knobs (all per `MicroBatcher`, i.e. runtime-wide).
+
+    max_batch:    maximum tenant chunks coalesced into one stacked launch
+                  (count; default 8). A group launches as soon as this many
+                  chunks are pending — the throughput knob. Must be ≥ 1;
+                  1 disables coalescing (one launch per chunk).
+    max_wait_s:   maximum queueing age of the oldest pending chunk before
+                  its group launches anyway (seconds; default 2 ms) — the
+                  tail-latency knob. Only honoured when something calls
+                  `pump()` (the sync runtime pumps inside submit;
+                  `AsyncServeRuntime` runs it from a timer thread). Set
+                  very large (e.g. 1e9) to batch purely on max_batch.
+    width_bucket: row-padding quantum for stacked launches (samples;
+                  default 0 = auto → one kernel tile, tile_m·V_p·N_os).
+                  Bounds the set of compiled launch shapes. Values that are
+                  not a multiple of the tile quantum are rounded UP to it —
+                  a sub-tile bucket would break the chunker's bitwise
+                  contract (see `_bucket_width`), so it cannot be expressed.
+    retune_after: serve-aware autotune warm-up threshold (launches per
+                  `EqualizerEngine.tune_key()`; default 64; 0 disables).
+                  Once a tune-key has this many recorded launches, tenants
+                  opened with tile_m="auto" get their tile re-tuned against
+                  the OBSERVED batch-occupancy/width histograms instead of
+                  the single-stream autotune default. Already-open sessions
+                  keep their tile — a mid-stream tile change would break
+                  the chunker's tile-alignment (bitwise) invariant.
+    """
+    max_batch: int = 8
+    max_wait_s: float = 2e-3
+    width_bucket: int = 0
+    retune_after: int = 64
 
 
 @dataclasses.dataclass
 class Request:
-    """One tenant chunk queued for a batched launch."""
+    """One tenant chunk queued for a batched launch.
+
+    `future` (a `concurrent.futures.Future`) is set by the async runtime at
+    enqueue time and resolved with this request's emitted symbols at
+    descatter — the per-chunk awaitable handle. The sync runtime leaves it
+    None and callers read `symbols` directly after pump/drain.
+    """
     session: Session
     plan: ChunkPlan
     t_submit: float
@@ -55,6 +109,7 @@ class Request:
     t_done: float = 0.0
     batch_size: int = 0
     symbols: Optional[np.ndarray] = None
+    future: Optional[concurrent.futures.Future] = None
 
     @property
     def done(self) -> bool:
@@ -67,6 +122,61 @@ class Request:
     @property
     def latency_s(self) -> float:
         return self.t_done - self.t_submit
+
+
+@dataclasses.dataclass
+class LaunchBatch:
+    """One assembled stacked launch: everything execute() needs, no more.
+
+    Assembly snapshots the padded input `x` and the memoized launch fn so
+    the device phase touches NO scheduler state — the async launcher thread
+    runs execute() without holding the runtime lock.
+    """
+    key: Tuple                      # the group_key the requests share
+    reqs: List[Request]
+    x: np.ndarray                   # (B, W) padded stacked input
+    fn: Callable[[jnp.ndarray], jnp.ndarray]
+
+
+class TrafficStats:
+    """Live per-tune-key traffic histograms for serve-aware autotune.
+
+    Counts are per LAUNCH (not per request): `occupancy` histograms the
+    stacked batch size B, `widths` the padded launch width W in samples
+    (post width-bucket rounding, so the support is small). Bounded by
+    construction — distinct (B, W) pairs are few because the bucketing
+    quantizes widths.
+    """
+
+    def __init__(self):
+        self.launches = 0
+        self.occupancy: Counter = Counter()
+        self.widths: Counter = Counter()
+
+    def record(self, batch_size: int, width_samples: int) -> None:
+        self.launches += 1
+        self.occupancy[int(batch_size)] += 1
+        self.widths[int(width_samples)] += 1
+
+    def mode_occupancy(self) -> int:
+        """The most common stacked batch size (0 if no traffic yet)."""
+        if not self.occupancy:
+            return 0
+        return max(sorted(self.occupancy), key=self.occupancy.get)
+
+    def median_width(self) -> int:
+        """Median padded launch width in samples (0 if no traffic yet)."""
+        if not self.widths:
+            return 0
+        flat = sorted(w for w, c in self.widths.items() for _ in range(c))
+        return flat[len(flat) // 2]
+
+    def as_dict(self) -> Dict:
+        return {"launches": self.launches,
+                "occupancy": dict(sorted(self.occupancy.items())),
+                "widths": dict(sorted(self.widths.items())),
+                "mode_occupancy": self.mode_occupancy(),
+                "median_width": self.median_width()}
 
 
 class MicroBatcher:
@@ -92,6 +202,8 @@ class MicroBatcher:
         self._fn_cache: "Dict[Tuple, Tuple[list, Callable]]" = {}
         self.completed: Deque[Request] = deque(maxlen=self.COMPLETED_MAX)
         self.batch_sizes: Deque[int] = deque(maxlen=self.COMPLETED_MAX)
+        # tune_key (group_key minus tile) → live width/occupancy histograms
+        self.traffic: Dict[Tuple, TrafficStats] = {}
         self.total_requests = 0
         self.launches = 0
 
@@ -105,7 +217,8 @@ class MicroBatcher:
         can queue several requests back-to-back without double-planning the
         same positions. That is safe because a plan is a self-contained
         input snapshot: a failed launch re-queues its requests (see pump /
-        flush_session) and never needs the chunker rewound.
+        flush_session) or retries in place (async launcher) and never needs
+        the chunker rewound.
         """
         plan = session.chunker.plan()
         if plan is None:
@@ -119,13 +232,20 @@ class MicroBatcher:
     def pending(self) -> int:
         return sum(len(v) for v in self._groups.values())
 
-    # -- policy / launching ------------------------------------------------
+    # -- launch phases (assemble → execute → descatter) --------------------
 
-    def pump(self, force: bool = False) -> int:
-        """Launch every group that meets the policy (or all, if force).
-        Returns the number of launches performed."""
-        now = self.clock()
-        n = 0
+    def take_ready(self, now: Optional[float] = None,
+                   force: bool = False) -> List[LaunchBatch]:
+        """Pop and ASSEMBLE every policy-ready batch (all, if force).
+
+        Host-only phase: builds each batch's padded stacked input and
+        launch fn, removes its requests from the queues. The caller owns
+        the returned batches — it must execute+descatter each, or requeue()
+        them (in reverse order) on failure, or no symbols are ever emitted.
+        """
+        if now is None:
+            now = self.clock()
+        out: List[LaunchBatch] = []
         for key in list(self._groups):
             reqs = self._groups[key]
             while reqs and (
@@ -134,27 +254,17 @@ class MicroBatcher:
                     or now - reqs[0].t_submit >= self.policy.max_wait_s):
                 take = reqs[:self.policy.max_batch]
                 del reqs[:self.policy.max_batch]
-                try:
-                    self._launch(take)
-                except Exception:
-                    # plans are self-contained input snapshots, so a failed
-                    # launch (transient device error) is retryable: put the
-                    # requests back in order and surface the error
-                    reqs[:0] = take
-                    raise
-                n += 1
+                out.append(self.assemble(key, take))
             if not reqs:
                 del self._groups[key]
-        return n
+        return out
 
-    def drain(self) -> int:
-        return self.pump(force=True)
-
-    def flush_session(self, session: Session) -> int:
-        """Launch ONLY this session's pending requests (tenant close/tail
-        flush). Other tenants' partial batches stay queued so their
-        max_batch/max_wait policy — and batch occupancy — is untouched."""
-        n = 0
+    def take_session(self, session: Session) -> List[LaunchBatch]:
+        """Pop and assemble ONLY this session's pending requests (tenant
+        close/tail flush). Other tenants' partial batches stay queued so
+        their max_batch/max_wait policy — and batch occupancy — is
+        untouched."""
+        out: List[LaunchBatch] = []
         for key in list(self._groups):
             reqs = self._groups[key]
             mine = [r for r in reqs if r.session is session]
@@ -166,16 +276,107 @@ class MicroBatcher:
             else:
                 del self._groups[key]
             for i in range(0, len(mine), self.policy.max_batch):
-                try:
-                    self._launch(mine[i:i + self.policy.max_batch])
-                except Exception:
-                    # re-queue this tenant's unlaunched plans (retryable,
-                    # same rationale as pump)
-                    pending = mine[i:]
-                    self._groups.setdefault(key, [])[:0] = pending
-                    raise
+                out.append(self.assemble(key, mine[i:i + self.policy.max_batch]))
+        return out
+
+    def requeue(self, batch: LaunchBatch) -> None:
+        """Put an un-executed batch's requests back at the head of their
+        group (launch failure; plans are self-contained input snapshots so
+        this is always safe). When several batches failed, requeue them in
+        REVERSE take order so stream order per session is preserved."""
+        self._groups.setdefault(batch.key, [])[:0] = batch.reqs
+
+    def assemble(self, key: Tuple, reqs: List[Request]) -> LaunchBatch:
+        """Host phase 1: pad the requests' plans to one width bucket, stack
+        them into the (B, W) launch input, bind the memoized group fn."""
+        engines = [r.session.engine for r in reqs]
+        fn = self._group_fn(engines)
+        width = self._bucket_width(reqs)
+        x = np.zeros((len(reqs), width), np.float32)
+        for i, r in enumerate(reqs):
+            x[i, :r.plan.width] = r.plan.data      # right zero-pad = offline
+        return LaunchBatch(key=key, reqs=reqs, x=x, fn=fn)
+
+    def execute(self, batch: LaunchBatch) -> np.ndarray:
+        """Device phase: ONE stacked fused-kernel launch, blocking until
+        the (B, S) output is on host. Touches no scheduler state — safe to
+        run off-thread without the runtime lock."""
+        t_launch = self.clock()
+        y = batch.fn(jnp.asarray(batch.x))
+        y = np.asarray(jax.block_until_ready(y))
+        for r in batch.reqs:
+            r.t_launch = t_launch
+        return y
+
+    def descatter(self, batch: LaunchBatch, y: np.ndarray) -> None:
+        """Host phase 2: slice each tenant's emitted rows out of the
+        stacked output, append to its session in stream order, resolve its
+        future, record latency + traffic stats."""
+        t_done = self.clock()
+        reqs = batch.reqs
+        for i, r in enumerate(reqs):
+            vp = r.session.v_parallel
+            syms = y[i, r.plan.skip * vp:(r.plan.skip + r.plan.n_emit) * vp]
+            r.symbols = syms
+            r.t_done, r.batch_size = t_done, len(reqs)
+            r.session.append_output(syms)
+            r.plan.data = _CONSUMED        # release the input buffer; the
+            self.completed.append(r)       # record keeps only timing+syms
+            # a caller may legally cancel() a pending chunk future; the
+            # symbols still join the stream (cancel abandons the
+            # notification, not the data) — set_result on a cancelled
+            # future would raise and poison the whole batch
+            if r.future is not None and not r.future.done():
+                r.future.set_result(syms)
+        skey = reqs[0].session.engine.tune_key()
+        self.traffic.setdefault(skey, TrafficStats()).record(
+            len(reqs), batch.x.shape[1])
+        self.total_requests += len(reqs)
+        self.batch_sizes.append(len(reqs))
+        self.launches += 1
+
+    def fail(self, batch: LaunchBatch, exc: BaseException) -> None:
+        """Terminal launch failure (async path, after retries): fail every
+        request's future and poison its session so a later output()/close()
+        raises instead of silently returning a stream with a hole.
+        Idempotent per request — futures already resolved (e.g. a failure
+        mid-descatter) are left alone."""
+        for r in batch.reqs:
+            r.session.failed = exc
+            if r.future is not None and not r.future.done():
+                r.future.set_exception(exc)
+
+    # -- synchronous drivers ----------------------------------------------
+
+    def _run(self, batches: List[LaunchBatch]) -> int:
+        """Execute+descatter assembled batches inline; on failure requeue
+        every un-executed batch (reverse order) and surface the error —
+        transient device failures are retryable via the next pump."""
+        n = 0
+        try:
+            for b in batches:
+                y = self.execute(b)
+                self.descatter(b, y)
                 n += 1
+        except Exception:
+            for b in reversed(batches[n:]):
+                self.requeue(b)
+            raise
         return n
+
+    def pump(self, force: bool = False) -> int:
+        """Launch every group that meets the policy (or all, if force).
+        Returns the number of launches performed."""
+        return self._run(self.take_ready(self.clock(), force=force))
+
+    def drain(self) -> int:
+        return self.pump(force=True)
+
+    def flush_session(self, session: Session) -> int:
+        """Synchronously launch ONLY this session's pending requests."""
+        return self._run(self.take_session(session))
+
+    # -- assembly helpers --------------------------------------------------
 
     def _bucket_width(self, reqs: List[Request]) -> int:
         e = reqs[0].session.engine
@@ -204,31 +405,16 @@ class MicroBatcher:
             self._fn_cache.pop(next(iter(self._fn_cache)))
         return fn
 
-    def _launch(self, reqs: List[Request]) -> None:
-        """ONE stacked fused-kernel launch for ≤ max_batch tenant chunks."""
-        t_launch = self.clock()
-        engines = [r.session.engine for r in reqs]
-        fn = self._group_fn(engines)
-        width = self._bucket_width(reqs)
-        x = np.zeros((len(reqs), width), np.float32)
-        for i, r in enumerate(reqs):
-            x[i, :r.plan.width] = r.plan.data      # right zero-pad = offline
-        y = fn(jnp.asarray(x))
-        y = np.asarray(jax.block_until_ready(y))
-        t_done = self.clock()
-        for i, r in enumerate(reqs):
-            vp = r.session.v_parallel
-            syms = y[i, r.plan.skip * vp:(r.plan.skip + r.plan.n_emit) * vp]
-            r.symbols = syms
-            r.t_launch, r.t_done, r.batch_size = t_launch, t_done, len(reqs)
-            r.session.append_output(syms)
-            r.plan.data = _CONSUMED        # release the input buffer; the
-            self.completed.append(r)       # record keeps only timing+syms
-        self.total_requests += len(reqs)
-        self.batch_sizes.append(len(reqs))
-        self.launches += 1
-
     # -- accounting --------------------------------------------------------
+
+    def traffic_stats(self) -> Dict[str, Dict]:
+        """Live serve-aware histograms, one entry per tune-key (keys are
+        stringified for JSON-ability — `cfg layers/backend` summary)."""
+        out = {}
+        for key, st in self.traffic.items():
+            cfg, backend = key[0], key[1]
+            out[f"L{cfg.layers}_K{cfg.kernel}_{backend}"] = st.as_dict()
+        return out
 
     def latency_stats(self) -> Dict[str, float]:
         """Percentiles over the last COMPLETED_MAX requests (full history

@@ -6,11 +6,20 @@ A SESSION is a tenant's live streaming state: the overlap-save chunker
 carry, output accumulator, and latency counters. Engines themselves live in
 the LRU `EnginePool` (pool.py) and are rebuilt on demand after eviction —
 sessions never pin one.
+
+Serve-aware autotune hook: `Session` accepts a `tile_tuner` callback
+(provided by the runtime, see `runtime._serve_tile`). For a spec with
+tile_m="auto" it may return a tile width tuned against LIVE traffic
+histograms instead of the engine's single-stream autotune default. The
+chosen tile is frozen into the session's spec copy at open time, so engine
+rebuilds after LRU eviction reproduce it deterministically and the chunker's
+tile-alignment (bitwise-vs-offline) invariant holds for the stream's whole
+lifetime.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
@@ -19,14 +28,36 @@ from ..core.equalizer import CNNEqConfig
 from .chunker import StreamChunker
 from .pool import EnginePool
 
+# a tile_tuner maps a freshly built engine to a tile width (or None to keep
+# the engine's own single-stream autotune choice)
+TileTuner = Callable[[EqualizerEngine], Optional[int]]
+
 
 @dataclasses.dataclass
 class TenantSpec:
     """Everything needed to (re)build a tenant's engine deterministically.
 
-    Either trained `params` (+ optional bn_state; QAT formats picked up
-    automatically → the auto backend ladder) or pre-folded `weights`
-    (+ explicit formats for int8).
+    tenant_id: unique key (string) — engine-pool identity; opening the same
+               id twice on one runtime raises ValueError.
+    cfg:       the CNN topology (`CNNEqConfig`).
+    params:    trained (unfolded) parameters; BN is folded and QAT formats
+               are picked up automatically at engine build
+               (`EqualizerEngine.from_params`). Exactly one of
+               params/weights must be given, else build_engine raises
+               ValueError.
+    bn_state:  running BN statistics to fold (default None → init stats).
+    weights:   pre-folded fp32 weights (alternative to params).
+    formats:   per-layer (w_int, w_frac, a_int, a_frac) fixed-point
+               formats — required for backend="fused_int8" with explicit
+               weights; ignored otherwise.
+    backend:   "auto" (default; deploys the QAT ladder int8→bf16→fp32),
+               or an explicit backend name. Explicit "fused_int8" raises at
+               build if the formats don't fit int8 or the BN-folded weights
+               overflow the learned grid (see docs/QUANTIZATION.md).
+    tile_m:    kernel sequence-tile width. "auto" (default) → autotune
+               sweep, possibly serve-aware (live-traffic histograms) when
+               opened through a runtime with warm stats; an explicit int is
+               NEVER re-tuned. Fixed for the life of the stream.
     """
     tenant_id: str
     cfg: CNNEqConfig
@@ -51,19 +82,44 @@ class TenantSpec:
 
 
 class Session:
-    """One tenant's live stream state (engine NOT held — see pool)."""
+    """One tenant's live stream state (engine NOT held — see pool).
 
-    def __init__(self, spec: TenantSpec, pool: EnginePool):
-        self.spec = spec
+    `failed` is None on the happy path; the async runtime sets it to the
+    terminal exception when a launch for this stream exhausted its retries,
+    after which `output()` raises instead of returning a stream with a
+    silent hole (a lost chunk would otherwise just shorten the output).
+    """
+
+    def __init__(self, spec: TenantSpec, pool: EnginePool,
+                 tile_tuner: Optional[TileTuner] = None):
         self._pool = pool
-        engine = self.engine                     # build once up front …
-        self.chunker = StreamChunker(            # … to size the chunker
+        # a NEW stream must never inherit a pool entry built (or tile-
+        # mutated) for an earlier session under the same tenant_id — the
+        # chunker below must be sized off an engine that this session's
+        # spec rebuilds identically after LRU eviction
+        pool.drop(spec.tenant_id)
+        engine = pool.get(spec.tenant_id, spec.build_engine)
+        if tile_tuner is not None and spec.tile_m == "auto":
+            tuned = tile_tuner(engine)
+            if tuned is not None:
+                # freeze the serve-aware tile into the session's spec copy:
+                # rebuilds after LRU eviction must reproduce it, and the
+                # caller's spec object stays untouched
+                spec = dataclasses.replace(spec, tile_m=int(tuned))
+                engine.tile_m = int(tuned)
+        self.spec = spec
+        self.chunker = StreamChunker(            # sized off the built engine
             halo=engine.halo_samples,
             total_stride=engine.total_stride,
             tile_m=engine.resolved_tile_m())
         self.v_parallel = engine.cfg.v_parallel
         self._out: List[np.ndarray] = []
         self.syms_emitted = 0
+        self.failed: Optional[BaseException] = None
+        # requests taken for launch but not yet descattered/failed —
+        # maintained (under its lock) by AsyncServeRuntime so close() can
+        # wait for a tenant's in-flight work; always 0 on the sync path
+        self.inflight = 0
 
     @property
     def engine(self) -> EqualizerEngine:
@@ -75,7 +131,13 @@ class Session:
         self.syms_emitted += int(syms.shape[0])
 
     def output(self) -> np.ndarray:
-        """All symbols emitted so far, in stream order."""
+        """All symbols emitted so far, in stream order. Raises the stream's
+        terminal launch error (if any) rather than returning a stream with
+        missing chunks."""
+        if self.failed is not None:
+            raise RuntimeError(
+                f"stream {self.spec.tenant_id!r} lost a chunk to a failed "
+                f"launch") from self.failed
         if not self._out:
             return np.zeros((0,), np.float32)
         return np.concatenate(self._out)
@@ -89,10 +151,11 @@ class SessionManager:
         self.pool = pool if pool is not None else EnginePool(max_engines)
         self._sessions: Dict[str, Session] = {}
 
-    def open(self, spec: TenantSpec) -> Session:
+    def open(self, spec: TenantSpec,
+             tile_tuner: Optional[TileTuner] = None) -> Session:
         if spec.tenant_id in self._sessions:
             raise ValueError(f"tenant {spec.tenant_id!r} already open")
-        s = Session(spec, self.pool)
+        s = Session(spec, self.pool, tile_tuner=tile_tuner)
         self._sessions[spec.tenant_id] = s
         return s
 

@@ -1,0 +1,62 @@
+"""tools/check_docs.py — the docs anti-rot tripwire (tier-2, but cheap
+enough to run in tier-1): real docs must pass, and each reference form
+must actually FAIL when stale (otherwise the tripwire is decorative)."""
+import pathlib
+import sys
+
+import pytest
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO_ROOT))
+
+from tools import check_docs  # noqa: E402
+
+
+def test_committed_docs_are_clean():
+    assert check_docs.main([]) == 0
+
+
+def _run_on(tmp_path, text: str) -> int:
+    doc = tmp_path / "doc.md"
+    doc.write_text(text)
+    return check_docs.main([str(doc)])
+
+
+@pytest.mark.parametrize("stale_ref", [
+    "`src/repro/serve/no_such_file.py`",                    # R1
+    "`src/repro/serve/runtime.py::NoSuchSymbol`",           # R2 symbol
+    "`src/repro/gone/runtime.py::ServeRuntime`",            # R2 file
+    "`repro.serve.no_such_module`",                         # R3 module
+    "`repro.core.autotune.no_such_symbol`",                 # R3 symbol
+    "`no_such_function_anywhere()`",                        # R4
+    "`fused_int4`",                                         # R5
+    "`BENCH_nothing.json`",                                 # R6
+])
+def test_each_stale_form_fails(tmp_path, stale_ref):
+    assert _run_on(tmp_path, f"see {stale_ref} for details\n") == 1
+
+
+@pytest.mark.parametrize("good_ref", [
+    "`src/repro/serve/runtime.py`",
+    "`src/repro/serve/runtime.py::AsyncServeRuntime`",
+    "`src/repro/serve/chunker.py::StreamChunker.commit`",
+    "`repro.core.autotune.best_tile_m`",
+    "`benchmarks.bench_serve`",
+    "`best_tile_m()`",
+    "`fused_bf16`",
+    "`BENCH_serve.json`",
+    # gitignored = generated artifact: valid even before it is generated
+    "`reports/not_yet_generated.json`",
+    "`just prose with spaces`",            # unrecognized forms are ignored
+    "`rt.submit(samples)`",
+])
+def test_each_good_form_passes(tmp_path, good_ref):
+    assert _run_on(tmp_path, f"see {good_ref} for details\n") == 0
+
+
+def test_fenced_blocks_check_paths_but_not_prose(tmp_path):
+    ok = ("```bash\nPYTHONPATH=src python benchmarks/run.py --check\n"
+          "pytest tests/test_serve.py\n```\n")
+    assert _run_on(tmp_path, ok) == 0
+    stale = "```bash\ncat src/repro/serve/legacy_runtime.py\n```\n"
+    assert _run_on(tmp_path, stale) == 1

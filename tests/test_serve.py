@@ -1,24 +1,33 @@
-"""Serving runtime (repro.serve) — the ISSUE-3 acceptance surface.
+"""Serving runtime (repro.serve) — the ISSUE-3/ISSUE-4 acceptance surface.
 
   * chunked-streaming equivalence: a property-style sweep over chunk sizes
     (including chunks smaller than the receptive field) asserting
     serve output == offline engine output per backend — BITWISE for the
     fused fp32/bf16/int8 datapaths; ≤2 ULP for "ref" (the pure-jnp oracle's
-    dot widths depend on stream length, so XLA may contract differently);
+    dot widths depend on stream length, so XLA may contract differently).
+    The sweep runs under BOTH drivers: the synchronous `ServeRuntime` and
+    the threaded `AsyncServeRuntime` (same chunker, same stacked launches —
+    only the driving loop differs);
   * engine-pool LRU eviction (rebuild-after-evict keeps streams correct);
   * micro-batching policy: max_batch and max_wait triggers, grouping by
     engine group_key, latency accounting;
-  * chunker unit behaviour (carry bound, tile alignment, end-of-stream).
+  * chunker unit behaviour (carry bound, tile alignment, end-of-stream);
+  * traffic stats (batch-occupancy / launch-width histograms) and the
+    serve-aware autotune re-tune they feed;
+  * async runtime: per-chunk futures, timer-driven max_wait flush,
+    launch-failure retry (transient) and session poisoning (terminal),
+    multi-tenant stress with random chunk sizes.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import equalizer as eq
+from repro.core import autotune, equalizer as eq
 from repro.core.engine import BACKENDS, EqualizerEngine
-from repro.serve import (BatchPolicy, EnginePool, ServeRuntime,
-                         StreamChunker, TenantSpec, chop)
+from repro.serve import (AsyncServeRuntime, BatchPolicy, EnginePool,
+                         MicroBatcher, ServeRuntime, StreamChunker,
+                         TenantSpec, TrafficStats, chop)
 
 CFG = eq.CNNEqConfig()
 INT8_FMT = tuple((2, 5, 3, 4) for _ in range(CFG.layers))
@@ -66,38 +75,55 @@ class FakeClock:
 
 
 # ---------------------------------------------------------------------------
-# chunked-streaming equivalence sweep
+# chunked-streaming equivalence sweep (both drivers)
 # ---------------------------------------------------------------------------
 
+def _make_runtime(driver, policy, **kw):
+    """Build either driver; async runtimes must be shut down by the caller."""
+    if driver == "async":
+        return AsyncServeRuntime(policy, **kw)
+    return ServeRuntime(policy, **kw)
+
+
+@pytest.mark.parametrize("driver", ["sync", "async"])
 @pytest.mark.parametrize("backend", BACKENDS)
 @pytest.mark.parametrize("chunk_samples", [
     17,       # smaller than the receptive field (halo = 68 samples)
     160,      # a few positions per chunk, not stride-aligned
     10_000,   # whole stream in one chunk
 ])
-def test_chunked_serve_equals_offline(backend, chunk_samples):
+def test_chunked_serve_equals_offline(driver, backend, chunk_samples):
+    if driver == "async" and chunk_samples == 17:
+        pytest.skip("sub-receptive-field arrival already covered by the "
+                    "sync sweep and the async stress test (compile cost)")
     n_tenants, n_syms = 2, 523                       # odd on purpose
-    rt = ServeRuntime(BatchPolicy(max_batch=n_tenants, max_wait_s=1e9))
-    specs = [_spec(f"t{i}", backend, seed=i) for i in range(n_tenants)]
-    rng = np.random.default_rng(42)
-    waves = [rng.standard_normal(n_syms * CFG.n_os).astype(np.float32)
-             for _ in range(n_tenants)]
-    for s in specs:
-        rt.open(s)
-    streams = {s.tenant_id: chop(w, chunk_samples, seed=i, jitter=0.5)
-               for i, (s, w) in enumerate(zip(specs, waves))}
-    _replay_round_robin(rt, streams)
-    for s, w in zip(specs, waves):
-        got = rt.output(s.tenant_id)
-        want = _offline(s, w)
-        assert got.shape == want.shape
-        if backend == "ref":
-            np.testing.assert_allclose(got, want, rtol=0, atol=ULP_TOL)
-        else:
-            # fused backends: BITWISE — the chunker keeps its carry tile-
-            # aligned so every emitted position repeats the offline tile
-            # computation exactly (int8 thereby also beats its ≤1-LSB bound)
-            np.testing.assert_array_equal(got, want)
+    rt = _make_runtime(driver,
+                       BatchPolicy(max_batch=n_tenants, max_wait_s=1e9))
+    try:
+        specs = [_spec(f"t{i}", backend, seed=i) for i in range(n_tenants)]
+        rng = np.random.default_rng(42)
+        waves = [rng.standard_normal(n_syms * CFG.n_os).astype(np.float32)
+                 for _ in range(n_tenants)]
+        for s in specs:
+            rt.open(s)
+        streams = {s.tenant_id: chop(w, chunk_samples, seed=i, jitter=0.5)
+                   for i, (s, w) in enumerate(zip(specs, waves))}
+        _replay_round_robin(rt, streams)
+        for s, w in zip(specs, waves):
+            got = rt.output(s.tenant_id)
+            want = _offline(s, w)
+            assert got.shape == want.shape
+            if backend == "ref":
+                np.testing.assert_allclose(got, want, rtol=0, atol=ULP_TOL)
+            else:
+                # fused backends: BITWISE — the chunker keeps its carry
+                # tile-aligned so every emitted position repeats the offline
+                # tile computation exactly (int8 thereby also beats its
+                # ≤1-LSB bound); holds under BOTH drivers (same launches)
+                np.testing.assert_array_equal(got, want)
+    finally:
+        if driver == "async":
+            rt.shutdown()
 
 
 def test_chunked_serve_single_sample_trickle():
@@ -301,3 +327,281 @@ def test_chunker_emits_exact_offline_position_count():
         ch.commit(p)
         emitted += p.n_emit
     assert emitted == total // 16                    # ⌊W/ts⌋, like offline
+
+
+# ---------------------------------------------------------------------------
+# traffic stats (serve-aware autotune inputs)
+# ---------------------------------------------------------------------------
+
+def test_traffic_stats_histograms():
+    st = TrafficStats()
+    assert st.mode_occupancy() == 0 and st.median_width() == 0
+    for b, w in [(2, 512), (2, 512), (3, 1024), (2, 256), (1, 512)]:
+        st.record(b, w)
+    assert st.launches == 5
+    assert st.occupancy == {2: 3, 3: 1, 1: 1}
+    assert st.widths == {512: 3, 1024: 1, 256: 1}
+    assert st.mode_occupancy() == 2
+    assert st.median_width() == 512
+    d = st.as_dict()
+    assert d["launches"] == 5 and d["mode_occupancy"] == 2
+    assert d["widths"] == {256: 1, 512: 3, 1024: 1}
+
+
+def test_traffic_stats_mode_tie_is_deterministic():
+    st = TrafficStats()
+    st.record(4, 512)
+    st.record(2, 512)
+    # tie between 2 and 4 → smallest wins (sorted iteration), every time
+    assert st.mode_occupancy() == 2
+
+
+def test_micro_batcher_records_traffic_per_tune_key():
+    rt = ServeRuntime(BatchPolicy(max_batch=2, max_wait_s=1e9))
+    specs = ([_spec(f"f{i}", "fused_fp32", seed=70 + i) for i in range(2)]
+             + [_spec(f"q{i}", "fused_int8", seed=72 + i) for i in range(2)])
+    rng = np.random.default_rng(41)
+    for s in specs:
+        rt.open(s)
+        rt.submit(s.tenant_id,
+                  rng.standard_normal(200 * CFG.n_os).astype(np.float32))
+    rt.drain()
+    assert len(rt.batcher.traffic) == 2              # one per (cfg, backend)
+    for st in rt.batcher.traffic.values():
+        assert st.launches >= 1
+        assert st.mode_occupancy() == 2              # both groups coalesced
+        assert st.median_width() > 0
+    # width histogram support is quantized: every width is a whole number
+    # of tile quanta (tile_m=32 · total_stride)
+    ts = specs[0].build_engine().total_stride
+    for st in rt.batcher.traffic.values():
+        assert all(w % (32 * ts) == 0 for w in st.widths)
+
+
+# ---------------------------------------------------------------------------
+# serve-aware autotune
+# ---------------------------------------------------------------------------
+
+def test_serve_aware_retune_on_warm_histogram(tmp_path, monkeypatch):
+    """After the histogram warms up, a tile_m='auto' tenant gets a tile
+    tuned at the OBSERVED (occupancy, width) shape; the tile is frozen into
+    the session's spec copy (caller's spec untouched) and the stream stays
+    bitwise-equal to the frozen spec's offline engine."""
+    monkeypatch.setattr(autotune, "CACHE_PATH",
+                        tmp_path / "autotune_serve.json")
+    monkeypatch.setattr(autotune, "DEFAULT_TILES", (8, 16))
+    rt = ServeRuntime(BatchPolicy(max_batch=2, max_wait_s=1e9,
+                                  retune_after=3))
+    warm = [_spec(f"warm{i}", "fused_fp32", seed=80 + i, tile_m=16)
+            for i in range(2)]
+    rng = np.random.default_rng(43)
+    for s in warm:
+        rt.open(s)
+    for _ in range(4):                               # 4 coalesced launches
+        for s in warm:
+            rt.submit(s.tenant_id,
+                      rng.standard_normal(128 * CFG.n_os).astype(np.float32))
+    rt.drain()
+    assert next(iter(rt.batcher.traffic.values())).launches >= 3
+
+    auto_spec = _spec("tuned", "fused_fp32", seed=90, tile_m="auto")
+    sess = rt.open(auto_spec)
+    assert isinstance(sess.spec.tile_m, int)         # serve-aware tile froze
+    assert sess.spec.tile_m in (8, 16)
+    assert auto_spec.tile_m == "auto"                # caller's spec untouched
+    assert sess.chunker.tile_m == sess.spec.tile_m   # alignment matches
+
+    wave = rng.standard_normal(300 * CFG.n_os).astype(np.float32)
+    for c in chop(wave, 250, seed=4):
+        rt.submit("tuned", c)
+    got = rt.close("tuned")
+    # parity is against the session's FROZEN spec (its tile), per contract
+    np.testing.assert_array_equal(got, _offline(sess.spec, wave))
+
+
+def test_serve_aware_retune_cold_histogram_and_explicit_tile(monkeypatch):
+    """Before warm-up the tuner returns None (single-stream autotune path);
+    explicit integer tiles are never re-tuned."""
+    from repro.serve.runtime import _serve_tile
+    rt = ServeRuntime(BatchPolicy(retune_after=3))
+    eng = _spec("probe", "fused_fp32", seed=95, tile_m=16).build_engine()
+    assert _serve_tile(rt.batcher, eng) is None      # no traffic at all
+    # retune disabled entirely
+    rt0 = ServeRuntime(BatchPolicy(retune_after=0))
+    assert _serve_tile(rt0.batcher, eng) is None
+    # explicit tile spec: tuner is bypassed at the Session level
+    sess = rt.open(_spec("explicit", "fused_fp32", seed=96, tile_m=32))
+    assert sess.spec.tile_m == 32
+
+
+# ---------------------------------------------------------------------------
+# async runtime
+# ---------------------------------------------------------------------------
+
+def test_async_per_chunk_futures_bitwise():
+    """Every submit()/finish() future resolves to exactly the symbols that
+    chunk emitted; their concatenation is the offline stream, bitwise."""
+    with AsyncServeRuntime(BatchPolicy(max_batch=2, max_wait_s=1e9)) as rt:
+        specs = [_spec(f"fut{i}", "fused_fp32", seed=100 + i)
+                 for i in range(2)]
+        rng = np.random.default_rng(47)
+        waves = [rng.standard_normal(523 * CFG.n_os).astype(np.float32)
+                 for _ in range(2)]
+        for s in specs:
+            rt.open(s)
+        futs = {s.tenant_id: [] for s in specs}
+        streams = {s.tenant_id: chop(w, 300, seed=i, jitter=0.4)
+                   for i, (s, w) in enumerate(zip(specs, waves))}
+        iters = {t: iter(c) for t, c in streams.items()}
+        live = set(iters)
+        while live:
+            for t in list(live):
+                c = next(iters[t], None)
+                f = rt.submit(t, c) if c is not None else rt.finish(t)
+                if c is None:
+                    live.discard(t)
+                if f is not None:
+                    futs[t].append(f)
+        rt.drain()
+        for s, w in zip(specs, waves):
+            want = _offline(s, w)
+            parts = [f.result(timeout=10) for f in futs[s.tenant_id]]
+            np.testing.assert_array_equal(np.concatenate(parts), want)
+            np.testing.assert_array_equal(rt.output(s.tenant_id), want)
+
+
+def test_async_timer_flushes_max_wait_without_caller_pump():
+    """The timer thread honours max_wait_s on its own — a single pending
+    chunk below max_batch launches with NO pump()/drain() call."""
+    with AsyncServeRuntime(BatchPolicy(max_batch=64, max_wait_s=0.05)) as rt:
+        spec = _spec("timer", "fused_fp32", seed=110)
+        rt.open(spec)
+        rng = np.random.default_rng(53)
+        wave = rng.standard_normal(128 * CFG.n_os).astype(np.float32)
+        fut = rt.submit("timer", wave)
+        assert fut is not None
+        syms = fut.result(timeout=30)                # resolved by the timer
+        np.testing.assert_array_equal(
+            syms, _offline(spec, wave)[:syms.shape[0]])
+
+
+def test_async_stress_random_chunks_with_transient_launch_failures(
+        monkeypatch):
+    """Many tenants × two backends × random chunk sizes, with every third
+    launch failing once (transient device fault): the in-place retry must
+    lose/duplicate NOTHING — per-future results and final outputs stay
+    bitwise-equal to each tenant's offline engine."""
+    injected = {"n": 0}
+    attempted = {}                                   # id(batch) → batch ref
+    orig_execute = MicroBatcher.execute
+
+    def flaky_execute(self, batch):
+        if id(batch) not in attempted:
+            attempted[id(batch)] = batch             # strong ref: stable ids
+            injected["n"] += 1
+            if injected["n"] % 3 == 0:
+                raise RuntimeError("injected transient device fault")
+        return orig_execute(self, batch)
+
+    monkeypatch.setattr(MicroBatcher, "execute", flaky_execute)
+    n_per_backend, n_syms = 3, 311
+    with AsyncServeRuntime(BatchPolicy(max_batch=3, max_wait_s=1e9),
+                           launch_retries=2) as rt:
+        specs = [_spec(f"st-{b}-{i}", b, seed=120 + 10 * j + i)
+                 for j, b in enumerate(("fused_fp32", "fused_int8"))
+                 for i in range(n_per_backend)]
+        rng = np.random.default_rng(59)
+        waves = {s.tenant_id:
+                 rng.standard_normal(n_syms * CFG.n_os).astype(np.float32)
+                 for s in specs}
+        for s in specs:
+            rt.open(s)
+        futs = {s.tenant_id: [] for s in specs}
+        streams = {s.tenant_id: chop(waves[s.tenant_id], 200, seed=i,
+                                     jitter=0.9)
+                   for i, s in enumerate(specs)}
+        iters = {t: iter(c) for t, c in streams.items()}
+        live = set(iters)
+        while live:
+            for t in list(live):
+                c = next(iters[t], None)
+                f = rt.submit(t, c) if c is not None else rt.finish(t)
+                if c is None:
+                    live.discard(t)
+                if f is not None:
+                    futs[t].append(f)
+        rt.drain()
+        assert injected["n"] >= 3                    # faults really fired
+        assert not rt.errors                         # …but none terminal
+        for s in specs:
+            want = _offline(s, waves[s.tenant_id])
+            got = rt.output(s.tenant_id)
+            np.testing.assert_array_equal(got, want)  # no loss, no dup
+            parts = [f.result(timeout=10) for f in futs[s.tenant_id]]
+            np.testing.assert_array_equal(np.concatenate(parts), want)
+
+
+def test_async_cancelled_future_does_not_poison_batch():
+    """A caller may cancel() a pending chunk future; the symbols still
+    join the stream and the OTHER tenants in the batch are untouched."""
+    with AsyncServeRuntime(BatchPolicy(max_batch=2, max_wait_s=1e9)) as rt:
+        a = _spec("canc-a", "fused_fp32", seed=150)
+        b = _spec("canc-b", "fused_fp32", seed=151)
+        rng = np.random.default_rng(71)
+        # ≥ one tile of positions (tile_m=32 → 512 syms) so the offline
+        # call tiles exactly like serve (chunker docstring boundary note)
+        wa = rng.standard_normal(600 * CFG.n_os).astype(np.float32)
+        wb = rng.standard_normal(600 * CFG.n_os).astype(np.float32)
+        rt.open(a)
+        rt.open(b)
+        fa = rt.submit("canc-a", wa)       # 1st of 2 → stays pending
+        assert fa is not None
+        fa.cancel()                        # legal caller-side abandonment
+        fb = rt.submit("canc-b", wb)       # completes the batch → launch
+        rt.drain()
+        assert not rt.errors               # no InvalidStateError poisoning
+        np.testing.assert_array_equal(fb.result(timeout=10),
+                                      rt.output("canc-b"))
+        # cancelled tenant's stream is still complete (data not dropped)
+        got = rt.close("canc-a")
+        np.testing.assert_array_equal(got, _offline(a, wa))
+
+
+def test_async_terminal_failure_poisons_stream(monkeypatch):
+    """A launch that fails beyond launch_retries fails the chunk future and
+    poisons the session: output()/close() raise instead of returning a
+    stream with a silent hole."""
+    def dead_execute(self, batch):
+        raise RuntimeError("dead device")
+
+    monkeypatch.setattr(MicroBatcher, "execute", dead_execute)
+    with AsyncServeRuntime(BatchPolicy(max_batch=1, max_wait_s=1e9),
+                           launch_retries=1) as rt:
+        rt.open(_spec("doomed", "fused_fp32", seed=130))
+        rng = np.random.default_rng(61)
+        fut = rt.submit(
+            "doomed", rng.standard_normal(200 * CFG.n_os).astype(np.float32))
+        rt.drain()
+        assert rt.errors
+        with pytest.raises(RuntimeError, match="dead device"):
+            fut.result(timeout=10)
+        with pytest.raises(RuntimeError, match="lost a chunk"):
+            rt.output("doomed")
+
+
+def test_async_close_waits_for_inflight_and_shutdown_rejects():
+    rt = AsyncServeRuntime(BatchPolicy(max_batch=4, max_wait_s=1e9))
+    try:
+        spec = _spec("closer", "fused_fp32", seed=140)
+        rt.open(spec)
+        rng = np.random.default_rng(67)
+        wave = rng.standard_normal(600 * CFG.n_os).astype(np.float32)
+        for c in chop(wave, 300, seed=5):
+            rt.submit("closer", c)
+        got = rt.close("closer")                     # schedules + waits
+        np.testing.assert_array_equal(got, _offline(spec, wave))
+        assert "closer" not in rt.sessions
+    finally:
+        rt.shutdown()
+    with pytest.raises(RuntimeError, match="shut down"):
+        rt.submit("closer", np.zeros(4, np.float32))

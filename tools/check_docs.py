@@ -1,0 +1,203 @@
+"""Doc-reference checker — keeps docs/*.md from rotting silently.
+
+Every code reference in the documentation must resolve against the source
+tree, so a rename/refactor that orphans a doc reference fails the same
+gate as a perf regression (`benchmarks/run.py --check` runs this first;
+it is also a standalone tier-2 check):
+
+    PYTHONPATH=src python -m tools.check_docs [files...]
+
+Checked reference forms (inline ``code`` spans, plus path-like tokens
+inside fenced blocks):
+
+  R1  repo paths        `src/repro/serve/runtime.py`, `docs/QUANTIZATION.md`
+                        — token contains "/" and a known extension; must
+                        exist relative to the repo root.
+  R2  anchored refs     `src/repro/serve/chunker.py::StreamChunker.commit`
+                        — file must exist AND every dot-separated symbol
+                        component must appear as a word in the file.
+  R3  module paths      `repro.core.autotune`, `benchmarks.bench_serve`,
+                        optionally with a trailing symbol
+                        (`repro.core.autotune.best_tile_m`) — the module
+                        must resolve under src/ (or the repo root for
+                        benchmarks/tools/tests), and the symbol, if any,
+                        must appear in the module file.
+  R4  callables         `best_tile_m()` — a `def`/`class` of that name
+                        must exist somewhere in the python tree.
+  R5  backend names     `fused_int8`, … — must be members of
+                        `BACKENDS` in src/repro/core/engine.py.
+  R6  rootless files    `BENCH_serve.json`, `README.md` — extension but no
+                        slash; must exist at the repo root or in docs/.
+
+Unrecognized tokens are ignored (the checker is a tripwire for the forms
+the docs promise to keep resolvable, not a general linter).
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import subprocess
+import sys
+from typing import Dict, List, Tuple
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+DEFAULT_DOCS = sorted(REPO_ROOT.glob("docs/*.md")) + [REPO_ROOT / "README.md"]
+
+_EXTS = (".py", ".md", ".json", ".txt", ".ini")
+_PATHY = re.compile(
+    r"\b(?:src|docs|tools|tests|benchmarks|examples|reports)/[\w./-]+")
+_FENCE = re.compile(r"```.*?```", re.S)
+_INLINE = re.compile(r"`([^`\n]+)`")
+_MODULE = re.compile(r"^(repro|benchmarks|tools|tests)(\.\w+)+$")
+_CALLABLE = re.compile(r"^(\w+)\(\)$")
+_BACKEND = re.compile(r"^(ref|fused_\w+)$")
+_ROOTLESS = re.compile(r"^[\w.-]+\.(json|md|ini)$")
+
+_file_cache: Dict[pathlib.Path, str] = {}
+
+
+def _read(path: pathlib.Path) -> str:
+    if path not in _file_cache:
+        _file_cache[path] = path.read_text(errors="replace")
+    return _file_cache[path]
+
+
+def _backends() -> List[str]:
+    src = _read(REPO_ROOT / "src" / "repro" / "core" / "engine.py")
+    m = re.search(r"^BACKENDS\s*=\s*\(([^)]*)\)", src, re.M)
+    names = re.findall(r"\"(\w+)\"", m.group(1)) if m else []
+    return names + ["auto"]
+
+
+def _gitignored(token: str) -> bool:
+    """True if git ignores the path — i.e. it names a generated artifact
+    whose absence on a fresh clone is expected, not doc rot."""
+    try:
+        rc = subprocess.run(["git", "-C", str(REPO_ROOT), "check-ignore",
+                             "-q", token], timeout=10,
+                            stdout=subprocess.DEVNULL,
+                            stderr=subprocess.DEVNULL).returncode
+    except (OSError, subprocess.TimeoutExpired):
+        return False
+    return rc == 0
+
+
+def _symbol_in(path: pathlib.Path, symbol: str) -> bool:
+    text = _read(path)
+    return all(re.search(rf"\b{re.escape(part)}\b", text)
+               for part in symbol.split("."))
+
+
+def _module_path(dotted: str) -> Tuple[pathlib.Path | None, str | None]:
+    """Resolve `pkg.mod[.Symbol…]` → (file, trailing symbol or None)."""
+    parts = dotted.split(".")
+    root = REPO_ROOT / "src" if parts[0] == "repro" else REPO_ROOT
+    for cut in range(len(parts), 0, -1):
+        base = root.joinpath(*parts[:cut])
+        candidate = None
+        if base.with_suffix(".py").is_file():
+            candidate = base.with_suffix(".py")
+        elif (base / "__init__.py").is_file():
+            candidate = base / "__init__.py"
+        if candidate is not None:
+            rest = ".".join(parts[cut:]) or None
+            return candidate, rest
+    return None, None
+
+
+def _defined_somewhere(name: str) -> bool:
+    for sub in ("src", "benchmarks", "tools", "examples", "tests"):
+        for path in (REPO_ROOT / sub).rglob("*.py"):
+            if re.search(rf"^\s*(?:def|class)\s+{re.escape(name)}\b",
+                         _read(path), re.M):
+                return True
+    return False
+
+
+def _check_token(token: str, backends: List[str]) -> str | None:
+    """Return an error message for a resolvable-form token, else None."""
+    token = token.strip()
+    if "::" in token:                                            # R2
+        path_s, _, symbol = token.partition("::")
+        if not path_s or not symbol:         # bare `::Name` prose, not a ref
+            return None
+        path = REPO_ROOT / path_s
+        if not path.is_file():
+            return f"anchored ref: no such file {path_s!r}"
+        if not _symbol_in(path, symbol):
+            return f"anchored ref: {symbol!r} not found in {path_s!r}"
+        return None
+    if "/" in token and token.endswith(_EXTS):                   # R1
+        if "*" in token:                     # glob ref, e.g. docs/*.md
+            if not any(REPO_ROOT.glob(token)):
+                return f"glob matches nothing: {token!r}"
+        elif not ((REPO_ROOT / token).exists() or _gitignored(token)):
+            # gitignored paths are GENERATED artifacts (e.g. the autotune
+            # disk cache): legitimate references even on a fresh clone
+            return f"path does not exist: {token!r}"
+        return None
+    if _MODULE.match(token):                                     # R3
+        path, symbol = _module_path(token)
+        if path is None:
+            return f"module does not resolve: {token!r}"
+        if symbol and not _symbol_in(path, symbol):
+            return f"symbol {symbol!r} not found in module file {path.name}"
+        return None
+    m = _CALLABLE.match(token)                                   # R4
+    if m:
+        if not _defined_somewhere(m.group(1)):
+            return f"no def/class named {m.group(1)!r} in the tree"
+        return None
+    if _BACKEND.match(token):                                    # R5
+        if token not in backends:
+            return (f"backend {token!r} not in engine BACKENDS "
+                    f"{tuple(backends)}")
+        return None
+    if _ROOTLESS.match(token):                                   # R6
+        if not ((REPO_ROOT / token).exists()
+                or (REPO_ROOT / "docs" / token).exists()):
+            return f"file {token!r} not at repo root or docs/"
+        return None
+    return None                                  # unrecognized form: ignore
+
+
+def check_file(path: pathlib.Path) -> List[str]:
+    text = path.read_text()
+    tokens = set(_INLINE.findall(_FENCE.sub("", text)))
+    for fence in _FENCE.findall(text):           # paths inside code blocks
+        tokens.update(_PATHY.findall(fence))
+    errors = []
+    backends = _backends()
+    try:
+        label = str(path.relative_to(REPO_ROOT))
+    except ValueError:                       # doc outside the repo (tests)
+        label = path.name
+    for token in sorted(tokens):
+        err = _check_token(token, backends)
+        if err:
+            errors.append(f"{label}: {err}")
+    return errors
+
+
+def main(argv=None) -> int:
+    files = ([pathlib.Path(a).resolve() for a in argv] if argv
+             else DEFAULT_DOCS)
+    files = [f for f in files if f.exists()]
+    if not files:
+        print("[check_docs] no doc files found")
+        return 2
+    all_errors = []
+    checked = 0
+    for f in files:
+        errs = check_file(f)
+        all_errors.extend(errs)
+        checked += 1
+    for e in all_errors:
+        print(f"[check_docs] STALE: {e}")
+    print(f"[check_docs] {checked} file(s) checked, "
+          f"{len(all_errors)} stale reference(s)")
+    return 1 if all_errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
