@@ -1,0 +1,254 @@
+"""Online adaptation under channel drift — BER recovery + serving overhead.
+
+The deployment story the companion trainable-FPGA papers tell (Ney & Wehn
+2023/2024): channels drift, a frozen equalizer's BER degrades, in-the-field
+retraining recovers it. This bench runs the whole closed loop on the
+serving runtime and records, in `BENCH_adapt.json` at the repo root:
+
+  * BER — per-burst trajectories of a FROZEN and an ADAPTIVE tenant
+    through a tap-rotation + SNR-ramp Proakis drift
+    (`repro.channels.drift`), plus post-drift BERs against a freshly
+    trained reference. The committed acceptance criterion
+    (`criteria.recovery_ok`): the frozen tenant degrades ≥4× its
+    pre-drift BER while the adaptive tenant recovers to within 2× of the
+    fresh equalizer. Deterministic (fixed seeds) — `--check` fails hard
+    if it breaks.
+  * overhead — aggregate serve throughput for the SAME traffic with and
+    without a CONTINUOUSLY BUSY background trainer thread (a loop of
+    `fine_tune_from_buffer` rounds over a pre-filled buffer). This
+    isolates the resource-contention cost of background training on the
+    serving path — the quantity a capacity planner needs — without tying
+    the measurement to how many adaptation cycles happen to fire inside
+    the window (timer- or cadence-driven cycle counts are host-speed
+    dependent and made the naive measurement meaningless). Both rates
+    feed the `--check` drift-normalized gate; their ratio
+    (`overhead.throughput_ratio`) is the tracked signal. CAVEAT: on
+    interpret-mode CPU hosts serving AND fine-tuning share the same
+    cores, so the ratio OVERSTATES what a TPU-attached host (training on
+    host, serving on device) would pay.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.adapt import (AdaptPolicy, FineTuneConfig, OnlineAdapter,
+                         PromotionPolicy, engine_ber, fine_tune_from_buffer,
+                         hard_decide)
+from repro.channels.drift import DriftingProakis, DriftSchedule
+from repro.core import equalizer as eq
+from repro.core.train_eq import EqTrainConfig, train_equalizer
+from repro.serve import (BatchPolicy, ServeRuntime, TenantSpec,
+                         drift_streams, replay, replay_adaptive)
+
+from .common import Bench
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+OUT_PATH = REPO_ROOT / "BENCH_adapt.json"
+
+CFG = eq.CNNEqConfig()
+TILE_M = 16
+SYMS_PER_BURST = 2048
+SCHEDULE = DriftSchedule(hold_bursts=4, ramp_bursts=6)
+FT = FineTuneConfig(steps=200, batch=8, seq_syms=256, lr=3e-3)
+
+
+def _adapt_policy() -> AdaptPolicy:
+    return AdaptPolicy(
+        min_train_syms=3072, adapt_every_syms=3072, eval_capacity=8192,
+        promotion=PromotionPolicy(min_eval_syms=1024, eval_bucket_syms=512))
+
+
+def _spec(tid: str, params, bn) -> TenantSpec:
+    return TenantSpec(tid, CFG, params=params, bn_state=bn,
+                      backend="fused_fp32", tile_m=TILE_M)
+
+
+def _burst_ber(output_soft: np.ndarray, pilots) -> list:
+    """Per-burst BER of a served soft-symbol stream vs the true tx syms."""
+    decided = hard_decide(np.asarray(output_soft), CFG.levels)
+    out = []
+    pos = 0
+    for true in pilots:
+        n = min(int(true.shape[0]), decided.shape[0] - pos)
+        if n <= 0:
+            break
+        out.append(float(np.mean(decided[pos:pos + n] != true[:n])))
+        pos += n
+    return out
+
+
+def _ber_phase(channel, params, bn, n_bursts: int, seed: int):
+    """The drift scenario: frozen + adaptive tenant on one sync runtime."""
+    rt = ServeRuntime(BatchPolicy(max_batch=2, max_wait_s=1e9))
+    adapter = OnlineAdapter(rt, _adapt_policy(), FT)
+    rt.open(_spec("frozen", params, bn))
+    adapter.attach(_spec("adapt", params, bn))
+    streams, pilots = drift_streams(channel, SCHEDULE, ["frozen", "adapt"],
+                                    n_bursts=n_bursts,
+                                    syms_per_burst=SYMS_PER_BURST, seed=seed)
+    replay_adaptive(rt, streams, pilots=pilots, adapter=adapter,
+                    step_every=2)
+    return rt, adapter, pilots
+
+
+FT_OVERHEAD = FineTuneConfig(steps=50, batch=8, seq_syms=256, lr=3e-3)
+
+
+def _overhead_pair(channel, params, bn, n_tenants: int = 4,
+                   n_syms: int = 1 << 18, seed: int = 7):
+    """(idle-trainer, busy-trainer) aggregate serve throughput.
+
+    The busy arm runs `fine_tune_from_buffer` rounds back-to-back on a
+    trainer thread for the whole serving window — a deterministic,
+    always-busy load (unlike live adapter cycles, whose count inside the
+    window depends on host speed). Methodology for interpret-mode noise
+    (throughput swings ±25–40% and the host drifts over minutes): long
+    windows (n_syms per tenant ⇒ seconds of serving per pass, not
+    milliseconds), a warm-up pass per arm (launch shapes + the fine-tune
+    step compile once), then best-of-3 with the two arms INTERLEAVED so
+    both sample the same minutes of host speed."""
+    import threading
+
+    from repro.serve import chop, random_waveforms
+
+    ids = [f"t{i}" for i in range(n_tenants)]
+    waves = random_waveforms(n_tenants, n_syms, CFG.n_os, seed=seed)
+    streams = {t: chop(w, 512 * CFG.n_os, seed=i, jitter=0.0)
+               for i, (t, w) in enumerate(zip(ids, waves))}
+    rx_buf, sy_buf = channel.at(0.0)(jax.random.PRNGKey(seed + 1), 1 << 14)
+    rx_buf, sy_buf = np.asarray(rx_buf), np.asarray(sy_buf)
+
+    def one_pass(busy: bool) -> float:
+        rt = ServeRuntime(BatchPolicy(max_batch=n_tenants, max_wait_s=1e9))
+        for t in ids:
+            rt.open(_spec(t, params, bn))
+        stop = threading.Event()
+
+        def trainer_loop():
+            k = jax.random.PRNGKey(0)
+            while not stop.is_set():
+                k, sub = jax.random.split(k)
+                fine_tune_from_buffer(sub, params, bn, CFG, rx_buf, sy_buf,
+                                      FT_OVERHEAD)
+
+        th = None
+        if busy:
+            th = threading.Thread(target=trainer_loop, daemon=True)
+            th.start()
+        try:
+            rep = replay(rt, streams)
+        finally:
+            stop.set()
+            if th is not None:
+                th.join()
+        return rep["agg_syms_per_s"]
+
+    one_pass(False)                                   # warm-up (compiles)
+    one_pass(True)
+    best = {False: 0.0, True: 0.0}
+    for _ in range(3):
+        for busy in (False, True):                    # interleaved arms
+            best[busy] = max(best[busy], one_pass(busy))
+    return best[False], best[True]
+
+
+def run(n_bursts: int = 26, train_steps: int = 600,
+        out_path: Optional[pathlib.Path] = OUT_PATH) -> dict:
+    bench = Bench("adapt_drift", "companion papers: in-the-field retraining")
+    channel = DriftingProakis()
+
+    # base deployment (pre-drift) + fresh reference at the drifted state
+    tcfg = EqTrainConfig(steps=train_steps, eval_syms=1 << 14)
+    params, bn, info0 = train_equalizer(jax.random.PRNGKey(0), "cnn", CFG,
+                                        channel.at(0.0), tcfg)
+    params_f, bn_f, _ = train_equalizer(jax.random.PRNGKey(1), "cnn", CFG,
+                                        channel.at(1.0), tcfg)
+    ber_pre = float(info0["ber"])
+    print(f"[bench_adapt] base trained: pre-drift BER {ber_pre:.3e}")
+
+    rt, adapter, pilots = _ber_phase(channel, params, bn, n_bursts, seed=3)
+    sess = rt.sessions.get("adapt")
+    promotions = sum(r.action == "promoted" for r in adapter.history)
+    rollbacks = sum(r.action == "rolled_back" for r in adapter.history)
+
+    # fresh evaluation data at the fully drifted state
+    rx1, sy1 = channel.at(1.0)(jax.random.PRNGKey(77), 1 << 14)
+    rx1, sy1 = np.asarray(rx1), np.asarray(sy1)
+    ber_frozen = engine_ber(rt.sessions.get("frozen").engine, rx1, sy1)
+    ber_adapt = engine_ber(sess.engine, rx1, sy1)
+    ber_fresh = engine_ber(_spec("fresh", params_f, bn_f).build_engine(),
+                           rx1, sy1)
+
+    traj = {
+        "t": [SCHEDULE.t_at(b) for b in range(n_bursts)],
+        "frozen": _burst_ber(rt.output("frozen"), pilots["frozen"]),
+        "adaptive": _burst_ber(rt.output("adapt"), pilots["adapt"]),
+    }
+    degradation = ber_frozen / max(ber_pre, 1e-4)
+    vs_fresh = ber_adapt / max(ber_fresh, 2.5e-3)
+    criteria = {
+        "frozen_degradation_x": degradation,
+        "adaptive_vs_fresh_x": vs_fresh,
+        # the ISSUE-5 acceptance criterion, also asserted in
+        # tests/test_adapt.py::test_drift_recovery_acceptance
+        "recovery_ok": bool(degradation >= 4.0 and vs_fresh <= 2.0),
+    }
+    print(f"[bench_adapt] post-drift BER: frozen {ber_frozen:.3e} "
+          f"({degradation:.1f}x degraded), adaptive {ber_adapt:.3e} "
+          f"({vs_fresh:.2f}x of fresh {ber_fresh:.3e}); "
+          f"{promotions} promotion(s), {rollbacks} rollback(s), "
+          f"epochs {sess.swap_log}")
+
+    # serving overhead of a busy background trainer (4 tenants)
+    rate_frozen, rate_adapting = _overhead_pair(channel, params, bn)
+    ratio = rate_adapting / rate_frozen
+    print(f"[bench_adapt] serve throughput: idle-trainer "
+          f"{rate_frozen:,.0f} sym/s vs busy-trainer "
+          f"{rate_adapting:,.0f} sym/s ({ratio:.2f}x; interpret-mode "
+          f"hosts overstate the cost)")
+
+    report = {
+        "backend_default": jax.default_backend(),
+        "scenario": {
+            "channel": "proakis_drift(tap roll, -4 dB)",
+            "n_bursts": n_bursts, "syms_per_burst": SYMS_PER_BURST,
+            "hold_bursts": SCHEDULE.hold_bursts,
+            "ramp_bursts": SCHEDULE.ramp_bursts,
+            "train_steps": train_steps,
+            "fine_tune": {"steps": FT.steps, "lr": FT.lr,
+                          "seq_syms": FT.seq_syms},
+        },
+        "ber": {
+            "pre_drift": ber_pre, "frozen_post": ber_frozen,
+            "adaptive_post": ber_adapt, "fresh_post": ber_fresh,
+            "trajectory": traj, "promotions": promotions,
+            "rollbacks": rollbacks,
+            "epochs": [list(e) for e in sess.swap_log],
+        },
+        "criteria": criteria,
+        "overhead": {
+            "serve_syms_per_s_frozen": rate_frozen,
+            "serve_syms_per_s_adapting": rate_adapting,
+            "throughput_ratio": ratio,
+            "note": ("serving throughput with vs without a continuously "
+                     "busy background trainer thread (fine_tune rounds "
+                     "back-to-back); on interpret-mode CPU hosts serving "
+                     "and fine-tuning share the same cores, so the ratio "
+                     "OVERSTATES the cost on a real accelerator host; "
+                     "tracked drift-normalized by --check"),
+        },
+    }
+    if out_path is not None:
+        out_path.write_text(json.dumps(report, indent=2))
+        print(f"[bench_adapt] wrote {out_path}")
+    bench.record("report", report)
+    return bench.finish()
+
+
+if __name__ == "__main__":
+    run()

@@ -9,6 +9,8 @@ One benchmark per paper table/figure (see DESIGN.md §6):
     bench_stream    Fig. 9/§7.2  64-instance stream partitioning
     bench_engine    §7       engine backend throughput → BENCH_engine.json
     bench_serve     §5.3     multi-tenant serving → BENCH_serve.json
+    bench_adapt     companion papers: online adaptation under drift
+                             → BENCH_adapt.json
     bench_timing    Fig. 12  timing model vs simulated measurement
     bench_platform  Fig. 13-15  CPU measured / TPU roofline-projected
     bench_roofline  Table 1 / §Roofline  aggregate the dry-run artifacts
@@ -17,16 +19,21 @@ One benchmark per paper table/figure (see DESIGN.md §6):
 whose orderings (not absolute BERs) carry the claims.
 
 `--check` is the perf-regression gate: it verifies the docs references
-(tools/check_docs.py), then re-measures bench_engine and bench_serve
-(without overwriting the committed baselines) and exits non-zero if any
-tracked throughput fell more than `--tol` below the `BENCH_engine.json` /
-`BENCH_serve.json` committed at the repo root — after normalizing out the
+(tools/check_docs.py), then re-measures bench_engine, bench_serve and
+bench_adapt (without overwriting the committed baselines) and exits
+non-zero if any tracked throughput fell more than `--tol` below the
+`BENCH_engine.json` / `BENCH_serve.json` / `BENCH_adapt.json` committed at
+the repo root — after normalizing out the
 uniform host-speed drift per gate group (geomean over shared keys), so
 only RELATIVE per-path regressions fire the gate (default tol: 10% on
-accelerators, 35% on interpret-mode CPU hosts — see `_default_tol`).
+accelerators, 35% on interpret-mode CPU hosts — see `_default_tol`). The
+adapt gate additionally enforces a HARD, host-independent criterion: the
+drift-recovery claim (`criteria.recovery_ok` in `BENCH_adapt.json`) is
+deterministic under its fixed seeds, so its failure is never noise.
 Compare like with like: the committed baseline must come from the same
 host class AND be recorded in the gate's in-process order
-(`--only engine serve`); CPU hosts run the kernels in interpret mode.
+(`--only engine serve adapt`); CPU hosts run the kernels in interpret
+mode.
 """
 from __future__ import annotations
 
@@ -38,9 +45,9 @@ import sys
 import time
 import traceback
 
-from . import (bench_dop, bench_dse, bench_engine, bench_platform,
-               bench_proakis, bench_quant, bench_roofline, bench_serve,
-               bench_stream, bench_timing)
+from . import (bench_adapt, bench_dop, bench_dse, bench_engine,
+               bench_platform, bench_proakis, bench_quant, bench_roofline,
+               bench_serve, bench_stream, bench_timing)
 from .common import REPORT_DIR
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
@@ -59,6 +66,26 @@ def _serve_rates(rep: dict) -> dict:
     return {f"serve/{c}/N{n}": t["serve"]["agg_syms_per_s"]
             for c, e in rep.get("configs", {}).items()
             for n, t in e.get("tenants", {}).items()}
+
+
+def _adapt_rates(rep: dict) -> dict:
+    ov = rep.get("overhead", {})
+    return {f"adapt/{k}": ov[k]
+            for k in ("serve_syms_per_s_frozen", "serve_syms_per_s_adapting")
+            if k in ov}
+
+
+def _adapt_criteria(rep: dict):
+    """Hard (host-independent) gate on the fresh adapt report: the BER
+    drift-recovery criterion is deterministic under its fixed seeds, so a
+    failure is a code regression, never noise."""
+    crit = rep.get("criteria", {})
+    if crit.get("recovery_ok", False):
+        return []
+    return [f"adapt: drift-recovery criterion failed "
+            f"(frozen degradation {crit.get('frozen_degradation_x', 0):.1f}x"
+            f" must be >= 4, adaptive-vs-fresh "
+            f"{crit.get('adaptive_vs_fresh_x', 99):.2f}x must be <= 2)"]
 
 
 def _default_tol() -> float:
@@ -112,11 +139,14 @@ def check(tol: float | None = None) -> int:
         return doc_rc
     gates = (
         ("engine", REPO_ROOT / "BENCH_engine.json",
-         lambda: bench_engine.run(out_path=None), _engine_rates),
+         lambda: bench_engine.run(out_path=None), _engine_rates, None),
         ("serve", REPO_ROOT / "BENCH_serve.json",
-         lambda: bench_serve.run(out_path=None), _serve_rates))
+         lambda: bench_serve.run(out_path=None), _serve_rates, None),
+        ("adapt", REPO_ROOT / "BENCH_adapt.json",
+         lambda: bench_adapt.run(out_path=None), _adapt_rates,
+         _adapt_criteria))
     # validate the configuration before burning minutes of re-measurement
-    missing = [p.name for _, p, _, _ in gates if not p.exists()]
+    missing = [p.name for _, p, _, _, _ in gates if not p.exists()]
     if missing:
         print(f"[check] FAIL: no committed baseline(s): {', '.join(missing)}")
         return 2
@@ -133,10 +163,16 @@ def check(tol: float | None = None) -> int:
         return {k: fresh[k] / baseline[k] / drift for k in shared}
 
     failures = []          # (key, fresh, baseline, normalized ratio)
+    hard_failures = []     # host-independent criteria (e.g. BER recovery)
     compared = 0
-    for name, path, bench_fn, extract in gates:
+    for name, path, bench_fn, extract, criteria_fn in gates:
         baseline = extract(json.loads(path.read_text()))
-        fresh = extract(bench_fn()["results"]["report"])
+        fresh_report = bench_fn()["results"]["report"]
+        fresh = extract(fresh_report)
+        if criteria_fn is not None:
+            for msg in criteria_fn(fresh_report):
+                print(f"[check] CRITERION FAILED: {msg}")
+                hard_failures.append(msg)
         for key in sorted(baseline):
             if key not in fresh:
                 print(f"[check] warn: {key} in baseline but not re-measured")
@@ -164,7 +200,8 @@ def check(tol: float | None = None) -> int:
                   f"{baseline[key]:,.0f} sym/s ({ratio:.2f}x normalized)")
             if ratio < 1.0 - tol:
                 failures.append((key, fresh[key], baseline[key], ratio))
-    print(f"[check] {compared} rates compared, {len(failures)} regressions")
+    print(f"[check] {compared} rates compared, {len(failures)} regressions, "
+          f"{len(hard_failures)} hard-criterion failure(s)")
     if failures:
         print(f"[check] FAIL — rates more than {tol:.0%} below baseline "
               f"after drift normalization:")
@@ -175,7 +212,12 @@ def check(tol: float | None = None) -> int:
         print("[check] interpret-mode CPU hosts are noisy (±25–40% per "
               "key); if this host class matches the baseline, re-run or "
               "raise --tol (see docs/ARCHITECTURE.md)")
-    return 1 if failures else 0
+    if hard_failures:
+        print("[check] FAIL — host-independent criteria (deterministic, "
+              "not noise-gated):")
+        for msg in hard_failures:
+            print(f"[check]   {msg}")
+    return 1 if (failures or hard_failures) else 0
 
 
 def main(argv=None) -> int:
@@ -200,6 +242,7 @@ def main(argv=None) -> int:
         ("timing", lambda: bench_timing.run()),
         ("engine", lambda: bench_engine.run()),
         ("serve", lambda: bench_serve.run()),
+        ("adapt", lambda: bench_adapt.run()),
         ("stream", lambda: bench_stream.run()),
         ("dop", lambda: bench_dop.run()),
         ("roofline", lambda: bench_roofline.run()),

@@ -1,0 +1,250 @@
+"""OnlineAdapter — the control loop that closes collect → fine-tune →
+shadow-eval → promote/rollback over a serving runtime.
+
+One adapter manages any number of ADAPTIVE tenants on one
+`ServeRuntime`/`AsyncServeRuntime`. Per tenant it owns a
+`SampleCollector` (wired into the session's descatter tap at attach), and
+on each `step()` runs at most one adaptation cycle:
+
+  1. ROLLBACK CHECK — if the last action was a promotion, re-score the
+     pre-swap engine against the active one on fresh held-out traffic;
+     if the old weights now win by the promotion hysteresis, the
+     promotion was wrong (or the channel moved again in its favour) and
+     the stream rolls back bit-identically.
+  2. CADENCE — skip unless `adapt_every_syms` new labelled symbols
+     arrived since the last fine-tune (background training should track
+     the drift rate, not spin).
+  3. FINE-TUNE — weight-only QAT resume from the ACTIVE params on the
+     buffered training slice (`repro.adapt.trainer`).
+  4. SHADOW EVAL — candidate vs active on the held-out slice
+     (`repro.adapt.shadow`); the candidate engine is built through the
+     same pinned-formats spec the hot-swap would install, so the score is
+     of the real deployed artifact.
+  5. PROMOTE — on a hysteresis-guarded win, hot-swap the weights into the
+     live stream (`swap_weights`: lands at a chunk boundary, bitwise
+     within each weight epoch); otherwise the candidate is discarded.
+
+`step()` is synchronous and deterministic — the form the tests and the
+sync benches drive. `start()` runs the same cycles from a daemon thread
+(`interval_s` cadence) against an `AsyncServeRuntime`, whose swap barrier
+makes hot-swaps safe under concurrent traffic; pair it with the sync
+`ServeRuntime` only if nothing else touches that runtime concurrently
+(the sync runtime is single-threaded by contract).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from ..serve.session import Session, TenantSpec
+from .collector import SampleCollector
+from .shadow import PromotionPolicy, ShadowReport, shadow_evaluate
+from .trainer import FineTuneConfig, fine_tune_from_buffer
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptPolicy:
+    """When to adapt, and how candidate promotion is guarded.
+
+    min_train_syms:   don't fine-tune before this many buffered TRAINING
+                      symbols (default 4096; must also exceed the
+                      fine-tune window).
+    adapt_every_syms: cadence — new labelled symbols between cycles
+                      (default 4096). The knob that balances tracking
+                      speed against background compute.
+    eval_capacity:    collector ring bound in symbols (default 32768).
+    eval_every:       collector holdout interleave (default 4 → 25%).
+    promotion:        the `PromotionPolicy` hysteresis for both the
+                      promote and the rollback comparisons.
+    """
+    min_train_syms: int = 4096
+    adapt_every_syms: int = 4096
+    eval_capacity: int = 1 << 15
+    eval_every: int = 4
+    promotion: PromotionPolicy = PromotionPolicy()
+
+
+@dataclasses.dataclass
+class AdaptReport:
+    """One adaptation cycle's outcome for one tenant.
+
+    action ∈ {"idle", "rejected", "promoted", "rolled_back",
+    "swap_refused"}; `shadow` carries the BER evidence when an evaluation
+    ran; `weight_epoch` is the tenant's epoch AFTER the cycle.
+    """
+    tenant_id: str
+    action: str
+    weight_epoch: int
+    shadow: Optional[ShadowReport] = None
+    train_info: Optional[dict] = None
+
+
+@dataclasses.dataclass
+class _TenantState:
+    collector: SampleCollector
+    key: jax.Array
+    last_adapt_syms: int = 0
+    check_rollback: bool = False     # set after a promotion
+
+
+class OnlineAdapter:
+    """Background adaptation controller over one serving runtime."""
+
+    def __init__(self, runtime, policy: Optional[AdaptPolicy] = None,
+                 fine_tune: Optional[FineTuneConfig] = None, seed: int = 0):
+        self.runtime = runtime
+        self.policy = policy or AdaptPolicy()
+        self.fine_tune = fine_tune or FineTuneConfig()
+        self._key = jax.random.PRNGKey(seed)
+        self._states: Dict[str, _TenantState] = {}
+        self.history: List[AdaptReport] = []
+        # background-loop failures land here (mirrors
+        # AsyncServeRuntime.errors) — a persistently failing adapter must
+        # be distinguishable from a healthy idle one
+        self.errors: List[BaseException] = []
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+
+    # -- tenant lifecycle --------------------------------------------------
+
+    def attach(self, spec: TenantSpec) -> Session:
+        """Open the tenant on the serving runtime AND wire its descatter
+        tap into a fresh collector. Adaptive tenants must be opened with
+        `params` (fine-tuning resumes from them; a weights-only spec has
+        nothing to train)."""
+        if spec.params is None:
+            raise ValueError(
+                f"tenant {spec.tenant_id!r}: adaptation needs params "
+                f"(weight-only specs cannot be fine-tuned)")
+        session = self.runtime.open(spec)
+        self._key, sub = jax.random.split(self._key)
+        col = SampleCollector(n_os=spec.cfg.n_os, levels=spec.cfg.levels,
+                              capacity_syms=self.policy.eval_capacity,
+                              eval_every=self.policy.eval_every)
+        session.tap = col.on_segment
+        self._states[spec.tenant_id] = _TenantState(collector=col, key=sub)
+        return session
+
+    def feed_pilots(self, tenant_id: str, syms: np.ndarray) -> None:
+        """Queue true tx symbols (stream order) as labels for the tenant's
+        next served symbols — see `SampleCollector.add_pilots`."""
+        self._states[tenant_id].collector.add_pilots(syms)
+
+    def collector(self, tenant_id: str) -> SampleCollector:
+        return self._states[tenant_id].collector
+
+    @property
+    def tenants(self):
+        """IDs of the tenants attached to this adapter."""
+        return tuple(self._states)
+
+    # -- the adaptation cycle ----------------------------------------------
+
+    def step(self, tenant_id: Optional[str] = None) -> List[AdaptReport]:
+        """Run one adaptation cycle for `tenant_id` (or every attached
+        tenant). Returns the per-tenant reports (also appended to
+        `history`)."""
+        ids = [tenant_id] if tenant_id is not None else list(self._states)
+        out = []
+        for tid in ids:
+            rep = self._step_one(tid)
+            self.history.append(rep)
+            out.append(rep)
+        return out
+
+    def _step_one(self, tid: str) -> AdaptReport:
+        st = self._states[tid]
+        session = self.runtime.sessions.get(tid)
+        pol = self.policy
+
+        _, _, eval_rx, eval_syms = st.collector.training_view()
+
+        # 1. rollback check — did the last promotion survive fresh data?
+        if st.check_rollback and session.prev_spec is not None:
+            prev_engine = session.prev_spec.build_engine()
+            rb = shadow_evaluate(session.engine, prev_engine,
+                                 eval_rx, eval_syms, pol.promotion)
+            if rb.promote:           # the OLD weights win → undo the swap
+                epoch = self.runtime.rollback_weights(tid)
+                st.check_rollback = False
+                st.last_adapt_syms = st.collector.total_syms
+                return AdaptReport(tid, "rolled_back", epoch, shadow=rb)
+            if not np.isnan(rb.ber_active):
+                st.check_rollback = False      # verdict reached: it holds
+
+        # 2. cadence + data sufficiency
+        train_rx, train_syms, _, _ = st.collector.training_view()
+        fresh = st.collector.total_syms - st.last_adapt_syms
+        if (fresh < pol.adapt_every_syms
+                or train_syms.shape[0] < max(pol.min_train_syms,
+                                             self.fine_tune.seq_syms + 1)):
+            return AdaptReport(tid, "idle", session.weight_epoch)
+
+        # 3. fine-tune from the ACTIVE params (weight-only, frozen formats)
+        st.key, ktrain = jax.random.split(st.key)
+        params, bn_state, info = fine_tune_from_buffer(
+            ktrain, session.spec.params, session.spec.bn_state,
+            session.spec.cfg, train_rx, train_syms, self.fine_tune)
+        st.last_adapt_syms = st.collector.total_syms
+
+        # 4. shadow-evaluate the REAL candidate artifact (pinned formats)
+        engine = session.engine
+        cand_spec = dataclasses.replace(
+            session.spec, params=params, bn_state=bn_state, weights=None,
+            formats=engine.formats, backend=engine.backend,
+            tile_m=engine.resolved_tile_m())
+        shadow = shadow_evaluate(engine, cand_spec.build_engine(),
+                                 eval_rx, eval_syms, pol.promotion)
+        if not shadow.promote:
+            return AdaptReport(tid, "rejected", session.weight_epoch,
+                               shadow=shadow, train_info=info)
+
+        # 5. promote — hot-swap at a chunk boundary
+        try:
+            epoch = self.runtime.swap_weights(tid, params=params,
+                                              bn_state=bn_state)
+        except ValueError:
+            # the swap guard refused (deployment identity would change) —
+            # the stream keeps its weights; recorded, not raised: the loop
+            # must keep running for the other tenants
+            return AdaptReport(tid, "swap_refused", session.weight_epoch,
+                               shadow=shadow, train_info=info)
+        st.check_rollback = True
+        return AdaptReport(tid, "promoted", epoch, shadow=shadow,
+                           train_info=info)
+
+    # -- background mode ---------------------------------------------------
+
+    def start(self, interval_s: float = 0.25) -> None:
+        """Run `step()` cycles from a daemon thread every `interval_s`.
+        Use with `AsyncServeRuntime` (its swap barrier serializes against
+        live traffic); the sync runtime is only safe here if no other
+        thread drives it. Cycle failures never kill the thread (the
+        stream itself is not at risk) but are recorded in `errors` —
+        check it when a tenant that should be adapting is not."""
+        if self._thread is not None:
+            raise RuntimeError("adapter already started")
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.is_set():
+                try:
+                    self.step()
+                except Exception as e:   # noqa: BLE001 — keep adapting
+                    self.errors.append(e)
+                self._stop.wait(interval_s)
+
+        self._thread = threading.Thread(target=loop, name="online-adapter",
+                                        daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join()
+        self._thread = None

@@ -1,9 +1,11 @@
-from . import common, imdd, proakis
+from . import common, drift, imdd, proakis
 from .common import awgn, ber, ber_from_soft, bits_to_pam, pam_decision
+from .drift import (DriftingIMDD, DriftingProakis, DriftSchedule)
 from .imdd import IMDDConfig
 from .proakis import ProakisConfig
 
 __all__ = [
-    "common", "imdd", "proakis", "awgn", "ber", "ber_from_soft",
-    "bits_to_pam", "pam_decision", "IMDDConfig", "ProakisConfig",
+    "common", "drift", "imdd", "proakis", "awgn", "ber", "ber_from_soft",
+    "bits_to_pam", "pam_decision", "DriftingIMDD", "DriftingProakis",
+    "DriftSchedule", "IMDDConfig", "ProakisConfig",
 ]

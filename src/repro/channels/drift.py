@@ -1,0 +1,247 @@
+"""Time-varying channel wrappers — the in-the-field drift scenario.
+
+The source paper trains its equalizer once, but the companion trainable-FPGA
+work (Ney & Wehn 2023/2024) makes the deployment reality explicit: optical
+and magnetic channels DRIFT — temperature changes the fiber's effective CD,
+heads age, components get replaced — and a frozen equalizer's BER degrades
+until someone retrains it. This module turns the repo's stationary channel
+simulators (`repro.channels.proakis`, `repro.channels.imdd`) into
+piecewise-stationary drifting ones so the online-adaptation runtime
+(`repro.adapt`) has a scenario to close the loop on.
+
+Model: a drift coordinate t ∈ [0, 1] selects the channel state.
+
+  * `DriftingProakis` — tap rotation: the impulse response blends from
+    Proakis-B toward a rotated (postcursor-heavy) tap vector, plus an SNR
+    ramp. Tap rotation moves the channel's energy across the response —
+    exactly the kind of change that is catastrophic for a frozen equalizer
+    but trivially re-learnable (the new taps are still inside the CNN's
+    receptive field).
+  * `DriftingIMDD` — fiber-length ramp (temperature/aging changes the
+    accumulated chromatic dispersion, i.e. the strength of the nonlinear
+    CD × square-law ISI) plus an SNR ramp.
+  * `DriftSchedule` — burst index → t mapping (hold, then linear ramp,
+    then hold at 1): the piecewise-stationary trace `serve.loadgen`'s
+    drift replay walks through.
+
+The per-t simulators share ONE jit cache: the drifting parameters (taps,
+SNR, fiber length) are traced arguments, so sweeping t costs a single XLA
+compile per (cfg, n_syms) — important on interpret-mode CPU hosts where
+each compile is ~175 ms. Under a fixed PRNG key every `at(t)` channel
+function is bitwise-reproducible call-to-call (`tests/test_channels.py`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import awgn, bits_to_pam, fir_same, rc_taps, rrc_taps, upsample
+from .imdd import C_LIGHT, IMDDConfig
+from .proakis import PROAKIS_B, ProakisConfig
+
+# a channel function, as consumed by core.train_eq and the loadgen:
+# (key, n_syms) → (rx waveform at n_os samples/symbol, tx symbol indices)
+ChannelFn = Callable[[jax.Array, int], Tuple[jnp.ndarray, jnp.ndarray]]
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftSchedule:
+    """Burst index → drift coordinate t ∈ [0, 1].
+
+    hold_bursts: bursts at t=0 (the stationary regime the equalizer was
+                 trained for) before the ramp starts.
+    ramp_bursts: bursts over which t ramps linearly 0 → 1; after the ramp
+                 the channel holds at t=1 (the fully drifted state).
+    """
+    hold_bursts: int = 8
+    ramp_bursts: int = 8
+
+    def t_at(self, burst: int) -> float:
+        if burst < self.hold_bursts:
+            return 0.0
+        if self.ramp_bursts <= 0:
+            return 1.0
+        return min(1.0, (burst - self.hold_bursts) / self.ramp_bursts)
+
+    @property
+    def total_to_settle(self) -> int:
+        """First burst index at which the channel is fully drifted."""
+        return self.hold_bursts + self.ramp_bursts
+
+
+# ---------------------------------------------------------------------------
+# Proakis-B with tap rotation + SNR ramp
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg", "n_syms"))
+def simulate_proakis_taps(key: jax.Array, cfg: ProakisConfig, n_syms: int,
+                          h: jnp.ndarray, snr_db: jnp.ndarray):
+    """`proakis.simulate` with TRACED channel taps and SNR.
+
+    Identical DSP chain (RC shaping at N_os, zero-stuffed symbol-rate ISI,
+    AWGN, normalization); only the impulse response `h` (shape (3,)) and
+    `snr_db` are runtime values, so every drift state shares one compiled
+    program per (cfg, n_syms).
+    """
+    kbits, knoise = jax.random.split(key)
+    syms = jax.random.randint(kbits, (n_syms,), 0, cfg.levels)
+    amps = bits_to_pam(syms, cfg.levels)
+
+    taps = jnp.asarray(rc_taps(cfg.rc_taps, cfg.rc_beta, cfg.n_os))
+    x = upsample(amps, cfg.n_os)
+    x = fir_same(x, taps)
+
+    h_os = upsample(h.astype(jnp.float32), cfg.n_os)[: 2 * cfg.n_os + 1]
+    y = fir_same(x, h_os)
+
+    y = awgn(knoise, y, snr_db)
+    y = (y - jnp.mean(y)) / (jnp.std(y) + 1e-9)
+    return y, syms
+
+
+class DriftingProakis:
+    """Proakis-B magnetic-recording channel under tap rotation + SNR ramp.
+
+    cfg:          the stationary `ProakisConfig` (t=0 state).
+    taps_to:      impulse response at t=1 (default: Proakis-B rotated one
+                  position — the channel's energy migrates to the
+                  postcursor, a shape a frozen equalizer was never
+                  trained on). Blends linearly with the base taps and is
+                  renormalized to unit energy at every t, so only the ISI
+                  STRUCTURE drifts, not the signal power.
+    snr_delta_db: SNR change at t=1 (default −4 dB — aging adds noise).
+    """
+
+    def __init__(self, cfg: ProakisConfig = ProakisConfig(),
+                 taps_to: Tuple[float, ...] = None,
+                 snr_delta_db: float = -4.0):
+        self.cfg = cfg
+        h0 = np.asarray(PROAKIS_B, np.float32)
+        h1 = (np.asarray(taps_to, np.float32) if taps_to is not None
+              else np.roll(h0, 1))
+        self._h0 = h0 / np.linalg.norm(h0)
+        self._h1 = h1 / np.linalg.norm(h1)
+        self.snr_delta_db = float(snr_delta_db)
+
+    @property
+    def n_os(self) -> int:
+        return self.cfg.n_os
+
+    @property
+    def levels(self) -> int:
+        return self.cfg.levels
+
+    def taps_at(self, t: float) -> np.ndarray:
+        h = (1.0 - t) * self._h0 + t * self._h1
+        return (h / np.linalg.norm(h)).astype(np.float32)
+
+    def snr_at(self, t: float) -> float:
+        return self.cfg.snr_db + t * self.snr_delta_db
+
+    def at(self, t: float) -> ChannelFn:
+        """The channel function frozen at drift coordinate t."""
+        t = float(min(1.0, max(0.0, t)))
+        h = jnp.asarray(self.taps_at(t))
+        snr = jnp.float32(self.snr_at(t))
+        return lambda key, n_syms: simulate_proakis_taps(
+            key, self.cfg, n_syms, h, snr)
+
+
+# ---------------------------------------------------------------------------
+# IM/DD with fiber-length (CD) + SNR ramp
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg", "n_syms"))
+def simulate_imdd_fiber(key: jax.Array, cfg: IMDDConfig, n_syms: int,
+                        fiber_km: jnp.ndarray, snr_db: jnp.ndarray):
+    """`imdd.simulate` with TRACED fiber length and electrical SNR.
+
+    The CD all-pass phase is computed in-graph from the traced length
+    (H(f) = exp(+j·(π λ² D L / c)·f²)); everything else matches the
+    stationary simulator exactly.
+    """
+    kbits, knoise = jax.random.split(key)
+    syms = jax.random.randint(kbits, (n_syms,), 0, cfg.levels)
+    amps = bits_to_pam(syms, cfg.levels)
+
+    taps = jnp.asarray(rrc_taps(cfg.rrc_taps, cfg.rrc_beta, cfg.sim_os))
+    x = upsample(amps, cfg.sim_os)
+    x = fir_same(x, taps) * jnp.sqrt(float(cfg.sim_os))
+
+    drive = cfg.mzm_vpi_frac * (np.pi / 2.0) * x
+    field = jnp.cos(np.pi / 4.0 - drive / 2.0)
+
+    fs = cfg.baud_rate * cfg.sim_os
+    lam = cfg.wavelength_nm * 1e-9
+    d = cfg.cd_ps_nm_km * 1e-12 / 1e-9 / 1e3
+    f = jnp.asarray(np.fft.fftfreq(int(field.shape[0]), d=1.0 / fs),
+                    jnp.float32)
+    phase = (np.pi * lam**2 * d / C_LIGHT) * (fiber_km * 1e3) * f**2
+    spec = jnp.fft.fft(field.astype(jnp.complex64))
+    field_out = jnp.fft.ifft(spec * jnp.exp(1j * phase.astype(jnp.float32)))
+
+    knoise, kase = jax.random.split(knoise)
+    p_sig = jnp.mean(jnp.abs(field_out) ** 2)
+    p_ase = p_sig / (10.0 ** (cfg.osnr_db / 10.0))
+    ase = jnp.sqrt(p_ase / 2.0) * (
+        jax.random.normal(kase, field_out.shape)
+        + 1j * jax.random.normal(jax.random.fold_in(kase, 1),
+                                 field_out.shape))
+    field_out = field_out + ase.astype(field_out.dtype)
+
+    current = jnp.abs(field_out) ** 2
+    fnp = np.fft.fftfreq(int(current.shape[0]), d=1.0 / fs)
+    pd_lpf = jnp.asarray(1.0 / np.sqrt(1.0 + (fnp / cfg.pd_bw_hz) ** 8))
+    current = jnp.real(jnp.fft.ifft(jnp.fft.fft(current.astype(jnp.complex64))
+                                    * pd_lpf))
+    current = awgn(knoise, current.astype(jnp.float32), snr_db)
+
+    step = cfg.sim_os // cfg.n_os
+    rx = current[::step]
+    rx = (rx - jnp.mean(rx)) / (jnp.std(rx) + 1e-9)
+    return rx, syms
+
+
+class DriftingIMDD:
+    """40 GBd IM/DD optical channel under fiber-length (CD) + SNR drift.
+
+    cfg:            the stationary `IMDDConfig` (t=0 state).
+    fiber_delta_km: accumulated-dispersion change at t=1 (default +6 km of
+                    effective fiber — temperature moves the CD coefficient,
+                    which is equivalent to a length change).
+    snr_delta_db:   electrical-SNR change at t=1 (default −3 dB).
+    """
+
+    def __init__(self, cfg: IMDDConfig = IMDDConfig(),
+                 fiber_delta_km: float = 6.0,
+                 snr_delta_db: float = -3.0):
+        self.cfg = cfg
+        self.fiber_delta_km = float(fiber_delta_km)
+        self.snr_delta_db = float(snr_delta_db)
+
+    @property
+    def n_os(self) -> int:
+        return self.cfg.n_os
+
+    @property
+    def levels(self) -> int:
+        return self.cfg.levels
+
+    def fiber_at(self, t: float) -> float:
+        return self.cfg.fiber_km + t * self.fiber_delta_km
+
+    def snr_at(self, t: float) -> float:
+        return self.cfg.snr_db + t * self.snr_delta_db
+
+    def at(self, t: float) -> ChannelFn:
+        """The channel function frozen at drift coordinate t."""
+        t = float(min(1.0, max(0.0, t)))
+        fiber = jnp.float32(self.fiber_at(t))
+        snr = jnp.float32(self.snr_at(t))
+        return lambda key, n_syms: simulate_imdd_fiber(
+            key, self.cfg, n_syms, fiber, snr)

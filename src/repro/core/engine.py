@@ -45,6 +45,7 @@ import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax.numpy as jnp
+import numpy as np
 
 from . import autotune as autotune_lib
 from . import qat as qat_lib
@@ -58,11 +59,16 @@ Format = Tuple[int, int, int, int]          # (w_int, w_frac, a_int, a_frac)
 
 def _folded_fit_grid(weights, formats) -> bool:
     """True iff every BN-folded weight is representable on its layer's
-    learned Q(w_int).(w_frac) grid without saturating."""
+    learned Q(w_int).(w_frac) grid without saturating. w_int/w_frac may be
+    per-output-channel tuples (`qat.per_channel_formats`) — each channel is
+    then checked against its own grid."""
     for (w, _), (wi, wf, _, _) in zip(weights, formats):
-        hi = 2.0 ** wi - 2.0 ** -wf
-        lo = -(2.0 ** wi)
-        if float(jnp.max(w)) > hi or float(jnp.min(w)) < lo:
+        wi_col = np.asarray(wi, np.float64).reshape(-1, 1, 1)
+        wf_col = np.asarray(wf, np.float64).reshape(-1, 1, 1)
+        hi = np.exp2(wi_col) - np.exp2(-wf_col)
+        lo = -np.exp2(wi_col)
+        wv = np.asarray(w, np.float64)
+        if bool(np.any(wv > hi)) or bool(np.any(wv < lo)):
             return False
     return True
 
@@ -115,7 +121,8 @@ class EqualizerEngine:
     def from_params(cls, params: Dict[str, Any], bn_state: Optional[Dict],
                     cfg: CNNEqConfig, backend: str = "auto",
                     tile_m: int | str = "auto",
-                    interpret: Optional[bool] = None) -> "EqualizerEngine":
+                    interpret: Optional[bool] = None,
+                    per_channel: bool = False) -> "EqualizerEngine":
         """Deployment step: fold BN, derive quantized-deployment formats
         from learned QAT widths (`qat.deployment_plan`), pick the backend.
 
@@ -127,6 +134,14 @@ class EqualizerEngine:
         in the 9–16-bit range) deploys fused_bf16, whose exponent covers
         the overflow with no clipping; only >16-bit formats (or no QAT at
         all) fall back to fused_fp32.
+
+        per_channel=True refines the learned per-layer weight formats to
+        per-output-channel scales (`qat.per_channel_formats`) before the
+        backend decision: same learned total width, finer grids on channels
+        with small folded weights — no extra MXU cost (the requant is
+        already per-row). This is a DEPLOYMENT refinement; the formats are
+        derived deterministically from the folded weights, so engine
+        rebuilds (e.g. after serve-pool eviction) reproduce them exactly.
         """
         folded = fold_bn(params, bn_state or init_bn_state(cfg), cfg)
         weights = folded_weights(folded)
@@ -135,6 +150,8 @@ class EqualizerEngine:
             plan = qat_lib.deployment_plan(params["qat"])
             if qat_lib.plan_backend(plan) != "fused_fp32":
                 formats = plan["formats"]
+        if per_channel and formats is not None:
+            formats = qat_lib.per_channel_formats(weights, formats)
         if (backend == "fused_int8" and formats is not None
                 and not _folded_fit_grid(weights, formats)):
             raise ValueError(
@@ -154,12 +171,14 @@ class EqualizerEngine:
 
     def _int8_deployable(self) -> bool:
         return (self.formats is not None
-                and all(wi + wf + 1 <= 8 and ai + af + 1 <= 8
+                and all(qat_lib.format_max_bits(wi, wf) <= 8
+                        and ai + af + 1 <= 8
                         for wi, wf, ai, af in self.formats))
 
     def _bf16_deployable(self) -> bool:
         return (self.formats is not None
-                and all(max(wi + wf, ai + af) + 1 <= 16
+                and all(max(qat_lib.format_max_bits(wi, wf), ai + af + 1)
+                        <= 16
                         for wi, wf, ai, af in self.formats))
 
     def resolved_tile_m(self) -> int:

@@ -28,6 +28,7 @@ from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -155,6 +156,58 @@ def frozen_format(q: Dict[str, jnp.ndarray]):
     """
     return (int(jnp.ceil(q["w_int"])), int(jnp.ceil(q["w_frac"])),
             int(jnp.ceil(q["a_int"])), int(jnp.ceil(q["a_frac"])))
+
+
+def per_channel_formats(weights, formats):
+    """Refine per-layer weight formats to per-OUTPUT-CHANNEL scales.
+
+    The paper (and `frozen_format`) learns ONE (w_int, w_frac) per layer; a
+    single channel with a large BN-fold gain then forces the whole layer
+    onto a coarse grid. Per-channel refinement keeps each layer's learned
+    TOTAL weight width (w_int + w_frac — the trained accuracy/width
+    trade-off) but redistributes it per output channel: a channel whose
+    folded weights are small narrows its integer width and reclaims the
+    bits as fraction width (a finer grid). This costs nothing on the MXU —
+    the int8 dot is unchanged; only the (already per-row) requantization
+    scale becomes a per-channel vector (`repro.kernels.cnn_eq`).
+
+    weights: BN-folded ((w, b), …) — per-channel ranges come from the
+             DEPLOYED weights, exactly what the int8 kernel will quantize.
+    formats: per-layer (w_int, w_frac, a_int, a_frac) from
+             `layer_formats`/`deployment_plan` (scalars).
+
+    Returns formats where w_int/w_frac are length-C_out tuples of ints
+    (activation formats stay scalar — activations are requantized between
+    layers on a shared grid). Layers whose every channel already needs the
+    full learned integer width are returned unchanged (scalar).
+    """
+    out = []
+    for (w, _), (wi, wf, ai, af) in zip(weights, formats):
+        total = int(wi) + int(wf)            # magnitude bits, sign excluded
+        wabs = np.max(np.abs(np.asarray(w, np.float64)).reshape(
+            w.shape[0], -1), axis=1)
+        wi_c = np.ceil(np.log2(np.maximum(wabs, 1e-12))).astype(np.int64)
+        # never widen past the learned grid, never narrow absurdly (an
+        # all-zero channel would otherwise get a 2^-40 grid and overflow
+        # float scale math downstream)
+        wi_c = np.clip(wi_c, int(wi) - 8, int(wi))
+        # guarantee fit: Q(i).(f) tops out at 2^i − 2^−f, so a max right at
+        # the power of two needs one more integer bit
+        for c in range(wi_c.shape[0]):
+            f_c = total - int(wi_c[c])
+            if wabs[c] > 2.0 ** int(wi_c[c]) - 2.0 ** -f_c:
+                wi_c[c] = min(int(wi_c[c]) + 1, int(wi))
+        if np.all(wi_c == int(wi)):
+            out.append((wi, wf, ai, af))     # nothing to reclaim
+            continue
+        out.append((tuple(int(v) for v in wi_c),
+                    tuple(total - int(v) for v in wi_c), ai, af))
+    return tuple(out)
+
+
+def format_max_bits(wi, wf) -> int:
+    """Worst-case total width (+sign) of a scalar OR per-channel format."""
+    return int(np.max(np.asarray(wi) + np.asarray(wf))) + 1
 
 
 def _layer_order(qparams: Dict[str, Any]):

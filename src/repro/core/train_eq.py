@@ -134,3 +134,77 @@ def train_equalizer(key: jax.Array, kind: str, model_cfg,
         bp, ba = qat_lib.average_bits(params["qat"])
         info["bits_params"], info["bits_acts"] = float(bp), float(ba)
     return params, bn_state, info
+
+
+def fine_tune_equalizer(key: jax.Array, params: Dict[str, Any],
+                        bn_state: Optional[Dict[str, Any]], model_cfg,
+                        sample_fn: Callable, *, steps: int = 60,
+                        lr: float = 1e-3, kind: str = "cnn"):
+    """Resume the QAT loop from deployed params — WEIGHT-ONLY fine-tuning.
+
+    This is the in-the-field retraining step (Ney & Wehn's trainable-FPGA
+    deployment story, driven here by `repro.adapt`): the channel drifted,
+    the learned fixed-point FORMATS must not move (they are baked into the
+    deployed int8/bf16 kernel and into the serving group key — changing
+    them would change the backend mid-flight), so only the weights train.
+    Equivalent to phase 3 of `train_equalizer`'s schedule (quantized
+    forward at the frozen widths, widths held exactly), except the data
+    comes from SERVED traffic instead of a channel simulator:
+
+    sample_fn(key) → (xs (batch, S·N_os), amps (batch, S)) — waveform
+    windows and their target PAM amplitudes, typically sampled from an
+    `repro.adapt.collector.SampleCollector` buffer (decision-directed or
+    pilot-labelled).
+
+    Fake-quantization is enabled iff the params carry a "qat" subtree, so
+    the fine-tune optimizes the same quantized forward the deployed kernel
+    computes. Returns (params, bn_state, info) — the caller decides whether
+    the candidate is promoted (`repro.adapt.shadow`).
+    """
+    quant = "qat" in params
+    opt, step_fn = _fine_tune_step(kind, model_cfg, quant, lr)
+    opt_state = opt.init(params)
+    first = last = float("nan")
+    for step in range(steps):
+        key, kstep = jax.random.split(key)
+        xs, amps = sample_fn(kstep)
+        params, opt_state, bn_state, loss = step_fn(
+            params, opt_state, bn_state, jnp.asarray(xs), jnp.asarray(amps))
+        last = float(loss)
+        if step == 0:
+            first = last
+    return params, bn_state, {"steps": steps, "loss_first": first,
+                              "loss_last": last}
+
+
+@functools.lru_cache(maxsize=8)
+def _fine_tune_step(kind: str, model_cfg, quant: bool, lr: float):
+    """Memoized (optimizer, jitted step) for `fine_tune_equalizer`.
+
+    Background adaptation calls fine_tune_equalizer once per cycle; a
+    fresh jit closure per call would retrace/recompile every cycle (the
+    jit cache is keyed on function identity). The cache key is the full
+    static configuration of the step; model_cfg is a frozen dataclass.
+    """
+    _, apply_fn = _build(kind, model_cfg)
+    opt = AdamW(lr=lr)
+
+    def loss_fn(p, batch_x, batch_amps, state):
+        y, new_state = apply_fn(p, batch_x, train=True, state=state,
+                                quant=quant)
+        return jnp.mean((y - batch_amps) ** 2), new_state
+
+    @jax.jit
+    def step_fn(p, opt_state, state, batch_x, batch_amps):
+        (loss, new_state), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(p, batch_x, batch_amps, state)
+        if "qat" in p:
+            grads = dict(grads)
+            grads["qat"] = jax.tree.map(jnp.zeros_like, grads["qat"])
+        new_p, new_opt = opt.update(grads, opt_state, p)
+        if "qat" in new_p:
+            new_p = dict(new_p)
+            new_p["qat"] = p["qat"]          # widths FROZEN, bit-identical
+        return new_p, new_opt, new_state, loss
+
+    return opt, step_fn

@@ -51,8 +51,22 @@ from typing import Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import jax.experimental.pallas as pl
+import numpy as np
 
 from .ref import conv_valid_taps, conv_valid_taps_bf16, receptive_halo
+
+
+def _wformat_cols(wi, wf):
+    """Weight-format components as broadcastable fp32 columns.
+
+    wi/wf are static ints (one scale per layer, the paper's scheme) or
+    per-output-channel tuples of ints (`qat.per_channel_formats`). Either
+    way the result is a numpy column — shape (1, 1) or (C_out, 1) — that
+    broadcasts over a (C_out, …) accumulator, so the scalar and per-channel
+    paths share every downstream expression.
+    """
+    return (np.asarray(wi, np.float32).reshape(-1, 1),
+            np.asarray(wf, np.float32).reshape(-1, 1))
 
 
 def _layer_spans(tile_m: int, kernels: Sequence[int],
@@ -132,8 +146,16 @@ _requant = requant_int8          # kernel-internal alias
 def _cnn_eq_kernel_int8(x_ref, *refs, tile_m: int, in_tile: int, kernels,
                         strides, v_parallel: int, formats):
     n_layers = len(kernels)
-    w_refs = refs[:-1][0::2]     # int8 weights, pre-scaled by 2^w_frac
-    b_refs = refs[:-1][1::2]     # fp32 biases (full-width accumulators)
+    body = refs[:-1]             # per layer: (w int8, b fp32, rescale fp32)
+    w_refs = body[0::3]          # int8 weights, pre-scaled by 2^w_frac
+    b_refs = body[1::3]          # fp32 biases (full-width accumulators)
+    s_refs = body[2::3]          # (C_out,) exact power-of-two rescale —
+    #   2^-(w_frac + a_frac) per OUTPUT CHANNEL. A uniform vector for the
+    #   paper's one-scale-per-layer scheme; genuinely per-channel for
+    #   `qat.per_channel_formats` deployments. Either way the int8 dot
+    #   below is identical — per-channel scales cost no MXU work, only
+    #   this rescale column (Pallas cannot capture array constants, hence
+    #   an operand rather than a baked-in value).
     o_ref = refs[-1]
     spans = _layer_spans(tile_m, kernels, strides)
     total_stride = 1
@@ -143,7 +165,7 @@ def _cnn_eq_kernel_int8(x_ref, *refs, tile_m: int, in_tile: int, kernels,
     start = pl.program_id(1) * (tile_m * total_stride)
     h = x_ref[:, pl.ds(start, in_tile)].astype(jnp.float32)
     for i in range(n_layers):
-        wi, wf, ai, af = formats[i]
+        _, _, ai, af = formats[i]
         hq = _requant(h, ai, af)                     # fused requantization
         w, b = _layer_wb(w_refs[i], b_refs[i])
         n_out = spans[i + 1]
@@ -156,7 +178,7 @@ def _cnn_eq_kernel_int8(x_ref, *refs, tile_m: int, in_tile: int, kernels,
             acc = acc + jax.lax.dot(w[:, :, kk], xk,
                                     preferred_element_type=jnp.int32)
         # exact power-of-two rescale back to real units, then fp32 bias
-        h = acc.astype(jnp.float32) * float(2.0 ** -(wf + af)) \
+        h = acc.astype(jnp.float32) * s_refs[i][...][:, None] \
             + b.astype(jnp.float32)[:, None]
         if i < n_layers - 1:
             h = jax.nn.relu(h)
@@ -181,7 +203,7 @@ def _fused_call(kernel_body, x, weights, strides, tile_m, interpret,
         raise ValueError(
             f"stacked weights carry {int(weights[0][0].shape[0])} rows but "
             f"x has batch {batch}")
-    kernels = tuple(int(w.shape[-1]) for w, _ in weights)
+    kernels = tuple(int(item[0].shape[-1]) for item in weights)
     v_parallel = int(weights[-1][0].shape[1 if stacked else 0])
     total_stride = 1
     for s in strides:
@@ -200,7 +222,8 @@ def _fused_call(kernel_body, x, weights, strides, tile_m, interpret,
 
     flat: list[jnp.ndarray] = []
     in_specs = [pl.BlockSpec((1, xp.shape[1]), lambda ib, it: (ib, 0))]
-    for w, b in weights:
+    for item in weights:
+        w, b = item[0], item[1]
         flat += [w, b]
         if stacked:
             in_specs += [pl.BlockSpec((1,) + w.shape[1:],
@@ -210,6 +233,13 @@ def _fused_call(kernel_body, x, weights, strides, tile_m, interpret,
         else:
             in_specs += [pl.BlockSpec(w.shape, lambda ib, it: (0, 0, 0)),
                          pl.BlockSpec(b.shape, lambda ib, it: (0,))]
+        # trailing per-layer operands (e.g. the int8 rescale column) are
+        # SHARED across batch rows even in stacked launches: they derive
+        # from the static formats, which every engine in a group shares
+        # (formats are part of group_key)
+        for extra in item[2:]:
+            flat.append(extra)
+            in_specs.append(pl.BlockSpec(extra.shape, lambda ib, it: (0,)))
 
     out = pl.pallas_call(
         functools.partial(kernel_body, tile_m=tile_m, in_tile=in_tile,
@@ -277,16 +307,23 @@ def quantize_weights_int8(
     """Host-side weight quantization: fp32 folded weights → int8 at 2^w_frac.
 
     formats[l] = (w_int, w_frac, a_int, a_frac); requires w_int+w_frac+1 ≤ 8
-    (qat.deployment_dtype == "int8"). Biases stay fp32.
+    (qat.deployment_dtype == "int8"). Biases stay fp32. w_int/w_frac may be
+    per-output-channel tuples (`qat.per_channel_formats`) — each channel is
+    then quantized on its own 2^w_frac[c] grid; the kernel undoes the
+    per-channel scale in its requantization column.
     """
     out = []
     for (w, b), (wi, wf, _, _) in zip(weights, formats):
-        if wi + wf + 1 > 8:
+        wi_col, wf_col = _wformat_cols(wi, wf)
+        bits = int(np.max(wi_col + wf_col)) + 1
+        if bits > 8:
             raise ValueError(
-                f"format Q{wi}.{wf} needs {wi + wf + 1} bits > int8")
-        hi = float(2 ** (wi + wf)) - 1.0
-        lo = -float(2 ** (wi + wf))
-        wq = jnp.clip(jnp.round(w.astype(jnp.float32) * float(2.0 ** wf)),
+                f"format Q{wi}.{wf} needs {bits} bits > int8")
+        shape = (-1, 1, 1)                     # broadcast over (C_out, C_in, K)
+        hi = np.exp2(wi_col + wf_col).reshape(shape) - 1.0
+        lo = -np.exp2(wi_col + wf_col).reshape(shape)
+        scale = np.exp2(wf_col).reshape(shape)
+        wq = jnp.clip(jnp.round(w.astype(jnp.float32) * scale),
                       lo, hi).astype(jnp.int8)
         out.append((wq, b.astype(jnp.float32)))
     return tuple(out)
@@ -305,14 +342,26 @@ def cnn_eq_fused_int8(x: jnp.ndarray,
 
     qweights: ((w_q int8, b fp32), …) from `quantize_weights_int8`.
     formats:  per-layer (w_int, w_frac, a_int, a_frac) — static, baked into
-              the kernel as requant scales/clip bounds. Every format must
-              fit a signed 8-bit grid: the in-kernel requant casts to int8,
-              which would silently WRAP (not saturate) wider grids.
+              the kernel as requant scales/clip bounds; w_int/w_frac may be
+              per-output-channel tuples. Every format must fit a signed
+              8-bit grid: the in-kernel requant casts to int8, which would
+              silently WRAP (not saturate) wider grids.
     """
     for i, (wi, wf, ai, af) in enumerate(formats):
-        if wi + wf + 1 > 8 or ai + af + 1 > 8:
+        wi_col, wf_col = _wformat_cols(wi, wf)
+        if int(np.max(wi_col + wf_col)) + 1 > 8 or ai + af + 1 > 8:
             raise ValueError(
                 f"layer {i} format (Q{wi}.{wf} w / Q{ai}.{af} a) does not "
                 f"fit int8; the int8 requant would wrap silently")
-    return _fused_call(_cnn_eq_kernel_int8, x, qweights, strides, tile_m,
-                       interpret, formats=formats)
+    # per-layer rescale column: 2^-(w_frac + a_frac), broadcast to (C_out,)
+    # — Pallas kernels cannot capture array constants, so the (possibly
+    # per-channel) scale travels as a third per-layer operand
+    withscale = []
+    for (w, b), (wi, wf, ai, af) in zip(qweights, formats):
+        c_out = int(w.shape[-3])
+        _, wf_col = _wformat_cols(wi, wf)
+        scale = np.broadcast_to(np.exp2(-(wf_col + af)).reshape(-1),
+                                (c_out,)).astype(np.float32)
+        withscale.append((w, b, jnp.asarray(scale)))
+    return _fused_call(_cnn_eq_kernel_int8, x, tuple(withscale), strides,
+                       tile_m, interpret, formats=formats)

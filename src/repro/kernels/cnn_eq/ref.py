@@ -33,6 +33,7 @@ from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def receptive_halo(kernels: Sequence[int], strides: Sequence[int]) -> int:
@@ -137,11 +138,14 @@ def cnn_eq(x: jnp.ndarray, weights: Sequence[Tuple[jnp.ndarray, jnp.ndarray]],
 # QAT fake-quant oracle (int8 datapath reference)
 # ---------------------------------------------------------------------------
 
-def _fake_quant(x: jnp.ndarray, int_bits: int, frac_bits: int) -> jnp.ndarray:
-    """quantize_fixed without the STE (forward values are identical)."""
-    scale = float(2.0 ** frac_bits)
-    hi = float(2.0 ** int_bits) - 1.0 / scale
-    lo = -float(2.0 ** int_bits)
+def _fake_quant(x: jnp.ndarray, int_bits, frac_bits) -> jnp.ndarray:
+    """quantize_fixed without the STE (forward values are identical).
+
+    int_bits/frac_bits are python ints, or arrays broadcastable against `x`
+    (the per-output-channel weight-scale path: shape (C_out, 1, 1))."""
+    scale = np.exp2(np.asarray(frac_bits, np.float32))
+    hi = np.exp2(np.asarray(int_bits, np.float32)) - 1.0 / scale
+    lo = -np.exp2(np.asarray(int_bits, np.float32))
     return jnp.clip(jnp.round(x * scale) / scale, lo, hi)
 
 
@@ -171,7 +175,11 @@ def cnn_eq_quant(x: jnp.ndarray,
         h = row[None, :].astype(jnp.float32)
         for i, ((w, b), s) in enumerate(zip(weights, strides)):
             wi, wf, ai, af = formats[i]
-            wq = _fake_quant(w.astype(jnp.float32), wi, wf)
+            # scalar or per-output-channel weight formats: reshape to a
+            # (C_out|1, 1, 1) column so both broadcast over (C_out, C_in, K)
+            wi_col = np.asarray(wi, np.float32).reshape(-1, 1, 1)
+            wf_col = np.asarray(wf, np.float32).reshape(-1, 1, 1)
+            wq = _fake_quant(w.astype(jnp.float32), wi_col, wf_col)
             h = _fake_quant(h, ai, af)
             h = conv_valid_taps(h, wq, b, s, spans[i + 1])
             if i < n_layers - 1:

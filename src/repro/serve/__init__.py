@@ -15,7 +15,8 @@ Layers:
   loadgen    — reproducible tenant traffic for benches/examples
 """
 from .chunker import ChunkPlan, StreamChunker
-from .loadgen import chop, random_waveforms, replay
+from .loadgen import (chop, drift_streams, random_waveforms, replay,
+                      replay_adaptive)
 from .pool import EnginePool
 from .runtime import AsyncServeRuntime, ServeRuntime
 from .scheduler import (BatchPolicy, LaunchBatch, MicroBatcher, Request,
@@ -25,4 +26,5 @@ from .session import Session, SessionManager, TenantSpec
 __all__ = ["AsyncServeRuntime", "BatchPolicy", "ChunkPlan", "EnginePool",
            "LaunchBatch", "MicroBatcher", "Request", "ServeRuntime",
            "Session", "SessionManager", "StreamChunker", "TenantSpec",
-           "TrafficStats", "chop", "random_waveforms", "replay"]
+           "TrafficStats", "chop", "drift_streams", "random_waveforms",
+           "replay", "replay_adaptive"]

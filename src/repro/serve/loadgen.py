@@ -5,12 +5,22 @@ channel simulators) and replays them against a `ServeRuntime` round-robin,
 which is the worst case for a batcher: every tenant's chunks arrive
 interleaved, so coalescing only happens if the scheduler actually does its
 job. Used by `benchmarks/bench_serve.py` and `examples/serve_equalizer.py`.
+
+Drift mode: `drift_streams` walks a time-varying channel
+(`repro.channels.drift`) through a `DriftSchedule`, advancing the channel
+state once per BURST, and returns both the waveform chunks and the true tx
+symbols per chunk — the pilot labels the adaptation loop trains against.
+`replay_adaptive` replays such traffic while feeding pilots and running
+`OnlineAdapter` cycles between rounds, so `benchmarks/bench_adapt.py`,
+`tests/test_adapt.py` and `examples/adaptive_serving.py` all share one
+traffic path.
 """
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Sequence, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
+import jax
 import numpy as np
 
 from .runtime import AsyncServeRuntime, ServeRuntime
@@ -41,6 +51,86 @@ def random_waveforms(n_tenants: int, n_syms: int, n_os: int = 2,
     rng = np.random.default_rng(seed)
     return [rng.standard_normal(n_syms * n_os).astype(np.float32)
             for _ in range(n_tenants)]
+
+
+def drift_streams(channel, schedule, tenant_ids: Sequence[str],
+                  n_bursts: int, syms_per_burst: int, seed: int = 0
+                  ) -> Tuple[Dict[str, List[np.ndarray]],
+                             Dict[str, List[np.ndarray]]]:
+    """Piecewise-stationary tenant traffic over a drifting channel.
+
+    channel:   a `repro.channels.drift` wrapper (`DriftingProakis` /
+               `DriftingIMDD`) — anything with `.at(t) → channel_fn`.
+    schedule:  a `DriftSchedule` mapping burst index → drift coordinate.
+    Each tenant gets its own PRNG stream (same channel STATE, independent
+    noise/data), and the channel state advances once per burst for all
+    tenants — the physical picture of links sharing a drifting medium.
+
+    Returns (streams, pilots): per tenant, the list of waveform chunks and
+    the matching list of true tx symbol arrays (the labels a pilot-driven
+    adaptation loop uses; ignore them to model blind operation).
+    """
+    streams: Dict[str, List[np.ndarray]] = {t: [] for t in tenant_ids}
+    pilots: Dict[str, List[np.ndarray]] = {t: [] for t in tenant_ids}
+    base = jax.random.PRNGKey(seed)
+    for burst in range(n_bursts):
+        fn = channel.at(schedule.t_at(burst))
+        for i, tid in enumerate(tenant_ids):
+            key = jax.random.fold_in(jax.random.fold_in(base, burst), i)
+            rx, syms = fn(key, syms_per_burst)
+            streams[tid].append(np.asarray(rx, np.float32))
+            pilots[tid].append(np.asarray(syms, np.int32))
+    return streams, pilots
+
+
+def replay_adaptive(runtime: Union[ServeRuntime, AsyncServeRuntime],
+                    streams: Dict[str, Sequence[np.ndarray]],
+                    pilots: Optional[Dict[str, Sequence[np.ndarray]]] = None,
+                    adapter=None, step_every: int = 1,
+                    pump_between: bool = True) -> Dict[str, float]:
+    """Round-robin replay with pilot feeding + adaptation cycles.
+
+    Like `replay`, but: tenants present in `pilots` AND attached to
+    `adapter` get their true tx symbols fed as labels right before each
+    chunk is submitted (stream-order lockstep — see
+    `repro.adapt.collector` `add_pilots`), and every `step_every` rounds
+    the adapter runs one synchronous adaptation cycle over its tenants.
+    Pass adapter=None to replay the same traffic with adaptation off (the
+    frozen-tenant control arm benches compare against).
+    """
+    ids = list(streams)
+    iters = {t: iter(streams[t]) for t in ids}
+    piter = {t: iter(pilots[t]) for t in pilots or {}}
+    adapted = set() if adapter is None else set(adapter.tenants)
+    live = set(ids)
+    rounds = 0
+    t0 = time.perf_counter()
+    while live:
+        for t in list(live):
+            chunk = next(iters[t], None)
+            labels = next(piter[t], None) if t in piter else None
+            if chunk is None:
+                live.discard(t)
+                runtime.finish(t)
+                continue
+            if adapter is not None and t in adapted and labels is not None:
+                adapter.feed_pilots(t, labels)
+            runtime.submit(t, chunk)
+        if pump_between:
+            runtime.pump()
+        rounds += 1
+        if adapter is not None and step_every > 0 \
+                and rounds % step_every == 0:
+            adapter.step()
+    runtime.drain()
+    if adapter is not None:
+        adapter.step()                 # final cycle over the full buffer
+    elapsed = time.perf_counter() - t0
+    total_syms = sum(runtime.sessions.get(t).syms_emitted for t in ids
+                     if t in runtime.sessions)
+    return {"elapsed_s": elapsed, "total_syms": total_syms,
+            "agg_syms_per_s": total_syms / elapsed if elapsed else 0.0,
+            "rounds": rounds}
 
 
 def replay(runtime: Union[ServeRuntime, AsyncServeRuntime],

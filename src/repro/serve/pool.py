@@ -11,6 +11,7 @@ quantization are pure functions of the trained params).
 """
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 from typing import Any, Callable, Dict, Hashable
 
@@ -26,12 +27,22 @@ class EnginePool:
                  ACTIVE tenants still works — engines rebuild on demand —
                  but turns steady-state traffic into rebuild churn
                  (`stats()["evictions"]` is the tell).
+
+    Thread-safety: every operation is atomic under an internal lock — the
+    async serving threads touch the pool under the runtime lock, but the
+    online-adaptation thread (`repro.adapt`) reads engines outside it, so
+    the pool must not rely on its callers for consistency. `get` builds on
+    a miss OUTSIDE the lock (engine construction is pure but slow —
+    BN fold, weight quantization, possibly an autotune sweep); two racing
+    misses may both build, and the second build wins the slot — benign,
+    deterministic engines are interchangeable.
     """
 
     def __init__(self, max_engines: int = 32):
         if max_engines < 1:
             raise ValueError("max_engines must be ≥ 1")
         self.max_engines = max_engines
+        self._lock = threading.Lock()
         self._entries: "OrderedDict[Hashable, Any]" = OrderedDict()
         self.hits = 0
         self.misses = 0
@@ -40,28 +51,35 @@ class EnginePool:
     def get(self, key: Hashable, build: Callable[[], Any]) -> Any:
         """Return the cached engine for `key`, building (and possibly
         evicting the LRU entry) on a miss."""
-        if key in self._entries:
-            self.hits += 1
-            self._entries.move_to_end(key)
-            return self._entries[key]
-        self.misses += 1
-        engine = build()
-        self._entries[key] = engine
-        if len(self._entries) > self.max_engines:
-            self._entries.popitem(last=False)          # evict LRU
-            self.evictions += 1
+        with self._lock:
+            if key in self._entries:
+                self.hits += 1
+                self._entries.move_to_end(key)
+                return self._entries[key]
+            self.misses += 1
+        engine = build()                   # slow: outside the lock
+        with self._lock:
+            self._entries[key] = engine
+            if len(self._entries) > self.max_engines:
+                self._entries.popitem(last=False)      # evict LRU
+                self.evictions += 1
         return engine
 
     def __contains__(self, key: Hashable) -> bool:     # no recency touch
-        return key in self._entries
+        with self._lock:
+            return key in self._entries
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
 
     def drop(self, key: Hashable) -> None:
-        self._entries.pop(key, None)
+        with self._lock:
+            self._entries.pop(key, None)
 
     def stats(self) -> Dict[str, int]:
-        return {"size": len(self._entries), "max_engines": self.max_engines,
-                "hits": self.hits, "misses": self.misses,
-                "evictions": self.evictions}
+        with self._lock:
+            return {"size": len(self._entries),
+                    "max_engines": self.max_engines,
+                    "hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions}

@@ -67,6 +67,7 @@ probe_syms=median live width)` instead of the single-stream default.
 from __future__ import annotations
 
 import concurrent.futures
+import dataclasses
 import queue
 import threading
 import time
@@ -117,6 +118,26 @@ def _serve_tile(batcher: MicroBatcher,
         probe_batch=occupancy, probe_syms=probe_syms)
 
 
+def _swap_spec(session: Session, params, bn_state, weights) -> TenantSpec:
+    """Build the hot-swap TenantSpec: NEW weights, the ACTIVE deployment's
+    static kernel config.
+
+    The swapped spec pins backend, formats, and tile to what the stream is
+    actually serving (not the original spec's possibly-"auto" values): a
+    weight-only swap must land in the same batch group with the same
+    chunker tiling — `Session.install_spec` verifies the resulting
+    group_key is unchanged and refuses otherwise. The weight epoch bumps by
+    one; exactly one of params/weights must be given (TenantSpec's own
+    invariant, checked at build).
+    """
+    engine = session.engine
+    return dataclasses.replace(
+        session.spec, params=params, bn_state=bn_state, weights=weights,
+        formats=engine.formats, backend=engine.backend,
+        tile_m=engine.resolved_tile_m(),
+        weight_epoch=session.spec.weight_epoch + 1)
+
+
 class ServeRuntime:
     """Synchronous single-threaded serving facade.
 
@@ -159,6 +180,39 @@ class ServeRuntime:
         self.finish(tenant_id)
         self.batcher.flush_session(self.sessions.get(tenant_id))
         return self.sessions.close(tenant_id).output()
+
+    # -- weight hot-swap ---------------------------------------------------
+
+    def swap_weights(self, tenant_id: str, params=None, bn_state=None,
+                     weights=None) -> int:
+        """Hot-swap a live tenant's weights at a chunk boundary.
+
+        Flushes the tenant's pending requests first (other tenants'
+        partial batches keep waiting), so every position planned so far is
+        emitted with the OLD weights; positions planned afterwards use the
+        NEW ones. The chunker's carry is tile-aligned at that boundary,
+        so within each weight epoch the streamed output stays
+        bitwise-equal to the offline engine of that epoch's spec applied
+        to the whole waveform (the per-epoch slice of contract #4 —
+        docs/ADAPTATION.md). Backend, formats, and tile are pinned from
+        the live engine; a swap that would change any of them raises
+        ValueError and leaves the stream untouched. Returns the new
+        weight epoch."""
+        s = self.sessions.get(tenant_id)
+        self.batcher.flush_session(s)
+        return s.install_spec(_swap_spec(s, params, bn_state, weights))
+
+    def rollback_weights(self, tenant_id: str) -> int:
+        """Restore the spec active before the last swap — bit-identical
+        weights (specs rebuild engines deterministically) under a NEW
+        epoch. Raises RuntimeError if there is nothing to roll back to."""
+        s = self.sessions.get(tenant_id)
+        if s.prev_spec is None:
+            raise RuntimeError(f"tenant {tenant_id!r}: no previous weights")
+        prev = dataclasses.replace(s.prev_spec,
+                                   weight_epoch=s.spec.weight_epoch + 1)
+        self.batcher.flush_session(s)
+        return s.install_spec(prev)
 
     # -- streaming ---------------------------------------------------------
 
@@ -316,6 +370,66 @@ class AsyncServeRuntime:
             while s.inflight > 0 and s.failed is None:
                 self._done.wait(0.05)
             return self.sessions.close(tenant_id).output()
+
+    # -- weight hot-swap ---------------------------------------------------
+
+    def _swap_barrier(self, tenant_id: str, make_spec) -> int:
+        """Shared swap machinery: build the candidate engine OUTSIDE the
+        locks (BN fold + weight quantization take hundreds of ms on
+        interpret-mode hosts — serving must not stall behind them), then
+        flush the tenant's pending requests, WAIT for its in-flight
+        launches to land, and install — the barrier-and-install runs under
+        `_dispatch_mutex`, so no producer/timer thread can plan new
+        positions between the barrier and the install (the swap boundary
+        stays exact). Holding the dispatch mutex while waiting is safe:
+        the launcher thread lands batches under `_lock` only, and
+        `_done.wait` releases `_lock`. Concurrent swaps of the SAME tenant
+        are the caller's bug (one adapter per tenant); the epoch check
+        below turns that race into a loud error instead of a corrupted
+        swap_log."""
+        with self._lock:
+            self._check_running()
+            s = self.sessions.get(tenant_id)
+            new_spec = make_spec(s)            # cheap: dataclass replace
+        candidate = new_spec.build_engine()    # expensive: NO locks held
+        with self._dispatch_mutex:
+            with self._lock:
+                self._check_running()
+                if s.spec.weight_epoch != new_spec.weight_epoch - 1:
+                    raise RuntimeError(
+                        f"tenant {tenant_id!r}: concurrent weight swap "
+                        f"detected (epoch moved while building)")
+                batches = self._take(self.batcher.take_session(s))
+            self._dispatch(batches)
+            with self._done:
+                while s.inflight > 0 and s.failed is None:
+                    self._done.wait(0.05)
+                if s.failed is not None:
+                    raise RuntimeError(
+                        f"stream {tenant_id!r} lost a chunk to a failed "
+                        f"launch; refusing to swap weights") from s.failed
+                return s.install_spec(new_spec, prebuilt=candidate)
+
+    def swap_weights(self, tenant_id: str, params=None, bn_state=None,
+                     weights=None) -> int:
+        """Hot-swap a live tenant's weights at a chunk boundary (see
+        `ServeRuntime.swap_weights`). Thread-safe against concurrent
+        submits: the swap holds the dispatch mutex while its barrier
+        drains, so the epoch boundary in `Session.swap_log` is exact even
+        with a producer racing the swap."""
+        return self._swap_barrier(
+            tenant_id, lambda s: _swap_spec(s, params, bn_state, weights))
+
+    def rollback_weights(self, tenant_id: str) -> int:
+        """Restore the pre-swap weights bit-identically under a new epoch
+        (see `ServeRuntime.rollback_weights`)."""
+        def mk(s: Session) -> TenantSpec:
+            if s.prev_spec is None:
+                raise RuntimeError(
+                    f"tenant {tenant_id!r}: no previous weights")
+            return dataclasses.replace(
+                s.prev_spec, weight_epoch=s.spec.weight_epoch + 1)
+        return self._swap_barrier(tenant_id, mk)
 
     # -- streaming ---------------------------------------------------------
 

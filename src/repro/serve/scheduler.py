@@ -320,6 +320,13 @@ class MicroBatcher:
             r.symbols = syms
             r.t_done, r.batch_size = t_done, len(reqs)
             r.session.append_output(syms)
+            if r.session.tap is not None:
+                # adaptation tap: the REAL input samples behind the emitted
+                # positions (skip/context sliced off) + the symbols they
+                # produced — the (rx, decision) pairs repro.adapt collects
+                ts = r.session.chunker.ts
+                lo = r.plan.skip * ts
+                r.session.tap(r.plan.data[lo:lo + r.plan.n_emit * ts], syms)
             r.plan.data = _CONSUMED        # release the input buffer; the
             self.completed.append(r)       # record keeps only timing+syms
             # a caller may legally cancel() a pending chunk future; the

@@ -24,7 +24,8 @@ from typing import Any, Callable, Dict, List, Optional
 import numpy as np
 
 from ..core.engine import EqualizerEngine
-from ..core.equalizer import CNNEqConfig
+from ..core.equalizer import (CNNEqConfig, fold_bn, folded_weights,
+                              init_bn_state)
 from .chunker import StreamChunker
 from .pool import EnginePool
 
@@ -49,7 +50,12 @@ class TenantSpec:
     weights:   pre-folded fp32 weights (alternative to params).
     formats:   per-layer (w_int, w_frac, a_int, a_frac) fixed-point
                formats — required for backend="fused_int8" with explicit
-               weights; ignored otherwise.
+               weights. When given TOGETHER with params they PIN the
+               deployment formats: BN is folded but the formats are taken
+               as-is instead of being re-derived from the params' QAT
+               subtree. This is the weight hot-swap form
+               (`repro.serve.runtime` `swap_weights`): new weights, frozen
+               static kernel config, so the group key cannot move.
     backend:   "auto" (default; deploys the QAT ladder int8→bf16→fp32),
                or an explicit backend name. Explicit "fused_int8" raises at
                build if the formats don't fit int8 or the BN-folded weights
@@ -58,6 +64,15 @@ class TenantSpec:
                sweep, possibly serve-aware (live-traffic histograms) when
                opened through a runtime with warm stats; an explicit int is
                NEVER re-tuned. Fixed for the life of the stream.
+    per_channel: refine learned per-layer weight formats to per-output-
+               channel scales at deployment (`repro.core.qat`
+               `per_channel_formats`; params path only). Deterministic
+               given the params, so rebuilds after eviction agree.
+    weight_epoch: monotone counter of weight hot-swaps (0 = the weights
+               the stream opened with). Bumped by `swap_weights`/
+               `rollback_weights`; NOT part of the engine's group key —
+               epochs ride in the per-row stacked weight operands, so
+               tenants on different epochs still share launches.
     """
     tenant_id: str
     cfg: CNNEqConfig
@@ -67,15 +82,29 @@ class TenantSpec:
     formats: Optional[tuple] = None
     backend: str = "auto"
     tile_m: int | str = "auto"
+    per_channel: bool = False
+    weight_epoch: int = 0
 
     def build_engine(self) -> EqualizerEngine:
         if (self.params is None) == (self.weights is None):
             raise ValueError(
                 f"tenant {self.tenant_id!r}: exactly one of params/weights")
         if self.params is not None:
+            if self.formats is not None:
+                # pinned-formats deployment (hot-swap spec): fold BN, keep
+                # the frozen static kernel config exactly as served
+                folded = fold_bn(self.params,
+                                 self.bn_state or init_bn_state(self.cfg),
+                                 self.cfg)
+                return EqualizerEngine(cfg=self.cfg,
+                                       weights=folded_weights(folded),
+                                       backend=self.backend,
+                                       tile_m=self.tile_m,
+                                       formats=self.formats)
             return EqualizerEngine.from_params(
                 self.params, self.bn_state, self.cfg,
-                backend=self.backend, tile_m=self.tile_m)
+                backend=self.backend, tile_m=self.tile_m,
+                per_channel=self.per_channel)
         return EqualizerEngine(cfg=self.cfg, weights=self.weights,
                                backend=self.backend, tile_m=self.tile_m,
                                formats=self.formats)
@@ -88,6 +117,23 @@ class Session:
     terminal exception when a launch for this stream exhausted its retries,
     after which `output()` raises instead of returning a stream with a
     silent hole (a lost chunk would otherwise just shorten the output).
+
+    Online-adaptation hooks (`repro.adapt`):
+
+    `tap` — optional callback `(rx_segment, soft_symbols) → None` invoked
+    by the micro-batcher's descatter for every emitted chunk, with the REAL
+    input samples behind the emitted positions and the symbols they
+    produced, both in stream order. This is how the sample collector sees
+    served traffic without a second pass over the stream. Must be cheap
+    (it runs on the descatter path, under the async runtime's lock) and
+    must copy what it keeps (the rx view aliases the launch input buffer).
+
+    `swap_log` — [(weight_epoch, first_position)] history: positions ≥
+    first_position were equalized with that epoch's weights. Epoch 0 is the
+    weights the stream opened with. `install_spec` appends on every
+    successful hot-swap/rollback; `prev_spec` holds the previous spec so a
+    bad promotion can be rolled back bit-identically (specs rebuild their
+    engines deterministically).
     """
 
     def __init__(self, spec: TenantSpec, pool: EnginePool,
@@ -120,11 +166,58 @@ class Session:
         # maintained (under its lock) by AsyncServeRuntime so close() can
         # wait for a tenant's in-flight work; always 0 on the sync path
         self.inflight = 0
+        # online-adaptation hooks (see class docstring)
+        self.tap: Optional[Callable[[np.ndarray, np.ndarray], None]] = None
+        self.prev_spec: Optional[TenantSpec] = None
+        self.swap_log: List[tuple] = [(spec.weight_epoch, 0)]
 
     @property
     def engine(self) -> EqualizerEngine:
         """Fetch (or rebuild after LRU eviction) this tenant's engine."""
         return self._pool.get(self.spec.tenant_id, self.spec.build_engine)
+
+    @property
+    def weight_epoch(self) -> int:
+        return self.spec.weight_epoch
+
+    def install_spec(self, new_spec: TenantSpec,
+                     prebuilt: Optional[EqualizerEngine] = None) -> int:
+        """Install a hot-swap spec as the stream's active identity.
+
+        The CALLER must have landed all of this session's planned work
+        first (sync: `flush_session`; async: take_session + in-flight
+        wait) — the swap boundary is `chunker.emitted_positions` at install
+        time, and positions planned-but-not-landed would otherwise execute
+        with the wrong epoch's weights.
+
+        The candidate engine (built here, or passed as `prebuilt` when the
+        caller already constructed it OUTSIDE its locks — engine builds
+        fold BN and quantize weights, hundreds of ms on interpret-mode
+        hosts) must share the active engine's `group_key()` — same
+        topology, backend, static kernel config (formats), and tile. A
+        weight swap that would change any of those is NOT a weight swap
+        (it would re-tile the chunker or move the stream between batch
+        groups mid-flight) and raises ValueError, leaving the active
+        weights untouched. On success the previous spec is kept in
+        `prev_spec` for bit-identical rollback, the engine pool entry is
+        replaced, and the (epoch, first_position) pair is appended to
+        `swap_log`. Returns the new weight epoch.
+        """
+        candidate = prebuilt if prebuilt is not None \
+            else new_spec.build_engine()
+        active_key = self.engine.group_key()
+        if candidate.group_key() != active_key:
+            raise ValueError(
+                f"tenant {new_spec.tenant_id!r}: hot-swap would change the "
+                f"serving identity {active_key} -> {candidate.group_key()} "
+                f"(backend/formats/tile must stay fixed mid-stream)")
+        self.prev_spec = self.spec
+        self.spec = new_spec
+        self._pool.drop(new_spec.tenant_id)
+        self._pool.get(new_spec.tenant_id, lambda: candidate)
+        self.swap_log.append((new_spec.weight_epoch,
+                              self.chunker.emitted_positions))
+        return new_spec.weight_epoch
 
     def append_output(self, syms: np.ndarray) -> None:
         self._out.append(syms)

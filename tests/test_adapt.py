@@ -1,0 +1,463 @@
+"""Online-adaptation runtime (repro.adapt + serve weight hot-swap) — the
+ISSUE-5 acceptance surface.
+
+  * collector units: decision-directed labels, pilot FIFO lockstep, ring
+    capacity, deterministic train/eval interleave;
+  * descatter tap: the segments a session's tap sees reassemble the
+    served waveform and output exactly, in stream order;
+  * shadow/promotion units: hysteresis band, insufficient-data refusal;
+  * fine-tune: WEIGHT-ONLY — the QAT subtree (the learned formats) stays
+    bit-identical while conv weights move;
+  * hot-swap invariants (sync AND async drivers, fp32 AND int8 backends):
+    chunked output is bitwise-equal to the offline engine of the epoch's
+    spec on each side of the swap boundary; rollback restores the active
+    weights bit-identically; `install_spec` refuses identity changes;
+  * the drift-recovery criterion (slow): under `channels/drift.py` drift
+    the frozen tenant's BER degrades ≥4× while the adaptive tenant's
+    post-promotion BER lands within 2× of a freshly trained equalizer.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.adapt import (AdaptPolicy, FineTuneConfig, OnlineAdapter,
+                         PromotionPolicy, SampleCollector, engine_ber,
+                         hard_decide, pam_amplitudes, shadow_evaluate)
+from repro.channels.drift import DriftingProakis, DriftSchedule
+from repro.core import equalizer as eq
+from repro.core.train_eq import (EqTrainConfig, fine_tune_equalizer,
+                                 train_equalizer)
+from repro.serve import (AsyncServeRuntime, BatchPolicy, ServeRuntime,
+                         TenantSpec, chop, drift_streams, replay_adaptive)
+
+CFG = eq.CNNEqConfig()
+TS = CFG.v_parallel * CFG.n_os           # samples per engine pass
+INT8_QAT = {"w_int": 2.0, "w_frac": 5.0, "a_int": 3.0, "a_frac": 4.0}
+
+
+def _params(seed, qat=False):
+    p = eq.init(jax.random.PRNGKey(seed), CFG)
+    if qat:
+        p["qat"] = {f"layer{i}": {k: jnp.asarray(v)
+                                  for k, v in INT8_QAT.items()}
+                    for i in range(CFG.layers)}
+    return p
+
+
+def _spec(tid, seed, backend="fused_fp32", tile_m=16):
+    qat = backend == "auto"
+    return TenantSpec(tid, CFG, params=_params(seed, qat=qat),
+                      bn_state=eq.init_bn_state(CFG), backend=backend,
+                      tile_m=tile_m)
+
+
+def _offline(spec, wave):
+    return np.asarray(spec.build_engine()(jnp.asarray(wave[None])))[0]
+
+
+# ---------------------------------------------------------------------------
+# collector
+# ---------------------------------------------------------------------------
+
+def test_collector_decision_labels_and_ring_capacity():
+    col = SampleCollector(n_os=2, levels=2, capacity_syms=64, eval_every=4)
+    soft = np.array([-0.9, 0.8, -1.1, 1.2] * 8, np.float32)    # 32 syms
+    rx = np.zeros((soft.size * 2,), np.float32)
+    col.on_segment(rx, soft)
+    col.on_segment(rx, soft)
+    assert col.total_syms == 64 and col.buffered_syms == 64
+    tr_rx, tr_sy, ev_rx, ev_sy = col.training_view()
+    np.testing.assert_array_equal(
+        np.unique(np.concatenate([tr_sy, ev_sy])), [0, 1])
+    assert tr_sy.shape[0] + ev_sy.shape[0] == 64
+    # decisions match the hard slicer
+    np.testing.assert_array_equal(tr_sy[:32], hard_decide(soft, 2))
+    # ring: a third segment evicts the oldest
+    col.on_segment(rx, soft)
+    assert col.buffered_syms == 64 and col.total_syms == 96
+
+
+def test_collector_pilot_fifo_consumes_in_lockstep():
+    col = SampleCollector(n_os=2, levels=2, eval_every=4)
+    col.add_pilots(np.array([1, 1, 1, 1, 1]))        # 5 pilot labels
+    soft = np.full((4,), -0.7, np.float32)           # decisions would be 0
+    rx = np.zeros((8,), np.float32)
+    col.on_segment(rx, soft)                         # 4 piloted
+    col.on_segment(rx, soft)                         # 1 pilot + 3 decisions
+    tr_rx, tr_sy, ev_rx, ev_sy = col.training_view()
+    labels = np.concatenate([tr_sy, ev_sy])
+    assert labels.shape[0] == 8
+    assert col.pilot_labelled == 5
+    assert labels.sum() == 5                          # pilots said 1
+    assert col.stats()["pilots_queued"] == 0
+
+
+def test_collector_eval_split_is_deterministic_blocked_interleave():
+    """Every eval_every-th BLOCK of EVAL_BLOCK consecutive segments is
+    held out — contiguous runs, so concatenation splices are rare."""
+    from repro.adapt.collector import EVAL_BLOCK
+    col = SampleCollector(n_os=1, levels=2, eval_every=3,
+                          capacity_syms=1 << 12)
+    n_segs = 6 * EVAL_BLOCK                          # two full super-periods
+    for i in range(n_segs):
+        col.on_segment(np.full((4,), float(i), np.float32),
+                       np.full((4,), -1.0, np.float32))
+    tr_rx, _, ev_rx, _ = col.training_view()
+    # blocks 2 and 5 (0-based) are held out, EVAL_BLOCK segments each
+    want_eval = [float(i) for b in (2, 5)
+                 for i in range(b * EVAL_BLOCK, (b + 1) * EVAL_BLOCK)]
+    np.testing.assert_array_equal(np.unique(ev_rx), want_eval)
+    assert tr_rx.shape[0] == (n_segs - 2 * EVAL_BLOCK) * 4
+    assert ev_rx.shape[0] == 2 * EVAL_BLOCK * 4
+
+
+# ---------------------------------------------------------------------------
+# descatter tap
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("driver", ["sync", "async"])
+def test_tap_segments_reassemble_stream(driver):
+    """The tap sees exactly the served waveform (real samples behind the
+    emitted positions) and exactly the emitted symbols, in stream order."""
+    rt = (AsyncServeRuntime if driver == "async" else ServeRuntime)(
+        BatchPolicy(max_batch=1, max_wait_s=1e9))
+    try:
+        spec = _spec("tap", seed=3)
+        sess = rt.open(spec)
+        got_rx, got_sy = [], []
+        sess.tap = lambda rx, sy: (got_rx.append(np.array(rx)),
+                                   got_sy.append(np.array(sy)))
+        rng = np.random.default_rng(5)
+        wave = rng.standard_normal(40 * TS).astype(np.float32)
+        for c in chop(wave, 200, seed=1):
+            rt.submit("tap", c)
+        rt.finish("tap")
+        rt.drain()
+        np.testing.assert_array_equal(np.concatenate(got_rx), wave)
+        np.testing.assert_array_equal(np.concatenate(got_sy),
+                                      rt.output("tap"))
+    finally:
+        if driver == "async":
+            rt.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# shadow evaluation / promotion hysteresis
+# ---------------------------------------------------------------------------
+
+class _FakeEngine:
+    """Deterministic engine stub: returns PAM amplitudes of given symbols
+    with the first `n_err` of every 100 flipped."""
+
+    def __init__(self, syms, n_err):
+        self.cfg = CFG
+        self.total_stride = 1
+        const = pam_amplitudes(CFG.levels)
+        out = np.array(syms)
+        for i in range(0, out.size, 100):
+            out[i:i + n_err] ^= 1
+        self._soft = const[out].astype(np.float32)
+
+    def __call__(self, x):
+        return self._soft[None, : x.shape[1] // self.cfg.n_os]
+
+
+def test_shadow_promotes_only_on_clear_wins():
+    rng = np.random.default_rng(7)
+    syms = rng.integers(0, 2, size=4096).astype(np.int32)
+    rx = np.zeros((syms.size * CFG.n_os,), np.float32)
+    pol = PromotionPolicy(min_eval_syms=2048, min_rel_gain=0.15,
+                          min_abs_gain=2e-3, eval_bucket_syms=1024)
+    active = _FakeEngine(syms, n_err=10)             # BER 0.10
+    # clear win: 0.10 → 0.05
+    rep = shadow_evaluate(active, _FakeEngine(syms, 5), rx, syms, pol)
+    assert rep.promote and rep.ber_active == pytest.approx(0.10, rel=0.01)
+    # inside the hysteresis band: 0.10 → 0.095 (rel margin is 0.015)
+    rep = shadow_evaluate(active, _FakeEngine(syms, 9), rx, syms, pol)
+    assert not rep.promote
+    # both perfect: absolute margin blocks a 0→0 swap
+    perfect = _FakeEngine(syms, 0)
+    rep = shadow_evaluate(perfect, _FakeEngine(syms, 0), rx, syms, pol)
+    assert not rep.promote
+    # not enough held-out data → refuse with NaN BERs
+    rep = shadow_evaluate(active, perfect, rx[:512 * CFG.n_os],
+                          syms[:512], pol)
+    assert not rep.promote and np.isnan(rep.ber_active)
+    assert "insufficient" in rep.reason
+
+
+# ---------------------------------------------------------------------------
+# fine-tune: weight-only, formats frozen
+# ---------------------------------------------------------------------------
+
+def test_fine_tune_trains_weights_only_formats_bit_identical():
+    params = _params(11, qat=True)
+    bn = eq.init_bn_state(CFG)
+    rng = np.random.default_rng(13)
+
+    def sample_fn(key):
+        xs = rng.standard_normal((4, 64 * CFG.n_os)).astype(np.float32)
+        ys = rng.standard_normal((4, 64)).astype(np.float32)
+        return xs, ys
+
+    new_params, new_bn, info = fine_tune_equalizer(
+        jax.random.PRNGKey(0), params, bn, CFG, sample_fn, steps=5, lr=1e-2)
+    for name, q in params["qat"].items():
+        for k, v in q.items():
+            np.testing.assert_array_equal(
+                np.asarray(v), np.asarray(new_params["qat"][name][k]))
+    assert not np.array_equal(np.asarray(params["conv"][0]["w"]),
+                              np.asarray(new_params["conv"][0]["w"]))
+    assert info["steps"] == 5
+
+
+# ---------------------------------------------------------------------------
+# weight hot-swap invariants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("driver", ["sync", "async"])
+@pytest.mark.parametrize("backend", ["fused_fp32", "auto"])
+def test_hot_swap_bitwise_per_epoch(driver, backend):
+    """Chunked output == offline equalization with each epoch's weights
+    applied from its swap boundary — on both drivers, for the fp32 backend
+    and the auto→int8 deployment (QAT formats pinned across the swap)."""
+    rt = (AsyncServeRuntime if driver == "async" else ServeRuntime)(
+        BatchPolicy(max_batch=1, max_wait_s=1e9))
+    try:
+        spec0 = _spec("hs", seed=1, backend=backend)
+        sess = rt.open(spec0)
+        if backend == "auto":
+            assert sess.engine.backend == "fused_int8"
+        rng = np.random.default_rng(2)
+        wave = rng.standard_normal(60 * TS).astype(np.float32)
+        chunks = chop(wave, 300, seed=4)
+        half = len(chunks) // 2
+        for c in chunks[:half]:
+            rt.submit("hs", c)
+        epoch = rt.swap_weights(
+            "hs", params=_params(99, qat=backend == "auto"),
+            bn_state=eq.init_bn_state(CFG))
+        assert epoch == 1 and sess.weight_epoch == 1
+        for c in chunks[half:]:
+            rt.submit("hs", c)
+        got = rt.close("hs")
+        (_, p0), (_, p1) = sess.swap_log
+        assert p0 == 0 and p1 > 0
+        vp = CFG.v_parallel
+        want = np.concatenate([_offline(spec0, wave)[: p1 * vp],
+                               _offline(sess.spec, wave)[p1 * vp:]])
+        np.testing.assert_array_equal(got, want)
+        # group identity never moved (same batch group before and after)
+        assert (sess.spec.build_engine().group_key()
+                == spec0.build_engine().group_key())
+    finally:
+        if driver == "async":
+            rt.shutdown()
+
+
+@pytest.mark.parametrize("driver", ["sync", "async"])
+def test_rollback_restores_weights_bit_identical(driver):
+    """swap → rollback: the stream continues on weights bit-identical to
+    the originals, and the full three-epoch output matches offline
+    old|new|old equalization at the logged boundaries."""
+    rt = (AsyncServeRuntime if driver == "async" else ServeRuntime)(
+        BatchPolicy(max_batch=1, max_wait_s=1e9))
+    try:
+        spec0 = _spec("rb", seed=7)
+        sess = rt.open(spec0)
+        rng = np.random.default_rng(8)
+        wave = rng.standard_normal(72 * TS).astype(np.float32)
+        chunks = chop(wave, 320, seed=9)
+        third = len(chunks) // 3
+        for c in chunks[:third]:
+            rt.submit("rb", c)
+        rt.swap_weights("rb", params=_params(55),
+                        bn_state=eq.init_bn_state(CFG))
+        swapped_spec = sess.spec
+        for c in chunks[third:2 * third]:
+            rt.submit("rb", c)
+        epoch = rt.rollback_weights("rb")
+        assert epoch == 2
+        # active weights are bit-identical to the ORIGINAL deployment
+        w_now = sess.spec.build_engine().weights
+        w_orig = spec0.build_engine().weights
+        for (wa, ba), (wb, bb) in zip(w_now, w_orig):
+            np.testing.assert_array_equal(np.asarray(wa), np.asarray(wb))
+            np.testing.assert_array_equal(np.asarray(ba), np.asarray(bb))
+        for c in chunks[2 * third:]:
+            rt.submit("rb", c)
+        got = rt.close("rb")
+        (_, _), (_, p1), (_, p2) = sess.swap_log
+        vp = CFG.v_parallel
+        off_old = _offline(spec0, wave)
+        off_new = _offline(swapped_spec, wave)
+        want = np.concatenate([off_old[: p1 * vp],
+                               off_new[p1 * vp: p2 * vp],
+                               off_old[p2 * vp:]])
+        np.testing.assert_array_equal(got, want)
+    finally:
+        if driver == "async":
+            rt.shutdown()
+
+
+def test_install_spec_refuses_identity_changes():
+    """A 'weight swap' that would change tile or backend is not a weight
+    swap: install_spec must refuse and leave the stream untouched."""
+    rt = ServeRuntime(BatchPolicy(max_batch=1, max_wait_s=1e9))
+    sess = rt.open(_spec("guard", seed=4))
+    before = sess.spec
+    bad_tile = dataclasses.replace(sess.spec, tile_m=32, weight_epoch=1)
+    with pytest.raises(ValueError, match="hot-swap would change"):
+        sess.install_spec(bad_tile)
+    bad_backend = dataclasses.replace(sess.spec, backend="fused_bf16",
+                                      weight_epoch=1)
+    with pytest.raises(ValueError, match="hot-swap would change"):
+        sess.install_spec(bad_backend)
+    assert sess.spec is before and sess.weight_epoch == 0
+    assert sess.swap_log == [(0, 0)]
+
+
+# ---------------------------------------------------------------------------
+# adapter control loop
+# ---------------------------------------------------------------------------
+
+def test_adapter_requires_params_and_idles_without_data():
+    rt = ServeRuntime(BatchPolicy(max_batch=1, max_wait_s=1e9))
+    adapter = OnlineAdapter(rt)
+    weights_only = TenantSpec(
+        "w", CFG, weights=_spec("x", 1).build_engine().weights,
+        backend="fused_fp32", tile_m=16)
+    with pytest.raises(ValueError, match="needs params"):
+        adapter.attach(weights_only)
+    adapter.attach(_spec("a", seed=2))
+    (rep,) = adapter.step("a")
+    assert rep.action == "idle" and rep.weight_epoch == 0
+
+
+@pytest.fixture(scope="module")
+def trained_base():
+    """One 600-step stationary training shared by the adapter tests."""
+    ch = DriftingProakis()
+    params, bn, info = train_equalizer(
+        jax.random.PRNGKey(0), "cnn", CFG, ch.at(0.0),
+        EqTrainConfig(steps=600, eval_syms=1 << 14))
+    return ch, params, bn, info["ber"]
+
+
+def _adaptive_runtime(trained, tids, ft):
+    ch, params, bn, _ = trained
+    rt = ServeRuntime(BatchPolicy(max_batch=len(tids), max_wait_s=1e9))
+    adapter = OnlineAdapter(
+        rt,
+        AdaptPolicy(min_train_syms=3072, adapt_every_syms=3072,
+                    eval_capacity=8192,
+                    promotion=PromotionPolicy(min_eval_syms=1024,
+                                              eval_bucket_syms=512)),
+        ft)
+
+    def mk(tid):
+        return TenantSpec(tid, CFG, params=params, bn_state=bn,
+                          backend="fused_fp32", tile_m=16)
+    return rt, adapter, mk
+
+
+def test_adapter_hysteresis_no_thrash_on_stationary_channel(trained_base):
+    """A well-trained tenant on a stationary channel with a timid
+    fine-tune must never swap: every cycle lands inside the hysteresis
+    band (or idles)."""
+    ch = trained_base[0]
+    rt, adapter, mk = _adaptive_runtime(
+        trained_base, ["st"], FineTuneConfig(steps=15, lr=1e-4))
+    adapter.attach(mk("st"))
+    sched = DriftSchedule(hold_bursts=10_000, ramp_bursts=1)   # never drifts
+    streams, pilots = drift_streams(ch, sched, ["st"], n_bursts=8,
+                                    syms_per_burst=2048, seed=6)
+    replay_adaptive(rt, streams, pilots=pilots, adapter=adapter,
+                    step_every=2)
+    actions = {r.action for r in adapter.history}
+    assert actions <= {"idle", "rejected"}, adapter.history
+    assert rt.sessions.get("st").weight_epoch == 0
+
+
+def test_adapter_background_thread_with_live_async_traffic():
+    """Thread mode: the adapter's daemon thread runs cycles (and possibly
+    hot-swaps) WHILE the async runtime serves traffic. The stream must
+    stay complete and ordered regardless of what the adapter decides —
+    the swap barrier serializes against live submits."""
+    ch = DriftingProakis()
+    with AsyncServeRuntime(BatchPolicy(max_batch=1, max_wait_s=1e9)) as rt:
+        adapter = OnlineAdapter(
+            rt,
+            AdaptPolicy(min_train_syms=1024, adapt_every_syms=512,
+                        eval_capacity=4096,
+                        promotion=PromotionPolicy(min_eval_syms=512,
+                                                  eval_bucket_syms=256)),
+            FineTuneConfig(steps=10, batch=4, seq_syms=128, lr=1e-3))
+        adapter.attach(_spec("bg", seed=21))
+        streams, pilots = drift_streams(
+            ch, DriftSchedule(hold_bursts=2, ramp_bursts=3), ["bg"],
+            n_bursts=8, syms_per_burst=1024, seed=11)
+        adapter.start(interval_s=0.02)
+        try:
+            for chunk, labels in zip(streams["bg"], pilots["bg"]):
+                adapter.feed_pilots("bg", labels)
+                rt.submit("bg", chunk)
+            rt.finish("bg")
+            rt.drain()
+        finally:
+            adapter.stop()
+        assert adapter.history, "background thread never ran a cycle"
+        assert not adapter.errors
+        assert not rt.errors
+        out = rt.output("bg")
+        assert out.shape == (8 * 1024,)      # nothing lost, nothing dup'd
+        # the epoch log is consistent: monotone epochs, monotone positions
+        log = rt.sessions.get("bg").swap_log
+        assert [e for e, _ in log] == list(range(len(log)))
+        assert all(p1 <= p2 for (_, p1), (_, p2) in zip(log, log[1:]))
+
+
+@pytest.mark.slow
+def test_drift_recovery_acceptance(trained_base):
+    """THE acceptance criterion: under tap-rotation + SNR drift, the
+    frozen tenant degrades ≥4× its pre-drift BER while the adaptive
+    tenant's post-promotion BER recovers to within 2× of a freshly
+    trained equalizer (floors guard the near-zero BER regime where ratios
+    are measurement noise)."""
+    ch, params, bn, ber0 = trained_base
+    rt, adapter, mk = _adaptive_runtime(
+        trained_base, ["frozen", "adapt"],
+        FineTuneConfig(steps=200, batch=8, seq_syms=256, lr=3e-3))
+    rt.open(mk("frozen"))
+    adapter.attach(mk("adapt"))
+    sched = DriftSchedule(hold_bursts=4, ramp_bursts=6)
+    streams, pilots = drift_streams(ch, sched, ["frozen", "adapt"],
+                                    n_bursts=26, syms_per_burst=2048,
+                                    seed=3)
+    replay_adaptive(rt, streams, pilots=pilots, adapter=adapter,
+                    step_every=2)
+
+    promoted = [r for r in adapter.history if r.action == "promoted"]
+    assert promoted, "adaptation never promoted a candidate"
+    sess = rt.sessions.get("adapt")
+    assert sess.weight_epoch >= 1 and len(sess.swap_log) >= 2
+
+    rx1, sy1 = ch.at(1.0)(jax.random.PRNGKey(77), 1 << 14)
+    rx1, sy1 = np.asarray(rx1), np.asarray(sy1)
+    params_f, bn_f, _ = train_equalizer(
+        jax.random.PRNGKey(1), "cnn", CFG, ch.at(1.0),
+        EqTrainConfig(steps=600, eval_syms=1 << 14))
+    ber_frozen = engine_ber(rt.sessions.get("frozen").engine, rx1, sy1)
+    ber_adapt = engine_ber(sess.engine, rx1, sy1)
+    ber_fresh = engine_ber(
+        TenantSpec("fresh", CFG, params=params_f, bn_state=bn_f,
+                   backend="fused_fp32", tile_m=16).build_engine(),
+        rx1, sy1)
+    # the frozen tenant fell off a cliff…
+    assert ber_frozen >= 4.0 * max(ber0, 1e-3), (ber_frozen, ber0)
+    # …the adaptive tenant recovered to near fresh-training quality
+    assert ber_adapt <= 2.0 * max(ber_fresh, 2.5e-3), (ber_adapt, ber_fresh)
+    assert ber_adapt <= ber_frozen / 4.0

@@ -1,0 +1,115 @@
+"""Channel simulators (repro.channels) — reproducibility + drift + the
+Fig. 4 equalizer ordering.
+
+  * `imdd.simulate` / `proakis.simulate` are BITWISE-reproducible under a
+    fixed PRNG key (the serving/adaptation stack leans on this: drift
+    scenarios, recorded baselines and pilot labels must replay exactly);
+  * the drift wrappers (`channels.drift`) are reproducible too, share one
+    jit cache across drift states, and actually move the channel (t=1
+    differs from t=0; the schedule ramps monotonically);
+  * a trained CNN beats the trained FIR baseline on Proakis-B @ 20 dB
+    (paper Fig. 4: CNN 8.4e-3 vs FIR 9.6e-3 — the gap is small on a
+    linear channel, so this needs the paper-scale step budget; marked
+    slow).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.channels import imdd, proakis
+from repro.channels.drift import (DriftingIMDD, DriftingProakis,
+                                  DriftSchedule)
+from repro.core.equalizer import CNNEqConfig
+from repro.core.fir import FIRConfig
+from repro.core.train_eq import EqTrainConfig, train_equalizer
+from repro.data.equalizer_data import channel_fn
+
+KEY = jax.random.PRNGKey(42)
+
+
+# ---------------------------------------------------------------------------
+# bitwise reproducibility of the stationary simulators
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sim,cfg", [
+    (proakis.simulate, proakis.ProakisConfig()),
+    (imdd.simulate, imdd.IMDDConfig()),
+])
+def test_simulate_bitwise_reproducible_under_fixed_key(sim, cfg):
+    rx1, sy1 = sim(KEY, cfg, 1024)
+    rx2, sy2 = sim(KEY, cfg, 1024)
+    np.testing.assert_array_equal(np.asarray(rx1), np.asarray(rx2))
+    np.testing.assert_array_equal(np.asarray(sy1), np.asarray(sy2))
+    assert rx1.shape == (1024 * cfg.n_os,) and sy1.shape == (1024,)
+    # a different key gives different noise AND different data
+    rx3, sy3 = sim(jax.random.PRNGKey(43), cfg, 1024)
+    assert not np.array_equal(np.asarray(rx1), np.asarray(rx3))
+    assert not np.array_equal(np.asarray(sy1), np.asarray(sy3))
+
+
+# ---------------------------------------------------------------------------
+# drift wrappers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("channel", [DriftingProakis(), DriftingIMDD()])
+def test_drift_reproducible_and_actually_drifts(channel):
+    fn0, fn1 = channel.at(0.0), channel.at(1.0)
+    rx0a, sy0a = fn0(KEY, 512)
+    rx0b, sy0b = fn0(KEY, 512)
+    np.testing.assert_array_equal(np.asarray(rx0a), np.asarray(rx0b))
+    np.testing.assert_array_equal(np.asarray(sy0a), np.asarray(sy0b))
+    # same key ⇒ same tx data at every drift state; different waveform
+    rx1, sy1 = fn1(KEY, 512)
+    np.testing.assert_array_equal(np.asarray(sy0a), np.asarray(sy1))
+    assert not np.array_equal(np.asarray(rx0a), np.asarray(rx1))
+
+
+def test_proakis_drift_taps_rotate_and_renormalize():
+    ch = DriftingProakis()
+    h0, h1 = ch.taps_at(0.0), ch.taps_at(1.0)
+    np.testing.assert_allclose(np.linalg.norm(h0), 1.0, rtol=1e-6)
+    np.testing.assert_allclose(np.linalg.norm(h1), 1.0, rtol=1e-6)
+    # default drift target: Proakis-B rolled one tap (postcursor-heavy)
+    np.testing.assert_allclose(h1, np.roll(h0, 1), rtol=1e-6)
+    assert ch.snr_at(1.0) == pytest.approx(ch.cfg.snr_db - 4.0)
+
+
+def test_drift_schedule_holds_then_ramps_monotonically():
+    sch = DriftSchedule(hold_bursts=3, ramp_bursts=4)
+    ts = [sch.t_at(b) for b in range(10)]
+    assert ts[:3] == [0.0, 0.0, 0.0]
+    assert ts == sorted(ts) and ts[-1] == 1.0
+    assert sch.total_to_settle == 7
+    assert sch.t_at(sch.total_to_settle) == 1.0
+
+
+def test_imdd_drift_moves_fiber_and_snr():
+    ch = DriftingIMDD(fiber_delta_km=6.0, snr_delta_db=-3.0)
+    assert ch.fiber_at(0.0) == pytest.approx(ch.cfg.fiber_km)
+    assert ch.fiber_at(1.0) == pytest.approx(ch.cfg.fiber_km + 6.0)
+    assert ch.snr_at(1.0) == pytest.approx(ch.cfg.snr_db - 3.0)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 4 ordering: CNN beats FIR on Proakis-B @ 20 dB
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_trained_cnn_beats_fir_on_proakis_b_at_20db():
+    """The paper's linear-channel comparison (Fig. 4): the CNN edges out
+    the FIR, but only by ~15% — the CNN needs its full step budget while
+    the centre-spike-initialized FIR converges almost immediately, so the
+    budgets differ on purpose (both models are at their converged BER)."""
+    fn = channel_fn("proakis", proakis.ProakisConfig(snr_db=20.0))
+    _, _, info_fir = train_equalizer(
+        jax.random.PRNGKey(0), "fir", FIRConfig(),
+        fn, EqTrainConfig(steps=800, seq_syms=256, lr=3e-3,
+                          eval_syms=1 << 15))
+    _, _, info_cnn = train_equalizer(
+        jax.random.PRNGKey(0), "cnn", CNNEqConfig(),
+        fn, EqTrainConfig(steps=6000, seq_syms=512, lr=1e-2,
+                          eval_syms=1 << 15))
+    assert 0.0 < info_cnn["ber"] < info_fir["ber"], (
+        f"CNN {info_cnn['ber']:.2e} should beat FIR {info_fir['ber']:.2e}")
+    # both are in the paper's ~1e-2 regime, not degenerate
+    assert info_fir["ber"] < 0.05

@@ -1,0 +1,149 @@
+"""Per-output-channel int8 weight scales (ROADMAP open item, ISSUE-5
+satellite): `qat.per_channel_formats` + the per-channel rescale column in
+the int8 kernel/oracle/engine.
+
+Contracts:
+  * refinement preserves each layer's learned TOTAL weight width and
+    never widens the integer part past the learned grid;
+  * the int8 Pallas kernel still matches the fake-quant oracle EXACTLY
+    with per-channel formats (scalar formats stay exact too — same kernel
+    body, the scale is just a uniform column);
+  * per-channel grids strictly reduce weight-quantization error on layers
+    whose channels have uneven ranges — the BER headroom the adaptation
+    fine-tunes spend at aggressive QLFs;
+  * engine deployment: per-channel formats deploy int8, group keys stay
+    hashable, `_folded_fit_grid` checks each channel's own grid, and the
+    wrap guard still fires when a channel's total width exceeds 8 bits.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import equalizer as eq
+from repro.core import qat as qat_lib
+from repro.core.engine import EqualizerEngine, _folded_fit_grid
+from repro.kernels.cnn_eq import ref
+from repro.kernels.cnn_eq.cnn_eq import (cnn_eq_fused_int8,
+                                         quantize_weights_int8)
+
+CFG = eq.CNNEqConfig()
+STRIDES = eq.layer_strides(CFG)
+SCALAR_FMT = tuple((2, 5, 3, 4) for _ in range(CFG.layers))
+
+
+def _weights(seed=0):
+    params = eq.init(jax.random.PRNGKey(seed), CFG)
+    folded = eq.fold_bn(params, eq.init_bn_state(CFG), CFG)
+    return eq.folded_weights(folded)
+
+
+def test_per_channel_formats_preserve_learned_total_width():
+    weights = _weights()
+    pc = qat_lib.per_channel_formats(weights, SCALAR_FMT)
+    assert len(pc) == CFG.layers
+    for (wi, wf, ai, af), (swi, swf, sai, saf), (w, _) in zip(
+            pc, SCALAR_FMT, weights):
+        assert (ai, af) == (sai, saf)            # activations untouched
+        wi_a, wf_a = np.asarray(wi), np.asarray(wf)
+        # total magnitude bits preserved per channel; int part never wider
+        np.testing.assert_array_equal(wi_a + wf_a, swi + swf)
+        assert np.all(wi_a <= swi)
+        if isinstance(wi, tuple):
+            assert len(wi) == int(w.shape[0])
+        assert qat_lib.format_max_bits(wi, wf) <= swi + swf + 1
+    # refinement is deterministic (rebuild-after-evict contract)
+    assert pc == qat_lib.per_channel_formats(weights, SCALAR_FMT)
+
+
+@pytest.mark.parametrize("per_channel", [False, True])
+def test_int8_kernel_matches_fake_quant_oracle_exactly(per_channel):
+    weights = _weights()
+    fmt = (qat_lib.per_channel_formats(weights, SCALAR_FMT)
+           if per_channel else SCALAR_FMT)
+    qw = quantize_weights_int8(weights, fmt)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 192 * CFG.n_os),
+                          jnp.float32)
+    y_kernel = cnn_eq_fused_int8(x, qw, STRIDES, fmt, tile_m=32)
+    y_oracle = ref.cnn_eq_quant(x, weights, STRIDES, fmt)
+    np.testing.assert_array_equal(np.asarray(y_kernel),
+                                  np.asarray(y_oracle))
+
+
+def test_per_channel_grids_reduce_weight_quant_error():
+    """On a net whose folded channel ranges are uneven (BN-fold gains make
+    them so), per-channel scales must strictly reduce the total weight
+    quantization error — the whole point of the refinement."""
+    weights = _weights(seed=3)
+    pc = qat_lib.per_channel_formats(weights, SCALAR_FMT)
+    assert any(isinstance(f[0], tuple) for f in pc), "nothing refined"
+
+    def quant_err(fmt):
+        err = 0.0
+        for (w, _), (wi, wf, _, _) in zip(weights, fmt):
+            wi_c = np.asarray(wi, np.float32).reshape(-1, 1, 1)
+            wf_c = np.asarray(wf, np.float32).reshape(-1, 1, 1)
+            scale = np.exp2(wf_c)
+            hi = np.exp2(wi_c) - 1.0 / scale
+            lo = -np.exp2(wi_c)
+            wq = np.clip(np.round(np.asarray(w) * scale) / scale, lo, hi)
+            err += float(np.sum((wq - np.asarray(w)) ** 2))
+        return err
+    assert quant_err(pc) < quant_err(SCALAR_FMT)
+
+
+def test_engine_deploys_per_channel_formats():
+    weights = _weights()
+    pc = qat_lib.per_channel_formats(weights, SCALAR_FMT)
+    e = EqualizerEngine(cfg=CFG, weights=weights, backend="fused_int8",
+                        formats=pc, tile_m=32)
+    assert isinstance(hash(e.group_key()), int)       # stays hashable
+    assert _folded_fit_grid(weights, pc)
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 128 * CFG.n_os),
+                          jnp.float32)
+    y = e(x)
+    np.testing.assert_array_equal(
+        np.asarray(y), np.asarray(ref.cnn_eq_quant(x, weights, STRIDES, pc)))
+
+
+def test_from_params_per_channel_auto_deploys_int8():
+    params = eq.init(jax.random.PRNGKey(5), CFG)
+    params["qat"] = {f"layer{i}": {"w_int": jnp.asarray(2.0),
+                                   "w_frac": jnp.asarray(5.0),
+                                   "a_int": jnp.asarray(3.0),
+                                   "a_frac": jnp.asarray(4.0)}
+                     for i in range(CFG.layers)}
+    e = EqualizerEngine.from_params(params, eq.init_bn_state(CFG), CFG,
+                                    backend="auto", tile_m=32,
+                                    per_channel=True)
+    assert e.backend == "fused_int8"
+    assert any(isinstance(f[0], tuple) for f in e.formats)
+
+
+def test_per_channel_fit_grid_checks_each_channels_own_grid():
+    weights = _weights()
+    pc = qat_lib.per_channel_formats(weights, SCALAR_FMT)
+    # inflate ONE channel past ITS narrowed grid (still inside the layer's
+    # scalar grid): the per-channel check must catch it
+    wi0 = np.asarray(pc[0][0]).reshape(-1)
+    c = int(np.argmin(wi0))
+    if wi0[c] < SCALAR_FMT[0][0]:                 # a genuinely narrowed ch
+        w0, b0 = weights[0]
+        bad = np.asarray(w0).copy()
+        bad[c, 0, 0] = 2.0 ** int(wi0[c]) + 0.5   # > its channel grid
+        bad_weights = ((jnp.asarray(bad), b0),) + tuple(weights[1:])
+        assert _folded_fit_grid(bad_weights, SCALAR_FMT)
+        assert not _folded_fit_grid(bad_weights, pc)
+
+
+def test_int8_wrap_guard_fires_on_wide_per_channel_format():
+    weights = _weights()
+    c_out = int(weights[0][0].shape[0])
+    wide = ((tuple([3] * c_out), tuple([5] * c_out), 3, 4),) \
+        + SCALAR_FMT[1:]                          # 3+5+1 = 9 bits > int8
+    with pytest.raises(ValueError, match="int8"):
+        quantize_weights_int8(weights, wide)
+    qw = quantize_weights_int8(weights, SCALAR_FMT)
+    x = jnp.zeros((1, 64 * CFG.n_os), jnp.float32)
+    with pytest.raises(ValueError, match="wrap"):
+        cnn_eq_fused_int8(x, qw, STRIDES, wide, tile_m=16)
