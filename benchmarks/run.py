@@ -11,6 +11,7 @@ One benchmark per paper table/figure (see DESIGN.md §6):
     bench_serve     §5.3     multi-tenant serving → BENCH_serve.json
     bench_adapt     companion papers: online adaptation under drift
                              → BENCH_adapt.json
+    bench_fault     robustness: chaos-gated failover → BENCH_fault.json
     bench_timing    Fig. 12  timing model vs simulated measurement
     bench_platform  Fig. 13-15  CPU measured / TPU roofline-projected
     bench_roofline  Table 1 / §Roofline  aggregate the dry-run artifacts
@@ -27,13 +28,16 @@ the repo root — after normalizing out the
 uniform host-speed drift per gate group (geomean over shared keys), so
 only RELATIVE per-path regressions fire the gate (default tol: 10% on
 accelerators, 35% on interpret-mode CPU hosts — see `_default_tol`). The
-adapt gate additionally enforces a HARD, host-independent criterion: the
-drift-recovery claim (`criteria.recovery_ok` in `BENCH_adapt.json`) is
-deterministic under its fixed seeds, so its failure is never noise.
-Compare like with like: the committed baseline must come from the same
-host class AND be recorded in the gate's in-process order
-(`--only engine serve adapt`); CPU hosts run the kernels in interpret
-mode.
+adapt and fault gates additionally enforce HARD, host-independent
+criteria: the drift-recovery claim (`criteria.recovery_ok` in
+`BENCH_adapt.json`) and the chaos-recovery claim (`criteria.recovery_ok`
+in `BENCH_fault.json` — bitwise zero-loss failover under injected faults)
+are deterministic under their fixed seeds, so their failure is never
+noise. The fault gate carries no throughput rates at all — it is purely
+the hard criterion. Compare like with like: the committed baseline must
+come from the same host class AND be recorded in the gate's in-process
+order (`--only engine serve adapt fault`); CPU hosts run the kernels in
+interpret mode.
 """
 from __future__ import annotations
 
@@ -46,8 +50,8 @@ import time
 import traceback
 
 from . import (bench_adapt, bench_dop, bench_dse, bench_engine,
-               bench_platform, bench_proakis, bench_quant, bench_roofline,
-               bench_serve, bench_stream, bench_timing)
+               bench_fault, bench_platform, bench_proakis, bench_quant,
+               bench_roofline, bench_serve, bench_stream, bench_timing)
 from .common import REPORT_DIR
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
@@ -86,6 +90,28 @@ def _adapt_criteria(rep: dict):
             f"(frozen degradation {crit.get('frozen_degradation_x', 0):.1f}x"
             f" must be >= 4, adaptive-vs-fresh "
             f"{crit.get('adaptive_vs_fresh_x', 99):.2f}x must be <= 2)"]
+
+
+def _fault_rates(rep: dict) -> dict:
+    """The fault gate tracks NO throughput rates — recovery latencies are
+    host-speed dependent; the whole gate is the hard criterion below."""
+    return {}
+
+
+def _fault_criteria(rep: dict):
+    """Hard (host-independent) gate on the fresh fault report: under the
+    injected faults every chunk must be emitted exactly once, bitwise-equal
+    to offline, with no sessions poisoned and every fault fired.
+    Deterministic under its fixed seeds — a failure is a code regression,
+    never noise."""
+    crit = rep.get("criteria", {})
+    if crit.get("recovery_ok", False):
+        return []
+    return [f"fault: chaos-recovery criterion failed "
+            f"(zero_loss={crit.get('zero_loss')} "
+            f"bitwise={crit.get('bitwise')} "
+            f"sessions_poisoned={crit.get('sessions_poisoned')} "
+            f"faults_fired={crit.get('faults_fired')})"]
 
 
 def _default_tol() -> float:
@@ -144,7 +170,10 @@ def check(tol: float | None = None) -> int:
          lambda: bench_serve.run(out_path=None), _serve_rates, None),
         ("adapt", REPO_ROOT / "BENCH_adapt.json",
          lambda: bench_adapt.run(out_path=None), _adapt_rates,
-         _adapt_criteria))
+         _adapt_criteria),
+        ("fault", REPO_ROOT / "BENCH_fault.json",
+         lambda: bench_fault.run(out_path=None), _fault_rates,
+         _fault_criteria))
     # validate the configuration before burning minutes of re-measurement
     missing = [p.name for _, p, _, _, _ in gates if not p.exists()]
     if missing:
@@ -243,6 +272,7 @@ def main(argv=None) -> int:
         ("engine", lambda: bench_engine.run()),
         ("serve", lambda: bench_serve.run()),
         ("adapt", lambda: bench_adapt.run()),
+        ("fault", lambda: bench_fault.run()),
         ("stream", lambda: bench_stream.run()),
         ("dop", lambda: bench_dop.run()),
         ("roofline", lambda: bench_roofline.run()),

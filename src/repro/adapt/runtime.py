@@ -35,7 +35,8 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Dict, List, Optional
+from collections import deque
+from typing import Deque, Dict, List, Optional
 
 import jax
 import numpy as np
@@ -94,6 +95,10 @@ class _TenantState:
 class OnlineAdapter:
     """Background adaptation controller over one serving runtime."""
 
+    # recent-error window: a daemon loop failing every interval_s forever
+    # must not grow host memory without bound
+    ERRORS_MAX = 256
+
     def __init__(self, runtime, policy: Optional[AdaptPolicy] = None,
                  fine_tune: Optional[FineTuneConfig] = None, seed: int = 0):
         self.runtime = runtime
@@ -104,8 +109,11 @@ class OnlineAdapter:
         self.history: List[AdaptReport] = []
         # background-loop failures land here (mirrors
         # AsyncServeRuntime.errors) — a persistently failing adapter must
-        # be distinguishable from a healthy idle one
-        self.errors: List[BaseException] = []
+        # be distinguishable from a healthy idle one. The deque keeps the
+        # RECENT failures; `errors_total` keeps the RATE observable after
+        # the window wraps (errors_total - len(errors) = dropped).
+        self.errors: Deque[BaseException] = deque(maxlen=self.ERRORS_MAX)
+        self.errors_total = 0
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
 
@@ -235,7 +243,8 @@ class OnlineAdapter:
                 try:
                     self.step()
                 except Exception as e:   # noqa: BLE001 — keep adapting
-                    self.errors.append(e)
+                    self.errors.append(e)          # bounded (ERRORS_MAX)
+                    self.errors_total += 1
                 self._stop.wait(interval_s)
 
         self._thread = threading.Thread(target=loop, name="online-adapter",

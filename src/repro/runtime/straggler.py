@@ -31,14 +31,25 @@ class StragglerConfig:
 
 
 class StragglerMonitor:
+    """`degraded` is the mitigation latch: it turns on after `patience`
+    CONSECUTIVE flagged steps (when `on_straggler` also fires, and — new —
+    `on_recovered` fires on the way back) and decays after `patience`
+    consecutive clean steps, so a transient slow phase stops costing
+    anything once it has passed. `recommend_accum` keys off the latch,
+    not off the cumulative flag count (which could never recover)."""
+
     def __init__(self, cfg: StragglerConfig = StragglerConfig(),
-                 on_straggler: Optional[Callable[[int, float], None]] = None):
+                 on_straggler: Optional[Callable[[int, float], None]] = None,
+                 on_recovered: Optional[Callable[[int], None]] = None):
         self.cfg = cfg
         self.on_straggler = on_straggler
+        self.on_recovered = on_recovered
         self.mean = 0.0
         self.var = 0.0
         self.n = 0
         self.consecutive = 0
+        self.clean_streak = 0
+        self.degraded = False
         self.flags: List[int] = []
         self.times: List[float] = []
         self._t0: Optional[float] = None
@@ -72,12 +83,20 @@ class StragglerMonitor:
             flagged = True
             self.flags.append(step)
             self.consecutive += 1
-            if self.consecutive >= self.cfg.patience \
-                    and self.on_straggler is not None:
-                self.on_straggler(step, dt)
+            self.clean_streak = 0
+            if self.consecutive >= self.cfg.patience:
+                if not self.degraded and self.on_straggler is not None:
+                    self.on_straggler(step, dt)
+                self.degraded = True
                 self.consecutive = 0
         else:
             self.consecutive = 0
+            self.clean_streak += 1
+            if self.degraded and self.clean_streak >= self.cfg.patience:
+                # transient slow phase has passed: lift the mitigation
+                self.degraded = False
+                if self.on_recovered is not None:
+                    self.on_recovered(step)
             # update stats from non-straggler steps only (robustness)
             a = self.cfg.ema_alpha
             delta = dt - self.mean
@@ -88,16 +107,23 @@ class StragglerMonitor:
     # -- mitigation recommendations ------------------------------------------
 
     def recommend_accum(self, base_accum: int) -> int:
-        """Shrink per-worker accumulation when persistently slow (the
+        """Shrink per-worker accumulation while persistently slow (the
         microbatch-rebalance mitigation): slow worker does less local work,
-        the optimizer sees the same global batch via gradient reweighting."""
-        if len(self.flags) >= self.cfg.patience:
+        the optimizer sees the same global batch via gradient reweighting.
+        Keys off the `degraded` latch — NOT the cumulative flag count — so
+        the recommendation returns to `base_accum` after `patience`
+        consecutive clean steps."""
+        if self.degraded:
             return max(1, base_accum // 2)
         return base_accum
 
     def summary(self) -> dict:
-        ts = sorted(self.times)
+        # warmup steps carry compile/first-touch time, not steady-state
+        # step time — including them would skew every quantile of a short
+        # run, so they are excluded (flag bookkeeping never saw them either)
+        ts = sorted(self.times[self.cfg.warmup_steps:])
         q = lambda f: ts[int(f * (len(ts) - 1))] if ts else 0.0
         return {"steps": self.n, "flagged": len(self.flags),
+                "degraded": self.degraded,
                 "p50_s": q(0.5), "p95_s": q(0.95), "p99_s": q(0.99),
                 "mean_s": self.mean}

@@ -3,28 +3,38 @@ docs/ARCHITECTURE.md).
 
 Layers:
   chunker    — stateful overlap-save: arbitrary chunk sizes, offline-exact
+               (carry snapshot/restore is the failover primitive)
   pool       — LRU-bounded engine pool (session-manager memory bound)
   session    — TenantSpec / Session / SessionManager
   scheduler  — BatchPolicy / MicroBatcher: dynamic micro-batching into
                stacked fused-kernel launches with per-row tenant weights,
                split into assemble/execute/descatter phases; TrafficStats
                feed the serve-aware autotune
+  recovery   — fault taxonomy, deterministic FaultPlan chaos injection,
+               RecoveryPolicy failover bounds, output sentinel, and the
+               straggler-driven DegradationController
   runtime    — ServeRuntime (sync) / AsyncServeRuntime (threaded
                front-end: timer-driven pump, double-buffered launches,
-               per-chunk futures)
+               per-chunk futures, deadline/backoff launch discipline,
+               bounded session failover)
   loadgen    — reproducible tenant traffic for benches/examples
 """
-from .chunker import ChunkPlan, StreamChunker
+from .chunker import CarrySnapshot, ChunkPlan, StreamChunker
 from .loadgen import (chop, drift_streams, random_waveforms, replay,
                       replay_adaptive)
 from .pool import EnginePool
+from .recovery import (CorruptOutput, DegradationController, Fault,
+                       FaultPlan, InjectedFault, LaunchTimeout,
+                       RecoveryPolicy, RecoveryStats, TenantShedError)
 from .runtime import AsyncServeRuntime, ServeRuntime
 from .scheduler import (BatchPolicy, LaunchBatch, MicroBatcher, Request,
                         TrafficStats)
 from .session import Session, SessionManager, TenantSpec
 
-__all__ = ["AsyncServeRuntime", "BatchPolicy", "ChunkPlan", "EnginePool",
-           "LaunchBatch", "MicroBatcher", "Request", "ServeRuntime",
-           "Session", "SessionManager", "StreamChunker", "TenantSpec",
-           "TrafficStats", "chop", "drift_streams", "random_waveforms",
-           "replay", "replay_adaptive"]
+__all__ = ["AsyncServeRuntime", "BatchPolicy", "CarrySnapshot", "ChunkPlan",
+           "CorruptOutput", "DegradationController", "EnginePool", "Fault",
+           "FaultPlan", "InjectedFault", "LaunchBatch", "LaunchTimeout",
+           "MicroBatcher", "RecoveryPolicy", "RecoveryStats", "Request",
+           "ServeRuntime", "Session", "SessionManager", "StreamChunker",
+           "TenantShedError", "TenantSpec", "TrafficStats", "chop",
+           "drift_streams", "random_waveforms", "replay", "replay_adaptive"]

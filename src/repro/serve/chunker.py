@@ -48,6 +48,25 @@ from typing import Optional
 import numpy as np
 
 
+@dataclasses.dataclass(frozen=True)
+class CarrySnapshot:
+    """An immutable copy of a `StreamChunker`'s full stream state.
+
+    Taken by `StreamChunker.snapshot` and reinstalled by `restore` — the
+    failover primitive: a session whose engine died mid-stream rebuilds
+    the engine from its `TenantSpec` and re-equalizes from the saved
+    carry, emitting exactly the symbols the uninterrupted stream would
+    have (the chunker is pure bookkeeping, so state capture IS stream
+    capture). The arrays are copied on both capture and restore, so a
+    snapshot stays valid however the live chunker advances afterwards.
+    """
+    buf: np.ndarray
+    o_pos: int
+    next_pos: int
+    total_samples: int
+    finished: bool
+
+
 @dataclasses.dataclass
 class ChunkPlan:
     """One pending engine launch for one tenant stream.
@@ -151,6 +170,30 @@ class StreamChunker:
         if drop:
             self._buf = self._buf[drop:]
             self._o_pos = new_o
+
+    # -- failover: carry snapshot / restore --------------------------------
+
+    def snapshot(self) -> CarrySnapshot:
+        """Capture the complete stream state (deep copy). Bitwise-exact:
+        a chunker restored from this snapshot plans and emits the same
+        positions, with the same tile alignment, as one that never
+        detoured — regardless of any pushes/commits in between."""
+        return CarrySnapshot(buf=self._buf.copy(), o_pos=self._o_pos,
+                             next_pos=self._next_pos,
+                             total_samples=self._total_samples,
+                             finished=self.finished)
+
+    def restore(self, snap: CarrySnapshot) -> None:
+        """Reinstall a snapshot taken from THIS stream (or a stream with
+        the same halo/stride/tile geometry — restoring across geometries
+        would break the tile-alignment invariant, and is the caller's
+        bug). Everything pushed or committed since the snapshot is
+        discarded."""
+        self._buf = snap.buf.copy()
+        self._o_pos = snap.o_pos
+        self._next_pos = snap.next_pos
+        self._total_samples = snap.total_samples
+        self.finished = snap.finished
 
     # -- introspection -----------------------------------------------------
 

@@ -47,16 +47,25 @@ class EnginePool:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        # optional chaos hook (serve/recovery.py FaultPlan): `build_error`
+        # faults are scheduled against the miss/build counter, so they hit
+        # both session opens AND failover rebuilds deterministically
+        self.fault_plan = None
 
     def get(self, key: Hashable, build: Callable[[], Any]) -> Any:
         """Return the cached engine for `key`, building (and possibly
-        evicting the LRU entry) on a miss."""
+        evicting the LRU entry) on a miss. An installed `fault_plan` may
+        fail the build at its scheduled build index — the exception
+        propagates to the caller exactly like a real build failure."""
         with self._lock:
             if key in self._entries:
                 self.hits += 1
                 self._entries.move_to_end(key)
                 return self._entries[key]
+            idx = self.misses
             self.misses += 1
+        if self.fault_plan is not None:
+            self.fault_plan.on_build(idx)
         engine = build()                   # slow: outside the lock
         with self._lock:
             self._entries[key] = engine

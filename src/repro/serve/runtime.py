@@ -52,11 +52,31 @@ single FIFO launcher thread preserves per-session emission order — chunked
 streaming output stays bitwise-equal to the offline engine on all fused
 backends (tests/test_serve.py runs the parity sweep under both drivers).
 
-Launch failures: the launcher retries a failed batch in place (the
-assembled input is a self-contained snapshot) up to `launch_retries` times;
-a terminal failure fails the affected chunk futures AND poisons the
-affected sessions (`Session.failed`) so `output()`/`close()` raise instead
-of silently returning a stream with a hole.
+Launch failures & recovery (serve/recovery.py)
+----------------------------------------------
+The launcher retries a failed batch in place (the assembled input is a
+self-contained snapshot) up to `launch_retries` times, with exponential
+backoff + deterministic jitter between attempts, and — when
+`launch_deadline_s` is set — a per-launch watchdog that abandons a hung
+device call instead of blocking the launcher thread forever. A failure
+that survives the in-place retries used to poison the affected sessions
+outright; now it enters bounded per-session FAILOVER: each affected
+session's engine is dropped from the pool and rebuilt from its
+`TenantSpec` (the PR 3 eviction invariant — engines are disposable), the
+lost chunks are re-assembled from their retained `ChunkPlan` input
+snapshots and re-executed, and the replayed output is bitwise-equal to
+the uninterrupted stream (same plans, same tile alignment, deterministic
+engine rebuild). Only a session that exhausts
+`RecoveryPolicy.max_session_recoveries` (or whose engine rebuild itself
+keeps failing) is poisoned the old way (`Session.failed`), so
+`output()`/`close()` still raise rather than returning a stream with a
+hole. Corrupted outputs (NaN/saturated — the output sentinel in
+`MicroBatcher.descatter` rejects them before anything is emitted) take
+the same replay path, optionally rolling the session's weights back to
+`prev_spec` first (the PR 5 hot-swap quarantine). A `StragglerMonitor`
+over launch latencies can additionally drive graceful degradation —
+shrink `BatchPolicy.max_batch`, shed lowest-priority tenants, restore
+when healthy (`degrade_on_slow=True`).
 
 Serve-aware autotune (ROADMAP "serve-aware autotune") lives in
 `_serve_tile`, shared by both facades: tenants opened with tile_m="auto"
@@ -69,15 +89,21 @@ from __future__ import annotations
 import concurrent.futures
 import dataclasses
 import queue
+import random
 import threading
 import time
-from typing import Callable, Dict, List, Optional
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
 
 import numpy as np
 
 from ..core import autotune as autotune_lib
 from ..core.engine import EqualizerEngine
+from ..runtime.straggler import StragglerConfig
 from .pool import EnginePool
+from .recovery import (CorruptOutput, DegradationController, FaultPlan,
+                       LaunchTimeout, RecoveryPolicy, RecoveryStats,
+                       TenantShedError)
 from .scheduler import BatchPolicy, LaunchBatch, MicroBatcher, Request
 from .session import Session, SessionManager, TenantSpec
 
@@ -154,13 +180,27 @@ class ServeRuntime:
                   tenant's spec on next use.
     clock:        timestamp source (seconds; default time.perf_counter) —
                   injectable for deterministic policy tests.
+    fault_plan:   optional `FaultPlan` chaos schedule (launch + build
+                  faults; see `repro.serve.recovery`). The sync driver has
+                  no failover loop — an injected fault surfaces to the
+                  caller like any launch error, and the un-executed
+                  batches requeue for the next pump (the existing
+                  transient-retry semantic).
+    sentinel_limit: output-sentinel bound (|y| ≤ limit, finite; default
+                  None = disabled on the sync path). A rejected batch
+                  raises `CorruptOutput` with its inputs unconsumed.
     """
 
     def __init__(self, policy: Optional[BatchPolicy] = None,
                  max_engines: int = 32,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 fault_plan: Optional[FaultPlan] = None,
+                 sentinel_limit: Optional[float] = None):
         self.sessions = SessionManager(max_engines=max_engines)
         self.batcher = MicroBatcher(policy, clock=clock)
+        self.batcher.fault_plan = fault_plan
+        self.batcher.sentinel_limit = sentinel_limit
+        self.sessions.pool.fault_plan = fault_plan
 
     # -- tenant lifecycle --------------------------------------------------
 
@@ -274,9 +314,32 @@ class AsyncServeRuntime:
                     of the device (count; default 2 = one executing + one
                     waiting). submit() blocks when full (backpressure).
     launch_retries: in-place retries for a failed device launch before the
-                    batch is declared lost (count; default 2). Terminal
-                    failure fails the chunk futures, records the error in
-                    `errors`, and poisons the sessions involved.
+                    batch enters failover (count; default 2), with
+                    exponential backoff + jitter between attempts
+                    (`RecoveryPolicy.backoff_base_s`/`backoff_max_s`).
+    launch_deadline_s: per-launch watchdog deadline (seconds; default None
+                    = disabled). When set, a device call that exceeds it is
+                    ABANDONED (`LaunchTimeout`, counted as a failed
+                    attempt) instead of blocking the launcher forever.
+                    Leave None on interpret-mode (CPU) hosts — first-touch
+                    kernel compiles legitimately take seconds there.
+    recovery:       `RecoveryPolicy` failover bounds (default: the policy
+                    defaults — failover ON, 4 rounds/session, output
+                    sentinel at 1e4). Terminal failures beyond the bounds
+                    fail the chunk futures, record the error in `errors`,
+                    and poison the sessions involved, exactly as before.
+    fault_plan:     optional `FaultPlan` chaos schedule, wired into the
+                    batcher (launch faults) and engine pool (build
+                    faults). Testing/benching hook; None in production.
+    straggler:      `StragglerConfig` for the launch-latency monitor
+                    (default: stock config — 3σ, patience 3, warmup 5).
+    degrade_on_slow: opt-in graceful degradation (default False: the
+                    monitor observes and reports, but never mutates the
+                    batch policy or sheds tenants — silently rejecting
+                    traffic is a policy decision). When True, persistent
+                    slowness halves `BatchPolicy.max_batch` and sheds the
+                    `shed_count` lowest-priority tenants (their submits
+                    raise `TenantShedError`); both revert when healthy.
 
     Thread-safety: `submit`/`finish`/`pump`/`drain`/`open`/`close`/
     `output`/`stats` may be called from any thread; per-TENANT calls must
@@ -286,17 +349,42 @@ class AsyncServeRuntime:
     process exit.
     """
 
+    ERRORS_MAX = 256                   # bounded error window (see stats())
+
     def __init__(self, policy: Optional[BatchPolicy] = None,
                  max_engines: int = 32,
                  clock: Callable[[], float] = time.perf_counter,
                  queue_depth: int = 2,
-                 launch_retries: int = 2):
+                 launch_retries: int = 2,
+                 launch_deadline_s: Optional[float] = None,
+                 recovery: Optional[RecoveryPolicy] = None,
+                 fault_plan: Optional[FaultPlan] = None,
+                 straggler: Optional[StragglerConfig] = None,
+                 degrade_on_slow: bool = False,
+                 shed_count: int = 1):
         if queue_depth < 1:
             raise ValueError("queue_depth must be ≥ 1")
         self.sessions = SessionManager(max_engines=max_engines)
         self.batcher = MicroBatcher(policy, clock=clock)
         self.launch_retries = launch_retries
-        self.errors: List[BaseException] = []
+        self.launch_deadline_s = launch_deadline_s
+        self.recovery = recovery if recovery is not None else RecoveryPolicy()
+        self.recovery_stats = RecoveryStats()
+        self.fault_plan = fault_plan
+        self.batcher.fault_plan = fault_plan
+        self.batcher.sentinel_limit = self.recovery.sentinel_limit
+        self.sessions.pool.fault_plan = fault_plan
+        # seeded: backoff sleep sequences reproduce run-to-run
+        self._backoff_rng = random.Random(0)
+        self.degradation = DegradationController(
+            self.batcher, self.sessions, cfg=straggler,
+            shed_count=shed_count, mitigate=degrade_on_slow)
+        self._launch_seq = 0           # launches observed by the monitor
+        # bounded: a persistently failing stream must not grow host memory
+        # without limit; `errors_total` keeps the failure RATE observable
+        # after the window wraps (same pattern as OnlineAdapter.errors)
+        self.errors: Deque[BaseException] = deque(maxlen=self.ERRORS_MAX)
+        self.errors_total = 0
         self._lock = threading.RLock()
         # serializes take→enqueue sequences: without it, thread A could
         # pop batch k under the lock, get preempted before the queue put,
@@ -440,11 +528,18 @@ class AsyncServeRuntime:
         when the samples were buffered without reaching an emittable
         position (they will ride in a later chunk's future). The future
         raises the terminal launch error if the chunk's batch was lost.
-        Blocks only on backpressure (launch queue full)."""
+        Blocks only on backpressure (launch queue full). Raises
+        `TenantShedError` while this tenant is load-shed by the
+        degradation controller (`degrade_on_slow`) — shed tenants are
+        readmitted automatically once launch health returns."""
         with self._dispatch_mutex:
             with self._lock:
                 self._check_running()
                 s = self.sessions.get(tenant_id)
+                if s.shed:
+                    raise TenantShedError(
+                        f"tenant {tenant_id!r} is load-shed while the "
+                        f"runtime is degraded; resubmit after recovery")
                 s.chunker.push(np.asarray(samples))
                 req = self.batcher.enqueue(s)
                 if req is not None:
@@ -517,9 +612,12 @@ class AsyncServeRuntime:
                   "pending": self.batcher.pending(),
                   "inflight": self._inflight,
                   "queue_depth": self._launch_q.maxsize,
-                  "errors": len(self.errors),
+                  "errors": self.errors_total,
+                  "errors_dropped": self.errors_total - len(self.errors),
                   "pool": self.pool.stats(),
-                  "traffic": self.batcher.traffic_stats()}
+                  "traffic": self.batcher.traffic_stats(),
+                  "recovery": self.recovery_stats.as_dict(),
+                  "degradation": self.degradation.state()}
             st.update(self.batcher.latency_stats())
             return st
 
@@ -573,39 +671,239 @@ class AsyncServeRuntime:
                     self._dispatch(batches)
             except Exception as e:  # noqa: BLE001 — keep the clock alive
                 with self._lock:
-                    self.errors.append(e)
+                    self._record_error(e)
+
+    def _record_error(self, e: BaseException) -> None:
+        self.errors.append(e)          # bounded window (ERRORS_MAX)
+        self.errors_total += 1
 
     def _launch_loop(self) -> None:
         """The device owner: execute each assembled batch (NO lock — this
         is the overlap window), then land it under the lock. A failed
-        execute retries in place, preserving FIFO order and therefore
-        per-session stream order."""
+        execute retries in place (backoff between attempts), then enters
+        bounded failover (`_failover`); the launcher runs replays inline,
+        preserving FIFO order and therefore per-session stream order."""
         while True:
             batch = self._launch_q.get()
             if batch is _SHUTDOWN:
                 self._launch_q.task_done()
                 return
-            y, err = None, None
-            for _ in range(self.launch_retries + 1):
-                try:
-                    y = self.batcher.execute(batch)
-                    err = None
-                    break
-                except Exception as e:  # noqa: BLE001 — retried/reported
-                    err = e
-            with self._lock:
-                try:
-                    if err is None:
-                        self.batcher.descatter(batch, y)
-                    else:
-                        self.errors.append(err)
-                        self.batcher.fail(batch, err)
-                except Exception as e:  # noqa: BLE001 — launcher must live
-                    self.errors.append(e)
-                    self.batcher.fail(batch, e)
-                finally:
-                    for r in batch.reqs:
-                        r.session.inflight -= 1
-                    self._inflight -= len(batch.reqs)
-                    self._done.notify_all()
+            self._run_batch(batch)
             self._launch_q.task_done()
+
+    def _run_batch(self, batch: LaunchBatch) -> None:
+        """Drive one assembled batch to a terminal state: every request is
+        descattered exactly once, or its future fails and its session is
+        poisoned. Failover rounds replay the surviving requests through
+        rebuilt engines until they land or exhaust their budget."""
+        t_fail: Optional[float] = None
+        round_idx = 0
+        while True:
+            y, err = self._try_execute(batch)
+            if err is None:
+                with self._lock:
+                    try:
+                        self.batcher.descatter(batch, y)
+                        self._land_locked(batch)
+                        if t_fail is not None:
+                            self.recovery_stats.record_recovery(
+                                self.batcher.clock() - t_fail)
+                        return
+                    except CorruptOutput as e:
+                        # sentinel rejected the output BEFORE anything was
+                        # emitted: batch state intact → quarantine + replay
+                        self.recovery_stats.corrupt_detected += 1
+                        err = e
+                    except Exception as e:  # noqa: BLE001 — launcher lives
+                        # descatter failed MIDWAY: emission state ambiguous,
+                        # replay could double-emit — poison, as before
+                        self._record_error(e)
+                        self.batcher.fail(batch, e)
+                        self._land_locked(batch)
+                        return
+            if t_fail is None:
+                t_fail = self.batcher.clock()
+            batch = self._failover(batch, err)
+            if batch is None:
+                return                 # everything poisoned and landed
+            time.sleep(self.recovery.backoff_s(round_idx, self._backoff_rng))
+            round_idx += 1
+
+    def _try_execute(self, batch: LaunchBatch):
+        """In-place launch attempts: `launch_retries` retries with
+        exponential backoff + jitter, each under the watchdog deadline.
+        Returns (y, None) on success, (None, last error) when exhausted.
+        Every attempt's latency feeds the straggler monitor (timeouts
+        count at the deadline — the watchdog saw at least that much)."""
+        err: Optional[BaseException] = None
+        for attempt in range(self.launch_retries + 1):
+            if attempt:
+                time.sleep(self.recovery.backoff_s(attempt - 1,
+                                                   self._backoff_rng))
+            t0 = time.perf_counter()
+            try:
+                y = self._execute_deadline(batch)
+            except Exception as e:  # noqa: BLE001 — retried/reported
+                err = e
+                dt = (self.launch_deadline_s
+                      if isinstance(e, LaunchTimeout)
+                      else time.perf_counter() - t0)
+                self._observe_launch(dt)
+                continue
+            self._observe_launch(time.perf_counter() - t0)
+            return y, None
+        return None, err
+
+    def _execute_deadline(self, batch: LaunchBatch) -> np.ndarray:
+        """One device attempt, watchdog-bounded when `launch_deadline_s`
+        is set: the blocking call runs on a daemon worker thread; if it
+        misses the deadline the worker is ABANDONED (it cannot be killed —
+        a hung C++ device call holds no Python-visible cancellation point)
+        and `LaunchTimeout` is raised so the launcher stays live. The
+        abandoned attempt's output, if it ever lands, is dropped on the
+        floor — only the launcher thread descatters."""
+        deadline = self.launch_deadline_s
+        if deadline is None:
+            return self.batcher.execute(batch)
+        result: Dict[str, object] = {}
+        done = threading.Event()
+
+        def _worker() -> None:
+            try:
+                result["y"] = self.batcher.execute(batch)
+            except BaseException as e:  # noqa: BLE001 — re-raised below
+                result["e"] = e
+            finally:
+                done.set()
+
+        t = threading.Thread(target=_worker, name="serve-watchdog-exec",
+                             daemon=True)
+        t.start()
+        if not done.wait(deadline):
+            self.recovery_stats.deadline_timeouts += 1
+            raise LaunchTimeout(
+                f"launch exceeded deadline {deadline:g}s; "
+                f"hung device call abandoned")
+        if "e" in result:
+            raise result["e"]          # type: ignore[misc]
+        return result["y"]             # type: ignore[return-value]
+
+    def _observe_launch(self, dt: float) -> None:
+        """Feed one launch-attempt latency to the degradation controller
+        (which needs the lock: it may shrink the policy / shed tenants)."""
+        with self._lock:
+            idx = self._launch_seq
+            self._launch_seq += 1
+            self.degradation.observe(idx, dt)
+
+    def _land_locked(self, batch: LaunchBatch) -> None:
+        """Account a batch's requests as no longer in flight (lock held)."""
+        for r in batch.reqs:
+            r.session.inflight -= 1
+        self._inflight -= len(batch.reqs)
+        self._done.notify_all()
+
+    def _failover(self, batch: LaunchBatch,
+                  err: BaseException) -> Optional[LaunchBatch]:
+        """One bounded failover round for a terminally failed (or
+        corrupted) batch. Requests whose session still has recovery budget
+        get their engine rebuilt from its `TenantSpec` (pool drop + build
+        — the PR 3 eviction invariant) and are re-assembled into a replay
+        batch from their retained `ChunkPlan` input snapshots; the rest
+        are poisoned exactly like the pre-recovery terminal path. Returns
+        the replay batch, or None when nothing survived (all landed).
+
+        Bitwise safety: plans are input snapshots committed at enqueue,
+        engine rebuilds are deterministic, and `assemble` recomputes the
+        identical width bucket — so a replayed launch is the SAME stacked
+        computation the failed one would have produced (contract #9)."""
+        corrupt = isinstance(err, CorruptOutput)
+        with self._lock:
+            self._record_error(err)
+            distinct = {id(r.session): r.session for r in batch.reqs}
+            for s in distinct.values():
+                s.recoveries += 1
+            keep: List[Request] = []
+            doomed: List[Request] = []
+            for r in batch.reqs:
+                s = r.session
+                over = s.recoveries > self.recovery.max_session_recoveries
+                (doomed if over or s.failed is not None else keep).append(r)
+            self._poison_locked(doomed, err)
+        if not keep:
+            return None
+        # engine rebuilds run OUTSIDE the lock: builds fold BN + quantize
+        # (hundreds of ms on interpret-mode hosts) and rebuild backoff
+        # sleeps — producers/timer must keep planning meanwhile
+        alive: Dict[int, bool] = {}
+        build_err: Optional[BaseException] = None
+        for s in {id(r.session): r.session for r in keep}.values():
+            e = self._recover_session(s, corrupt)
+            alive[id(s)] = e is None
+            build_err = e or build_err
+        good = [r for r in keep if alive[id(r.session)]]
+        dead = [r for r in keep if not alive[id(r.session)]]
+        with self._lock:
+            if dead:
+                self._poison_locked(dead, build_err or err)
+            if not good:
+                return None
+            # re-assembly under the lock (fn cache is not thread-safe);
+            # rebuilt engines have fresh ids → natural stacked-fn cache
+            # miss → the replay binds the NEW engines' weights
+            replay = self.batcher.assemble(batch.key, good)
+            self.recovery_stats.recoveries += 1
+            self.recovery_stats.chunks_replayed += len(good)
+        return replay
+
+    def _poison_locked(self, reqs: List[Request],
+                       err: BaseException) -> None:
+        """Terminal path for requests that exhausted (or never had) their
+        recovery budget: fail futures, poison sessions, land (lock held).
+        No-op on an empty list."""
+        if not reqs:
+            return
+        newly = {id(r.session) for r in reqs if r.session.failed is None}
+        self.batcher.fail_requests(reqs, err)
+        self.recovery_stats.sessions_poisoned += len(newly)
+        for r in reqs:
+            r.session.inflight -= 1
+        self._inflight -= len(reqs)
+        self._done.notify_all()
+
+    def _recover_session(self, s: Session,
+                         corrupt: bool) -> Optional[BaseException]:
+        """Rebuild one session's engine for replay (no locks held).
+        On a corrupt-output failover, first try the PR 5 quarantine: roll
+        the weights back to `prev_spec` bit-identically (at most once per
+        session — `rolled_back` latches, so a corruption that survives
+        the rollback cannot ping-pong between specs). Otherwise — or when
+        there is nothing to roll back to — drop the pool entry and rebuild
+        from the active spec, retrying `build_retries` times with backoff
+        (an injected/real build failure is itself transient-retryable).
+        Returns None on success, the last build error on failure."""
+        if (corrupt and self.recovery.rollback_on_corrupt
+                and s.prev_spec is not None and not s.rolled_back):
+            try:
+                prev = dataclasses.replace(
+                    s.prev_spec, weight_epoch=s.spec.weight_epoch + 1)
+                s.install_spec(prev)   # replaces the pool entry itself
+                s.rolled_back = True
+                self.recovery_stats.rollbacks += 1
+                self.recovery_stats.engine_rebuilds += 1
+                return None
+            except Exception:  # noqa: BLE001 — fall back to plain rebuild
+                pass
+        err: Optional[BaseException] = None
+        self.pool.drop(s.spec.tenant_id)
+        for attempt in range(self.recovery.build_retries + 1):
+            if attempt:
+                time.sleep(self.recovery.backoff_s(attempt - 1,
+                                                   self._backoff_rng))
+            try:
+                s.engine               # pool miss → spec.build_engine()
+                self.recovery_stats.engine_rebuilds += 1
+                return None
+            except Exception as e:  # noqa: BLE001 — bounded retries
+                err = e
+        return err

@@ -53,6 +53,7 @@ import numpy as np
 
 from ..core.engine import stacked_engine_fn
 from .chunker import ChunkPlan
+from .recovery import CorruptOutput, output_ok
 from .session import Session
 
 _CONSUMED = np.zeros((0,), np.float32)     # placeholder for launched inputs
@@ -206,6 +207,15 @@ class MicroBatcher:
         self.traffic: Dict[Tuple, TrafficStats] = {}
         self.total_requests = 0
         self.launches = 0
+        # fault-tolerance hooks (serve/recovery.py): an optional
+        # deterministic chaos schedule, and the output-sentinel bound
+        # (None = no check). `exec_seq` numbers execute ATTEMPTS — the
+        # index space FaultPlan launch faults are scheduled in; it only
+        # ever advances on the launching thread (sync caller or the async
+        # launcher), so a plain int is race-free.
+        self.fault_plan = None
+        self.sentinel_limit: Optional[float] = None
+        self.exec_seq = 0
 
     # -- queueing ----------------------------------------------------------
 
@@ -299,11 +309,20 @@ class MicroBatcher:
 
     def execute(self, batch: LaunchBatch) -> np.ndarray:
         """Device phase: ONE stacked fused-kernel launch, blocking until
-        the (B, S) output is on host. Touches no scheduler state — safe to
-        run off-thread without the runtime lock."""
+        the (B, S) output is on host. Touches no scheduler state beyond
+        the attempt counter — safe to run off-thread without the runtime
+        lock. Each call consumes one `exec_seq` index; an installed
+        `FaultPlan` may raise/delay before the dispatch or corrupt the
+        landed output at its scheduled indices (retries and failover
+        replays consume FRESH indices, so an injected fault fires once)."""
+        idx, self.exec_seq = self.exec_seq, self.exec_seq + 1
+        if self.fault_plan is not None:
+            self.fault_plan.on_execute(idx)
         t_launch = self.clock()
         y = batch.fn(jnp.asarray(batch.x))
         y = np.asarray(jax.block_until_ready(y))
+        if self.fault_plan is not None:
+            y = self.fault_plan.on_output(idx, y)
         for r in batch.reqs:
             r.t_launch = t_launch
         return y
@@ -311,7 +330,19 @@ class MicroBatcher:
     def descatter(self, batch: LaunchBatch, y: np.ndarray) -> None:
         """Host phase 2: slice each tenant's emitted rows out of the
         stacked output, append to its session in stream order, resolve its
-        future, record latency + traffic stats."""
+        future, record latency + traffic stats.
+
+        The output sentinel runs FIRST, before any row is emitted: a
+        rejected batch raises `CorruptOutput` with the batch state fully
+        intact (inputs unconsumed, futures pending, nothing appended), so
+        the caller can requeue or replay it exactly like a failed launch —
+        quarantine instead of emitting garbage."""
+        if self.sentinel_limit is not None and not output_ok(
+                y, self.sentinel_limit):
+            raise CorruptOutput(
+                f"stacked output rejected by sentinel (|y| ≤ "
+                f"{self.sentinel_limit:g} violated or non-finite) for "
+                f"batch of {len(batch.reqs)}")
         t_done = self.clock()
         reqs = batch.reqs
         for i, r in enumerate(reqs):
@@ -348,7 +379,13 @@ class MicroBatcher:
         raises instead of silently returning a stream with a hole.
         Idempotent per request — futures already resolved (e.g. a failure
         mid-descatter) are left alone."""
-        for r in batch.reqs:
+        self.fail_requests(batch.reqs, exc)
+
+    def fail_requests(self, reqs: List[Request], exc: BaseException) -> None:
+        """Poison a SUBSET of a failed batch's requests (the failover path
+        partitions a batch into replayable and over-budget requests — only
+        the latter die). Same semantics as `fail`, per request."""
+        for r in reqs:
             r.session.failed = exc
             if r.future is not None and not r.future.done():
                 r.future.set_exception(exc)

@@ -73,6 +73,12 @@ class TenantSpec:
                `rollback_weights`; NOT part of the engine's group key —
                epochs ride in the per-row stacked weight operands, so
                tenants on different epochs still share launches.
+    priority:  load-shedding rank (int; default 0, higher = more
+               important). Under persistent launch slowness the
+               degradation controller (`repro.serve.recovery`) sheds the
+               LOWEST-priority tenants first (ties broken by tenant_id).
+               Not part of the engine identity — purely a serving-policy
+               attribute.
     """
     tenant_id: str
     cfg: CNNEqConfig
@@ -84,6 +90,7 @@ class TenantSpec:
     tile_m: int | str = "auto"
     per_channel: bool = False
     weight_epoch: int = 0
+    priority: int = 0
 
     def build_engine(self) -> EqualizerEngine:
         if (self.params is None) == (self.weights is None):
@@ -166,6 +173,17 @@ class Session:
         # maintained (under its lock) by AsyncServeRuntime so close() can
         # wait for a tenant's in-flight work; always 0 on the sync path
         self.inflight = 0
+        # fault-tolerance bookkeeping (serve/recovery.py, async runtime):
+        # `recoveries` counts failover rounds this stream has consumed
+        # (bounded by RecoveryPolicy.max_session_recoveries before the
+        # stream is poisoned the old way); `shed` marks the tenant as
+        # load-shed by the degradation controller — submits raise
+        # TenantShedError until health returns; `rolled_back` latches
+        # after a corrupt-output rollback so a session never ping-pongs
+        # between spec and prev_spec
+        self.recoveries = 0
+        self.shed = False
+        self.rolled_back = False
         # online-adaptation hooks (see class docstring)
         self.tap: Optional[Callable[[np.ndarray, np.ndarray], None]] = None
         self.prev_spec: Optional[TenantSpec] = None

@@ -1,0 +1,372 @@
+"""Fault-tolerant serving (repro.serve.recovery) — the ISSUE-6 acceptance
+surface.
+
+  * `FaultPlan` determinism: scheduled faults fire exactly once, in the
+    right index space, and validate their kinds;
+  * bounded session failover: an injected terminal launch failure rebuilds
+    the affected engines from `TenantSpec` and replays the lost chunks —
+    the finished streams stay BITWISE-equal to offline equalization;
+  * output-sentinel quarantine: NaN/saturated launch output is rejected
+    before emission and replayed clean (plus the PR 5 rollback path when
+    the session recently hot-swapped weights);
+  * launch discipline: the watchdog deadline abandons a hung device call;
+    backoff between retries is exponential, capped, and jitter-seeded;
+  * graceful degradation: persistent launch slowness halves
+    `BatchPolicy.max_batch` and sheds the lowest-priority tenant
+    (`TenantShedError` on submit), both restored when healthy;
+  * the chaos acceptance sweep: 6 tenants across fused_fp32 + fused_int8
+    under all four fault kinds — every submitted chunk emitted exactly
+    once, bitwise-equal to offline.
+
+All tests carry the `chaos` marker (deselect with -m "not chaos").
+"""
+import random
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import equalizer as eq
+from repro.core.engine import EqualizerEngine
+from repro.runtime.straggler import StragglerConfig
+from repro.serve import (AsyncServeRuntime, BatchPolicy, CorruptOutput,
+                         Fault, FaultPlan, InjectedFault, MicroBatcher,
+                         RecoveryPolicy, ServeRuntime, TenantShedError,
+                         TenantSpec, chop)
+from repro.serve.recovery import output_ok
+
+pytestmark = pytest.mark.chaos
+
+CFG = eq.CNNEqConfig()
+INT8_FMT = tuple((2, 5, 3, 4) for _ in range(CFG.layers))
+
+
+def _weights(seed, cfg=CFG):
+    params = eq.init(jax.random.PRNGKey(seed), cfg)
+    folded = eq.fold_bn(params, eq.init_bn_state(cfg), cfg)
+    return eq.folded_weights(folded)
+
+
+def _spec(tid, backend, seed, cfg=CFG, tile_m=32, priority=0):
+    return TenantSpec(
+        tid, cfg, weights=_weights(seed, cfg),
+        formats=INT8_FMT if backend == "fused_int8" else None,
+        backend=backend, tile_m=tile_m, priority=priority)
+
+
+def _offline(spec, wave):
+    import jax.numpy as jnp
+    return np.asarray(spec.build_engine()(jnp.asarray(wave[None])))[0]
+
+
+def _wave(seed, n_syms):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(n_syms * CFG.n_os).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan / policy units
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_validates_and_fires_once():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        Fault("meteor_strike", 0)
+    with pytest.raises(ValueError, match="unknown corrupt mode"):
+        Fault("corrupt", 0, mode="gremlins")
+    with pytest.raises(ValueError, match="duplicate"):
+        FaultPlan([Fault("launch_error", 1), Fault("launch_error", 1)])
+
+    fp = FaultPlan([Fault("launch_error", 1), Fault("build_error", 0)])
+    fp.on_execute(0)                               # not scheduled: no-op
+    with pytest.raises(InjectedFault):
+        fp.on_execute(1)
+    fp.on_execute(1)                               # fires at most ONCE
+    with pytest.raises(InjectedFault):
+        fp.on_build(0)
+    fp.on_build(0)
+    assert fp.fired == [("launch_error", 1), ("build_error", 0)]
+    assert fp.pending == 0
+    assert fp.summary() == {"launch_error": 1, "build_error": 1}
+
+
+def test_fault_plan_corrupts_scheduled_rows_only():
+    fp = FaultPlan([Fault("corrupt", 0, mode="nan", rows=(1,)),
+                    Fault("corrupt", 1, mode="saturate")])
+    y = np.ones((3, 4), np.float32)
+    out = fp.on_output(0, y)
+    assert np.isnan(out[1]).all() and np.isfinite(out[[0, 2]]).all()
+    assert np.isfinite(y).all()                    # input untouched (copy)
+    out2 = fp.on_output(1, y)
+    assert (np.abs(out2) >= 1e9).all()
+    assert fp.on_output(2, y) is y                 # unscheduled: passthrough
+
+
+def test_output_sentinel():
+    assert output_ok(np.ones((2, 3), np.float32), 1e4)
+    assert output_ok(np.zeros((0,), np.float32), 1e4)      # empty is fine
+    assert not output_ok(np.array([1.0, np.nan]), 1e4)
+    assert not output_ok(np.array([1.0, np.inf]), 1e4)
+    assert not output_ok(np.array([1.0, 2e4]), 1e4)
+
+
+def test_backoff_is_exponential_capped_and_jitter_bounded():
+    pol = RecoveryPolicy(backoff_base_s=0.01, backoff_max_s=0.05,
+                         jitter=0.25)
+    rng = random.Random(0)
+    for attempt, nominal in enumerate([0.01, 0.02, 0.04, 0.05, 0.05]):
+        for _ in range(20):
+            d = pol.backoff_s(attempt, rng)
+            assert 0.75 * nominal <= d <= 1.25 * nominal
+    nojit = RecoveryPolicy(backoff_base_s=0.01, jitter=0.0)
+    assert nojit.backoff_s(2, rng) == pytest.approx(0.04)
+
+
+# ---------------------------------------------------------------------------
+# sync driver: faults surface, requeue, and replay clean
+# ---------------------------------------------------------------------------
+
+def test_sync_runtime_fault_requeues_and_recovers_bitwise():
+    fp = FaultPlan([Fault("launch_error", 0), Fault("corrupt", 1)])
+    rt = ServeRuntime(BatchPolicy(max_batch=1, max_wait_s=0.0),
+                      fault_plan=fp, sentinel_limit=1e4)
+    spec = _spec("sync", "fused_fp32", seed=3)
+    rt.open(spec)
+    wave = _wave(5, 300)
+    with pytest.raises(InjectedFault):             # exec 0: injected error
+        rt.submit("sync", wave)
+    with pytest.raises(CorruptOutput):             # exec 1: sentinel trips
+        rt.pump()
+    got = rt.close("sync")                         # exec 2+: clean replay
+    np.testing.assert_array_equal(got, _offline(spec, wave))
+    assert fp.pending == 0
+
+
+# ---------------------------------------------------------------------------
+# async failover: rebuild + replay, bitwise
+# ---------------------------------------------------------------------------
+
+def test_async_terminal_injected_failure_recovers_bitwise():
+    """launch_retries=1 and back-to-back injected errors make the first
+    launch fail TERMINALLY; failover rebuilds the engine and replays —
+    the stream finishes bitwise-equal to offline, futures all resolve."""
+    fp = FaultPlan([Fault("launch_error", 0), Fault("launch_error", 1)])
+    with AsyncServeRuntime(BatchPolicy(max_batch=1, max_wait_s=1e9),
+                           launch_retries=1, fault_plan=fp) as rt:
+        spec = _spec("phoenix", "fused_fp32", seed=17)
+        rt.open(spec)
+        wave = _wave(23, 400)
+        futs = [rt.submit("phoenix", c) for c in chop(wave, 350, seed=2)]
+        futs.append(rt.finish("phoenix"))
+        rt.drain()
+        for f in futs:
+            if f is not None:
+                assert np.isfinite(f.result(timeout=30)).all()
+        got = rt.output("phoenix")
+        np.testing.assert_array_equal(got, _offline(spec, wave))
+        st = rt.stats()
+        assert st["recovery"]["recoveries"] >= 1
+        assert st["recovery"]["chunks_replayed"] >= 1
+        assert st["recovery"]["engine_rebuilds"] >= 1
+        assert st["recovery"]["sessions_poisoned"] == 0
+        assert rt.errors and rt.errors_total == len(rt.errors)
+
+
+def test_async_build_failure_during_failover_is_retried():
+    """The failover engine rebuild itself hits an injected build failure
+    (build index 1 = the first rebuild; build 0 was the open) — the
+    bounded build retry absorbs it and the stream still lands bitwise."""
+    fp = FaultPlan([Fault("launch_error", 0), Fault("launch_error", 1),
+                    Fault("build_error", 1)])
+    with AsyncServeRuntime(BatchPolicy(max_batch=1, max_wait_s=1e9),
+                           launch_retries=1, fault_plan=fp) as rt:
+        spec = _spec("rebuilder", "fused_fp32", seed=31)
+        rt.open(spec)
+        wave = _wave(37, 300)
+        rt.submit("rebuilder", wave)
+        got = rt.close("rebuilder")
+        np.testing.assert_array_equal(got, _offline(spec, wave))
+        assert fp.pending == 0
+        assert rt.recovery_stats.engine_rebuilds >= 1
+
+
+def test_async_recovery_budget_exhaustion_still_poisons(monkeypatch):
+    """A permanently dead device exhausts max_session_recoveries and the
+    stream is poisoned the pre-recovery way — bounded, not infinite."""
+    def dead_execute(self, batch):
+        raise RuntimeError("dead device")
+
+    monkeypatch.setattr(MicroBatcher, "execute", dead_execute)
+    pol = RecoveryPolicy(max_session_recoveries=2, backoff_base_s=1e-4,
+                         backoff_max_s=1e-3)
+    with AsyncServeRuntime(BatchPolicy(max_batch=1, max_wait_s=1e9),
+                           launch_retries=0, recovery=pol) as rt:
+        rt.open(_spec("doomed", "fused_fp32", seed=41))
+        fut = rt.submit("doomed", _wave(43, 250))
+        rt.drain()
+        with pytest.raises(RuntimeError, match="dead device"):
+            fut.result(timeout=30)
+        with pytest.raises(RuntimeError, match="lost a chunk"):
+            rt.output("doomed")
+        s = rt.sessions.get("doomed")
+        assert s.recoveries == pol.max_session_recoveries + 1
+        assert rt.recovery_stats.sessions_poisoned == 1
+
+
+def test_async_corrupt_output_quarantined_and_replayed_bitwise():
+    fp = FaultPlan([Fault("corrupt", 0, mode="nan"),
+                    Fault("corrupt", 1, mode="saturate")])
+    with AsyncServeRuntime(BatchPolicy(max_batch=1, max_wait_s=1e9),
+                           fault_plan=fp) as rt:
+        spec = _spec("glitchy", "fused_int8", seed=53)
+        rt.open(spec)
+        wave = _wave(59, 300)
+        futs = [rt.submit("glitchy", c) for c in chop(wave, 280, seed=4)]
+        futs.append(rt.finish("glitchy"))
+        rt.drain()
+        got = rt.output("glitchy")
+        assert np.isfinite(got).all()
+        np.testing.assert_array_equal(got, _offline(spec, wave))
+        assert rt.recovery_stats.corrupt_detected >= 1
+        assert rt.recovery_stats.sessions_poisoned == 0
+
+
+def test_async_corrupt_after_swap_rolls_back_weights():
+    """Corruption on a session that recently hot-swapped takes the PR 5
+    quarantine: the weights roll back to prev_spec bit-identically (epoch
+    bumps), the chunks replay, and the stream survives un-poisoned."""
+    w0, w1 = _weights(61), _weights(67)
+    # exec 0 = pre-swap launch; exec 1 = first post-swap launch → corrupt
+    fp = FaultPlan([Fault("corrupt", 1, mode="nan")])
+    with AsyncServeRuntime(BatchPolicy(max_batch=1, max_wait_s=1e9),
+                           fault_plan=fp) as rt:
+        spec = _spec("swapper", "fused_fp32", seed=61)
+        rt.open(spec)
+        f0 = rt.submit("swapper", _wave(71, 200))
+        f0.result(timeout=30)
+        assert rt.swap_weights("swapper", weights=w1) == 1
+        f1 = rt.submit("swapper", _wave(73, 200))
+        rt.drain()
+        assert np.isfinite(f1.result(timeout=30)).all()
+        s = rt.sessions.get("swapper")
+        assert s.failed is None and s.rolled_back
+        assert rt.recovery_stats.rollbacks == 1
+        assert s.spec.weight_epoch == 2            # rollback bumps epoch
+        # the active weights are bit-identical to the pre-swap ones
+        np.testing.assert_array_equal(np.asarray(s.spec.weights[0][0]),
+                                      np.asarray(spec.weights[0][0]))
+
+
+def test_async_launch_deadline_abandons_hung_call():
+    """An injected 3 s launch delay against a 1 s watchdog deadline: the
+    hung attempt is abandoned (LaunchTimeout), the retry lands clean, and
+    the stream stays bitwise. Exec 0 is a fault-free warm-up so the
+    kernel compile never races the deadline."""
+    fp = FaultPlan([Fault("launch_delay", 1, delay_s=3.0)])
+    with AsyncServeRuntime(BatchPolicy(max_batch=1, max_wait_s=1e9),
+                           launch_retries=1, launch_deadline_s=1.0,
+                           fault_plan=fp) as rt:
+        spec = _spec("sleeper", "fused_fp32", seed=79)
+        rt.open(spec)
+        wave = _wave(83, 400)
+        chunks = list(chop(wave, 220, seed=6))
+        rt.submit("sleeper", chunks[0]).result(timeout=60)   # warm-up
+        for c in chunks[1:]:
+            rt.submit("sleeper", c)
+        got = rt.close("sleeper")
+        np.testing.assert_array_equal(got, _offline(spec, wave))
+        assert rt.recovery_stats.deadline_timeouts >= 1
+        assert rt.recovery_stats.sessions_poisoned == 0
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation
+# ---------------------------------------------------------------------------
+
+def test_degradation_shrinks_sheds_lowest_priority_and_restores():
+    cfg = StragglerConfig(warmup_steps=2, patience=2, sigma_factor=3.0)
+    with AsyncServeRuntime(BatchPolicy(max_batch=8, max_wait_s=1e9),
+                           straggler=cfg, degrade_on_slow=True) as rt:
+        rt.open(_spec("vip", "fused_fp32", seed=89, priority=5))
+        rt.open(_spec("best-effort", "fused_fp32", seed=97, priority=0))
+        ctl = rt.degradation
+        step = 0
+        with rt._lock:
+            for _ in range(6):                     # warmup + baseline
+                ctl.observe(step, 0.01)
+                step += 1
+            for _ in range(2):                     # persistent slowness
+                ctl.observe(step, 1.0)
+                step += 1
+        assert ctl.degraded
+        assert rt.batcher.policy.max_batch == 4
+        assert ctl.shed_ids == ["best-effort"]     # lowest priority first
+        with pytest.raises(TenantShedError):
+            rt.submit("best-effort", np.zeros(300, np.float32))
+        rt.submit("vip", _wave(101, 100))          # VIP keeps serving
+        with rt._lock:
+            for _ in range(2):                     # health returns
+                ctl.observe(step, 0.01)
+                step += 1
+        assert not ctl.degraded
+        assert rt.batcher.policy.max_batch == 8
+        assert not rt.sessions.get("best-effort").shed
+        rt.submit("best-effort", _wave(103, 80))   # readmitted
+        rt.drain()
+
+
+# ---------------------------------------------------------------------------
+# the ISSUE-6 acceptance sweep: all four fault kinds, 6 tenants, bitwise
+# ---------------------------------------------------------------------------
+
+def test_chaos_sweep_six_tenants_all_fault_kinds_bitwise_zero_loss():
+    """6 tenants across fused_fp32 + fused_int8 under a FaultPlan that
+    injects launch errors (terminal pair), a launch delay, an engine-build
+    failure, and output corruption. Every submitted chunk must be emitted
+    exactly ONCE (stream lengths match offline) and bitwise-equal to
+    offline equalization; no session may be poisoned."""
+    fp = FaultPlan([
+        Fault("launch_delay", 1, delay_s=0.05),
+        Fault("launch_error", 2), Fault("launch_error", 3),  # terminal
+        Fault("corrupt", 5, mode="saturate"),
+        Fault("build_error", 6),     # builds 0-5 are the opens → 6 is the
+    ])                               # first failover rebuild
+    backends = ["fused_fp32", "fused_int8"]
+    specs = [_spec(f"t{i}", backends[i % 2], seed=200 + i, priority=i)
+             for i in range(6)]
+    # streams must exceed one kernel tile (tile_m · v_parallel symbols) —
+    # below that the offline reference legally shrinks its tile and the
+    # contract is ~1 ULP, not bitwise (see chunker module docstring)
+    waves = {s.tenant_id: _wave(300 + i, 280 + 16 * i)
+             for i, s in enumerate(specs)}
+    with AsyncServeRuntime(BatchPolicy(max_batch=3, max_wait_s=1e9),
+                           launch_retries=1, fault_plan=fp) as rt:
+        for s in specs:
+            rt.open(s)
+        streams = {t: iter(chop(w, 120 * CFG.n_os, seed=i, jitter=0.5))
+                   for i, (t, w) in enumerate(sorted(waves.items()))}
+        futs = []
+        live = set(streams)
+        while live:
+            for t in sorted(live):
+                c = next(streams[t], None)
+                if c is None:
+                    live.discard(t)
+                    futs.append(rt.finish(t))
+                else:
+                    futs.append(rt.submit(t, c))
+        rt.drain()
+        for f in futs:
+            if f is not None:
+                assert np.isfinite(f.result(timeout=60)).all()
+        for s in specs:
+            got = rt.output(s.tenant_id)
+            want = _offline(s, waves[s.tenant_id])
+            assert got.shape == want.shape         # exactly-once emission
+            np.testing.assert_array_equal(got, want)
+        st = rt.stats()
+        assert fp.pending == 0, f"unfired faults: {fp.summary()}"
+        assert set(fp.summary()) == {"launch_error", "launch_delay",
+                                     "corrupt", "build_error"}
+        assert st["recovery"]["recoveries"] >= 1
+        assert st["recovery"]["chunks_replayed"] >= 1
+        assert st["recovery"]["sessions_poisoned"] == 0

@@ -605,3 +605,71 @@ def test_async_close_waits_for_inflight_and_shutdown_rejects():
         rt.shutdown()
     with pytest.raises(RuntimeError, match="shut down"):
         rt.submit("closer", np.zeros(4, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# chunker carry snapshot / restore — the failover primitive
+# ---------------------------------------------------------------------------
+
+def test_chunker_snapshot_restore_replays_identical_plans():
+    """A chunker restored from a snapshot plans the SAME launches — same
+    skip/n_emit, bitwise-identical input rows — as the original from that
+    point on, and discards anything pushed after the snapshot."""
+    rng = np.random.default_rng(11)
+    ch = StreamChunker(halo=68, total_stride=2, tile_m=8)
+    ch.push(rng.standard_normal(500).astype(np.float32))
+    p = ch.plan()
+    ch.commit(p)
+    snap = ch.snapshot()
+    tail = rng.standard_normal(300).astype(np.float32)
+
+    def play(c):
+        c.push(tail)
+        c.finish()
+        plans = []
+        while True:
+            pl = c.plan()
+            if pl is None:
+                break
+            c.commit(pl)
+            plans.append(pl)
+        return plans
+
+    first = play(ch)
+    assert first, "stream must have emittable tail positions"
+    fresh = StreamChunker(halo=68, total_stride=2, tile_m=8)
+    fresh.push(np.full(999, 7.0, np.float32))      # pre-restore garbage
+    fresh.restore(snap)
+    second = play(fresh)
+    assert len(first) == len(second)
+    for a, b in zip(first, second):
+        assert (a.skip, a.n_emit) == (b.skip, b.n_emit)
+        np.testing.assert_array_equal(a.data, b.data)
+
+
+@pytest.mark.parametrize("backend",
+                         [b for b in BACKENDS if b.startswith("fused")])
+def test_chunker_snapshot_restore_across_engine_rebuild(backend):
+    """Failover round-trip per fused backend: snapshot the carry
+    mid-stream, take a detour (extra pushed samples), restore, drop the
+    pool entry so the engine REBUILDS from the spec — the finished stream
+    is bitwise-equal to the uninterrupted offline equalization."""
+    spec = _spec("snap", backend, seed=21)
+    rt = ServeRuntime(BatchPolicy(max_batch=1, max_wait_s=0.0))
+    s = rt.open(spec)
+    rng = np.random.default_rng(7)
+    wave = rng.standard_normal(400 * CFG.n_os).astype(np.float32)
+    chunks = list(chop(wave, 300, seed=3))
+    half = len(chunks) // 2
+    for c in chunks[:half]:
+        rt.submit("snap", c)
+    snap = s.chunker.snapshot()
+    emitted = s.chunker.emitted_positions
+    s.chunker.push(rng.standard_normal(64).astype(np.float32))  # detour
+    s.chunker.restore(snap)
+    assert s.chunker.emitted_positions == emitted
+    rt.pool.drop("snap")                 # force rebuild from TenantSpec
+    for c in chunks[half:]:
+        rt.submit("snap", c)
+    got = rt.close("snap")
+    np.testing.assert_array_equal(got, _offline(spec, wave))
