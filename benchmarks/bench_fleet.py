@@ -1,0 +1,215 @@
+"""Fleet serving — the chaos-gated device-loss migration benchmark.
+
+Runs a 2-worker `FleetRuntime` (repro.serve.fleet) under a deterministic
+`FaultPlan` that kills worker 0 MID-STREAM (`device_lost` after its 2nd
+launch) and injects latency on worker 1 (`device_slow`), against 6 tenants
+across fused_fp32 and fused_int8, and records in `BENCH_fleet.json` at the
+repo root:
+
+  * recovery — the fleet-wide sum and PER-WORKER `RecoveryStats` ledgers:
+    device losses, sessions migrated out/in, chunks replayed, engine
+    rebuilds, and the p50/max migration latency (worker death → replayed
+    batch landed on the survivor). Latencies are host-speed dependent and
+    recorded for trend-watching only; `--check` does NOT gate on them.
+  * criteria.fleet_recovery_ok — the HARD host-independent gate: under
+    the injected device faults every submitted chunk is emitted exactly
+    once (stream lengths match offline), every finished stream is BITWISE
+    equal to offline equalization (contract #10: output independent of
+    which worker served which chunk), no session is poisoned, and both
+    device faults actually fired. Deterministic under its fixed seeds —
+    `--check` fails hard if it breaks.
+  * placement / health — where tenants landed before and after the
+    migration, plus each worker's straggler-fed launch-latency summary.
+  * timing — wall time of the faulted pass vs an identical clean pass
+    (informational; interpret-mode compiles dominate both).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.core import equalizer as eq
+from repro.serve import (BatchPolicy, Fault, FaultPlan, FleetRuntime,
+                         TenantSpec, chop)
+
+from .common import Bench
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+OUT_PATH = REPO_ROOT / "BENCH_fleet.json"
+
+CFG = eq.CNNEqConfig()
+TILE_M = 32
+INT8_FMT = tuple((2, 5, 3, 4) for _ in range(CFG.layers))
+N_TENANTS = 6
+N_WORKERS = 2
+FLEET_FAULT_KINDS = ("device_lost", "device_slow")
+
+
+def _weights(seed: int):
+    params = eq.init(jax.random.PRNGKey(seed), CFG)
+    folded = eq.fold_bn(params, eq.init_bn_state(CFG), CFG)
+    return eq.folded_weights(folded)
+
+
+def _spec(i: int) -> TenantSpec:
+    backend = ("fused_fp32", "fused_int8")[i % 2]
+    return TenantSpec(
+        f"t{i}", CFG, weights=_weights(200 + i),
+        formats=INT8_FMT if backend == "fused_int8" else None,
+        backend=backend, tile_m=TILE_M, priority=i)
+
+
+def _offline(spec: TenantSpec, wave: np.ndarray) -> np.ndarray:
+    import jax.numpy as jnp
+    return np.asarray(spec.build_engine()(jnp.asarray(wave[None])))[0]
+
+
+def _wave(seed: int, n_syms: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(n_syms * CFG.n_os).astype(np.float32)
+
+
+def _fault_plan() -> FaultPlan:
+    # device kinds schedule per WORKER index: `at` names the worker,
+    # `after` its first eligible execute. Worker 0 dies after two launches
+    # have landed (mid-stream, so migration must replay retained plans);
+    # worker 1 — the migration TARGET — takes an injected slow launch, so
+    # the survivor's health monitor sees it while absorbing the refugees.
+    return FaultPlan([
+        Fault("device_lost", at=0, after=2),
+        Fault("device_slow", at=1, after=1, delay_s=0.05),
+    ])
+
+
+def _chaos_pass(specs, waves, fault_plan: Optional[FaultPlan]):
+    """Serve every wave chopped into jittered chunks, round-robin across
+    tenants on a 2-worker fleet; returns (per-tenant outputs, placement
+    at open, fleet stats, wall seconds)."""
+    t0 = time.time()
+    with FleetRuntime(n_workers=N_WORKERS,
+                      policy=BatchPolicy(max_batch=3, max_wait_s=1e9),
+                      launch_retries=1, fault_plan=fault_plan) as rt:
+        for s in specs:
+            rt.open(s)
+        placement_open = rt.stats()["placement"]
+        streams = {t: iter(chop(w, 120 * CFG.n_os, seed=i, jitter=0.5))
+                   for i, (t, w) in enumerate(sorted(waves.items()))}
+        live = set(streams)
+        while live:
+            for t in sorted(live):
+                c = next(streams[t], None)
+                if c is None:
+                    live.discard(t)
+                    rt.finish(t)
+                else:
+                    rt.submit(t, c)
+        rt.drain()
+        outputs = {s.tenant_id: rt.output(s.tenant_id) for s in specs}
+        stats = rt.stats()
+    return outputs, placement_open, stats, time.time() - t0
+
+
+def run(out_path: Optional[pathlib.Path] = OUT_PATH) -> dict:
+    bench = Bench("fleet_recovery",
+                  "robustness: device-loss migration, chaos-gated")
+    specs = [_spec(i) for i in range(N_TENANTS)]
+    # streams must exceed one kernel tile (tile_m · v_parallel symbols) —
+    # below that the offline reference legally shrinks its tile and the
+    # contract is ~1 ULP, not bitwise (see chunker module docstring)
+    waves = {s.tenant_id: _wave(300 + i, 280 + 16 * i)
+             for i, s in enumerate(specs)}
+    offline = {s.tenant_id: _offline(s, waves[s.tenant_id]) for s in specs}
+
+    fp = _fault_plan()
+    n_injected = fp.pending
+    outputs, placement_open, stats, fault_wall = _chaos_pass(
+        specs, waves, fault_plan=fp)
+    _, _, _, clean_wall = _chaos_pass(specs, waves, fault_plan=None)
+
+    streams_rep = {}
+    zero_loss = bitwise = True
+    for tid, got in sorted(outputs.items()):
+        want = offline[tid]
+        same_shape = got.shape == want.shape
+        same_bits = same_shape and bool(np.array_equal(got, want))
+        zero_loss &= same_shape
+        bitwise &= same_bits
+        streams_rep[tid] = {"syms": int(want.shape[0]),
+                            "exactly_once": same_shape,
+                            "bitwise": same_bits}
+
+    rec = stats["recovery"]
+    device_faults_fired = (fp.pending == 0
+                           and set(fp.summary()) == set(FLEET_FAULT_KINDS))
+    criteria = {
+        "zero_loss": bool(zero_loss),
+        "bitwise": bool(bitwise),
+        "sessions_poisoned": rec["sessions_poisoned"],
+        "device_faults_fired": bool(device_faults_fired),
+        "fleet_recovery_ok": bool(zero_loss and bitwise
+                                  and device_faults_fired
+                                  and rec["sessions_poisoned"] == 0),
+    }
+    migrated = rec["sessions_migrated_in"]
+    lat = max(w["recovery"].get("max_recovery_s", 0.0)
+              for w in stats["workers"])
+    print(f"[bench_fleet] {n_injected} device fault(s) injected, "
+          f"{len(fp.fired)} fired {fp.summary()}; "
+          f"{rec['device_losses']} device loss(es), "
+          f"{migrated} session(s) migrated, "
+          f"{rec['chunks_replayed']} chunk(s) replayed, "
+          f"{rec['engine_rebuilds']} engine rebuild(s)")
+    print(f"[bench_fleet] placement {placement_open} → "
+          f"{stats['placement']}; worst migration latency {lat:.3f}s; "
+          f"wall {fault_wall:.1f}s faulted vs {clean_wall:.1f}s clean")
+    print(f"[bench_fleet] fleet_recovery_ok="
+          f"{criteria['fleet_recovery_ok']} "
+          f"(zero_loss={criteria['zero_loss']} "
+          f"bitwise={criteria['bitwise']} "
+          f"poisoned={criteria['sessions_poisoned']} "
+          f"device_faults_fired={criteria['device_faults_fired']})")
+
+    report = {
+        "backend_default": jax.default_backend(),
+        "scenario": {
+            "n_tenants": N_TENANTS,
+            "n_workers": N_WORKERS,
+            "backends": ["fused_fp32", "fused_int8"],
+            "tile_m": TILE_M,
+            "chunk_samples": 120 * CFG.n_os,
+            "max_batch": 3, "launch_retries": 1,
+            "faults": [{"kind": k, "at": at} for k, at in fp.fired],
+        },
+        "recovery": rec,
+        "workers": [{"worker": w["worker"], "alive": w["alive"],
+                     "tenants": w["tenants"],
+                     "recovery": w["recovery"],
+                     "health": w["health"]}
+                    for w in stats["workers"]],
+        "placement": {"at_open": placement_open,
+                      "after_migration": stats["placement"]},
+        "migrations": stats["migrations"],
+        "faults": {"injected": n_injected, "fired": fp.summary()},
+        "streams": streams_rep,
+        "criteria": criteria,
+        "timing": {
+            "fault_wall_s": fault_wall, "clean_wall_s": clean_wall,
+            "note": ("host-speed dependent (interpret-mode compiles "
+                     "dominate both arms); informational only — the "
+                     "--check gate is criteria.fleet_recovery_ok"),
+        },
+    }
+    if out_path is not None:
+        out_path.write_text(json.dumps(report, indent=2))
+        print(f"[bench_fleet] wrote {out_path}")
+    bench.record("report", report)
+    return bench.finish()
+
+
+if __name__ == "__main__":
+    run()

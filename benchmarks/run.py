@@ -12,6 +12,8 @@ One benchmark per paper table/figure (see DESIGN.md §6):
     bench_adapt     companion papers: online adaptation under drift
                              → BENCH_adapt.json
     bench_fault     robustness: chaos-gated failover → BENCH_fault.json
+    bench_fleet     robustness: device-loss migration on a 2-worker fleet
+                             → BENCH_fleet.json
     bench_timing    Fig. 12  timing model vs simulated measurement
     bench_platform  Fig. 13-15  CPU measured / TPU roofline-projected
     bench_roofline  Table 1 / §Roofline  aggregate the dry-run artifacts
@@ -28,15 +30,18 @@ the repo root — after normalizing out the
 uniform host-speed drift per gate group (geomean over shared keys), so
 only RELATIVE per-path regressions fire the gate (default tol: 10% on
 accelerators, 35% on interpret-mode CPU hosts — see `_default_tol`). The
-adapt and fault gates additionally enforce HARD, host-independent
+adapt, fault and fleet gates additionally enforce HARD, host-independent
 criteria: the drift-recovery claim (`criteria.recovery_ok` in
-`BENCH_adapt.json`) and the chaos-recovery claim (`criteria.recovery_ok`
+`BENCH_adapt.json`), the chaos-recovery claim (`criteria.recovery_ok`
 in `BENCH_fault.json` — bitwise zero-loss failover under injected faults)
-are deterministic under their fixed seeds, so their failure is never
-noise. The fault gate carries no throughput rates at all — it is purely
-the hard criterion. Compare like with like: the committed baseline must
-come from the same host class AND be recorded in the gate's in-process
-order (`--only engine serve adapt fault`); CPU hosts run the kernels in
+and the device-loss-migration claim (`criteria.fleet_recovery_ok` in
+`BENCH_fleet.json` — a worker killed mid-stream, every stream migrated
+bitwise with zero loss and zero poisoning) are deterministic under their
+fixed seeds, so their failure is never noise. The fault and fleet gates
+carry no throughput rates at all — they are purely the hard criteria.
+Compare like with like: the committed baseline must come from the same
+host class AND be recorded in the gate's in-process order
+(`--only engine serve adapt fault fleet`); CPU hosts run the kernels in
 interpret mode.
 """
 from __future__ import annotations
@@ -50,8 +55,9 @@ import time
 import traceback
 
 from . import (bench_adapt, bench_dop, bench_dse, bench_engine,
-               bench_fault, bench_platform, bench_proakis, bench_quant,
-               bench_roofline, bench_serve, bench_stream, bench_timing)
+               bench_fault, bench_fleet, bench_platform, bench_proakis,
+               bench_quant, bench_roofline, bench_serve, bench_stream,
+               bench_timing)
 from .common import REPORT_DIR
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
@@ -114,6 +120,28 @@ def _fault_criteria(rep: dict):
             f"faults_fired={crit.get('faults_fired')})"]
 
 
+def _fleet_rates(rep: dict) -> dict:
+    """The fleet gate tracks NO throughput rates — migration latencies are
+    host-speed dependent; the whole gate is the hard criterion below."""
+    return {}
+
+
+def _fleet_criteria(rep: dict):
+    """Hard (host-independent) gate on the fresh fleet report: a worker
+    killed mid-stream, and still every chunk emitted exactly once,
+    bitwise-equal to offline (contract #10, placement invariance), zero
+    sessions poisoned, both device faults fired. Deterministic under its
+    fixed seeds — a failure is a code regression, never noise."""
+    crit = rep.get("criteria", {})
+    if crit.get("fleet_recovery_ok", False):
+        return []
+    return [f"fleet: device-loss-migration criterion failed "
+            f"(zero_loss={crit.get('zero_loss')} "
+            f"bitwise={crit.get('bitwise')} "
+            f"sessions_poisoned={crit.get('sessions_poisoned')} "
+            f"device_faults_fired={crit.get('device_faults_fired')})"]
+
+
 def _default_tol() -> float:
     """Host-class-aware gate width. Real accelerators get the tight 10%
     gate; interpret-mode CPU hosts run the kernels ~50× slower with
@@ -173,7 +201,10 @@ def check(tol: float | None = None) -> int:
          _adapt_criteria),
         ("fault", REPO_ROOT / "BENCH_fault.json",
          lambda: bench_fault.run(out_path=None), _fault_rates,
-         _fault_criteria))
+         _fault_criteria),
+        ("fleet", REPO_ROOT / "BENCH_fleet.json",
+         lambda: bench_fleet.run(out_path=None), _fleet_rates,
+         _fleet_criteria))
     # validate the configuration before burning minutes of re-measurement
     missing = [p.name for _, p, _, _, _ in gates if not p.exists()]
     if missing:
@@ -273,6 +304,7 @@ def main(argv=None) -> int:
         ("serve", lambda: bench_serve.run()),
         ("adapt", lambda: bench_adapt.run()),
         ("fault", lambda: bench_fault.run()),
+        ("fleet", lambda: bench_fleet.run()),
         ("stream", lambda: bench_stream.run()),
         ("dop", lambda: bench_dop.run()),
         ("roofline", lambda: bench_roofline.run()),

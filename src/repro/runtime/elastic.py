@@ -17,7 +17,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Optional, Tuple
 
-import jax
 from jax.sharding import Mesh
 
 from ..checkpoint.manager import CheckpointManager
@@ -29,16 +28,16 @@ def best_mesh(n_devices: Optional[int] = None, model_parallel: int = 0,
     """Largest (data, model) mesh for the surviving device set.
 
     Model parallelism is pinned by the checkpointed config (weights must
-    still divide); the data axis absorbs the elasticity."""
-    devs = devices if devices is not None else jax.devices()
-    n = n_devices or len(devs)
-    mp = model_parallel or 1
-    while mp > 1 and n % mp:
-        mp //= 2
-    dp = n // mp
-    return Mesh(
-        __import__("numpy").asarray(devs[:dp * mp]).reshape(dp, mp),
-        ("data", "model"))
+    still divide); the data axis absorbs the elasticity.
+
+    The implementation lives with the rest of the device-set logic in
+    `repro.serve.fleet` (single source of mesh/device-set truth for both
+    elastic training restores and fleet serving); this re-export keeps the
+    historical `repro.runtime.best_mesh` import path working. The import
+    is lazy to avoid a cycle (runtime → serve → runtime.straggler)."""
+    from ..serve.fleet import best_mesh as _best_mesh
+    return _best_mesh(n_devices=n_devices, model_parallel=model_parallel,
+                      devices=devices)
 
 
 @dataclasses.dataclass

@@ -17,14 +17,20 @@ Layers:
                front-end: timer-driven pump, double-buffered launches,
                per-chunk futures, deadline/backoff launch discipline,
                bounded session failover)
+  fleet      — FleetRuntime: N workers over a device mesh, shard-by-tenant
+               placement, per-worker health (StragglerMonitor heartbeat,
+               consecutive-failure / deadline device-loss detection), and
+               bitwise stream migration on worker death; also the single
+               source of device-set truth (worker_devices / best_mesh)
   loadgen    — reproducible tenant traffic for benches/examples
 """
 from .chunker import CarrySnapshot, ChunkPlan, StreamChunker
+from .fleet import FleetRuntime, FleetWorker, best_mesh, worker_devices
 from .loadgen import (chop, drift_streams, random_waveforms, replay,
                       replay_adaptive)
 from .pool import EnginePool
-from .recovery import (CorruptOutput, DegradationController, Fault,
-                       FaultPlan, InjectedFault, LaunchTimeout,
+from .recovery import (CorruptOutput, DegradationController, DeviceLost,
+                       Fault, FaultPlan, InjectedFault, LaunchTimeout,
                        RecoveryPolicy, RecoveryStats, TenantShedError)
 from .runtime import AsyncServeRuntime, ServeRuntime
 from .scheduler import (BatchPolicy, LaunchBatch, MicroBatcher, Request,
@@ -32,9 +38,11 @@ from .scheduler import (BatchPolicy, LaunchBatch, MicroBatcher, Request,
 from .session import Session, SessionManager, TenantSpec
 
 __all__ = ["AsyncServeRuntime", "BatchPolicy", "CarrySnapshot", "ChunkPlan",
-           "CorruptOutput", "DegradationController", "EnginePool", "Fault",
-           "FaultPlan", "InjectedFault", "LaunchBatch", "LaunchTimeout",
-           "MicroBatcher", "RecoveryPolicy", "RecoveryStats", "Request",
-           "ServeRuntime", "Session", "SessionManager", "StreamChunker",
-           "TenantShedError", "TenantSpec", "TrafficStats", "chop",
-           "drift_streams", "random_waveforms", "replay", "replay_adaptive"]
+           "CorruptOutput", "DegradationController", "DeviceLost",
+           "EnginePool", "Fault", "FaultPlan", "FleetRuntime", "FleetWorker",
+           "InjectedFault", "LaunchBatch", "LaunchTimeout", "MicroBatcher",
+           "RecoveryPolicy", "RecoveryStats", "Request", "ServeRuntime",
+           "Session", "SessionManager", "StreamChunker", "TenantShedError",
+           "TenantSpec", "TrafficStats", "best_mesh", "chop",
+           "drift_streams", "random_waveforms", "replay", "replay_adaptive",
+           "worker_devices"]

@@ -86,6 +86,14 @@ class EnginePool:
         with self._lock:
             self._entries.pop(key, None)
 
+    def clear(self) -> None:
+        """Drop every entry (fleet worker death: the dead device's built
+        engines are garbage; sessions rebuild on their new worker's pool).
+        Hit/miss/eviction counters are preserved — they describe history,
+        not contents."""
+        with self._lock:
+            self._entries.clear()
+
     def stats(self) -> Dict[str, int]:
         with self._lock:
             return {"size": len(self._entries),

@@ -77,6 +77,14 @@ class CorruptOutput(RuntimeError):
     out-of-range values) before anything was emitted."""
 
 
+class DeviceLost(RuntimeError):
+    """A fleet worker's device is gone (injected `device_lost` fault, or
+    declared by the fleet health model after consecutive terminal launch
+    failures). Not retryable on the same worker — the fleet controller
+    migrates the worker's sessions to a surviving device instead
+    (`repro.serve.fleet`)."""
+
+
 class TenantShedError(RuntimeError):
     """Submit refused: the tenant is currently shed by the degradation
     controller. Back off and retry after the runtime reports healthy."""
@@ -89,6 +97,7 @@ class TenantShedError(RuntimeError):
 # fault kinds and the index space their `at` is scheduled in
 _LAUNCH_KINDS = ("launch_error", "launch_delay", "corrupt")   # execute index
 _BUILD_KINDS = ("build_error",)                               # build index
+_DEVICE_KINDS = ("device_lost", "device_slow")                # worker index
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,27 +108,42 @@ class Fault:
              sleeps `delay_s` before dispatch — drives the straggler
              monitor and, past the deadline, the watchdog),
              "build_error" (an `EnginePool` miss's build raises — hits
-             session opens AND failover rebuilds), or "corrupt" (the
-             stacked output is overwritten with NaN/saturated values).
+             session opens AND failover rebuilds), "corrupt" (the
+             stacked output is overwritten with NaN/saturated values),
+             "device_lost" (a fleet worker's execute raises `DeviceLost`
+             — the whole worker dies and its sessions migrate), or
+             "device_slow" (a fleet worker's execute sleeps `delay_s` —
+             drives the worker's straggler-fed health model).
     at:      the scheduled index — the batcher's execute-attempt counter
-             for launch kinds, the pool's build counter for build_error.
-             Each fault fires AT MOST ONCE (replays consume fresh
-             indices, so a recovered launch is clean by construction).
-    delay_s: sleep for "launch_delay" (seconds).
+             for launch kinds, the pool's build counter for build_error,
+             and the WORKER index for device kinds (which worker of the
+             fleet the fault hits). Each fault fires AT MOST ONCE
+             (replays consume fresh indices, so a recovered launch is
+             clean by construction).
+    after:   device kinds only: the worker's execute-attempt index at or
+             beyond which the fault fires (default 0 = the worker's first
+             launch). Lets a chaos test kill a worker MID-stream, after
+             some launches have already landed.
+    delay_s: sleep for "launch_delay" / "device_slow" (seconds).
     mode:    corruption shape for "corrupt": "nan" or "saturate" (±1e9).
     rows:    stacked rows to corrupt (None → every row).
     """
     kind: str
     at: int
+    after: int = 0
     delay_s: float = 0.0
     mode: str = "nan"
     rows: Optional[Tuple[int, ...]] = None
 
     def __post_init__(self):
-        if self.kind not in _LAUNCH_KINDS + _BUILD_KINDS:
+        if self.kind not in _LAUNCH_KINDS + _BUILD_KINDS + _DEVICE_KINDS:
             raise ValueError(f"unknown fault kind {self.kind!r}")
         if self.mode not in ("nan", "saturate"):
             raise ValueError(f"unknown corrupt mode {self.mode!r}")
+        if self.after and self.kind not in _DEVICE_KINDS:
+            raise ValueError(
+                f"`after` only applies to device fault kinds, not "
+                f"{self.kind!r}")
 
 
 class FaultPlan:
@@ -136,6 +160,12 @@ class FaultPlan:
                              or a corrupted copy (corrupt).
       on_build(idx)        — called by `EnginePool.get` before a miss's
                              build; may raise `InjectedFault`.
+      on_worker(worker, idx) — called by `MicroBatcher.execute` when the
+                             batcher belongs to a fleet worker
+                             (`worker_index` set), BEFORE on_execute; may
+                             sleep (device_slow) or raise `DeviceLost`
+                             (device_lost) once the worker's execute
+                             index reaches the fault's `after`.
 
     `fired` lists (kind, at) in fire order — the assertion surface for
     tests ("the chaos really happened") and the bench report.
@@ -157,6 +187,19 @@ class FaultPlan:
             if f is None or (kind, idx) in self.fired:
                 return None
             self.fired.append((kind, idx))
+            return f
+
+    def _take_after(self, kind: str, worker: int,
+                    idx: int) -> Optional[Fault]:
+        """Take a device fault scheduled on `worker` once that worker's
+        execute index has reached the fault's `after` (at most once,
+        thread-safe — fleet workers launch concurrently)."""
+        with self._lock:
+            f = self._faults.get((kind, worker))
+            if (f is None or (kind, worker) in self.fired
+                    or idx < f.after):
+                return None
+            self.fired.append((kind, worker))
             return f
 
     # -- hooks -------------------------------------------------------------
@@ -186,6 +229,17 @@ class FaultPlan:
         if f is not None:
             raise InjectedFault(f"injected engine-build failure "
                                 f"at build {idx}")
+
+    def on_worker(self, worker: int, idx: int) -> None:
+        """Device-level faults for fleet worker `worker` at its execute
+        index `idx` (each fires at most once; see `Fault.after`)."""
+        f = self._take_after("device_slow", worker, idx)
+        if f is not None:
+            time.sleep(f.delay_s)
+        f = self._take_after("device_lost", worker, idx)
+        if f is not None:
+            raise DeviceLost(f"injected device loss on worker {worker} "
+                             f"at execute {idx}")
 
     # -- introspection -----------------------------------------------------
 
@@ -243,6 +297,12 @@ class RecoveryPolicy:
                   that has hot-swapped weights (`prev_spec` present),
                   roll the weights back bit-identically before replaying
                   (at most once per session; default True).
+    device_lost_after: fleet health model only — consecutive TERMINAL
+                  launch failures on one worker before the fleet declares
+                  its device lost and migrates every resident session
+                  (count; default None = never; `FleetRuntime` defaults
+                  its own policy to 2). Meaningless for the single-device
+                  `AsyncServeRuntime`, which has nowhere to migrate.
     """
     max_session_recoveries: int = 4
     build_retries: int = 2
@@ -251,6 +311,7 @@ class RecoveryPolicy:
     jitter: float = 0.25
     sentinel_limit: Optional[float] = 1e4
     rollback_on_corrupt: bool = True
+    device_lost_after: Optional[int] = None
 
     def backoff_s(self, attempt: int, rng: random.Random) -> float:
         """Backoff before retry `attempt` (0-based): exponential, capped,
@@ -265,34 +326,53 @@ class RecoveryPolicy:
 class RecoveryStats:
     """Failover counters + a bounded recovery-latency window (the numbers
     `benchmarks/bench_fault.py` publishes and `stats()["recovery"]`
-    exposes)."""
+    exposes; a fleet keeps one ledger PER WORKER).
+
+    Thread-safe: every mutation goes through `bump`/`record_recovery`
+    under an internal lock and `as_dict` snapshots under the same lock —
+    fleet launcher threads and the fleet controller race the counters
+    (PR 6 had a single launcher thread and mutated attributes directly).
+    Counter reads stay plain attribute access (ints are consistent under
+    the GIL; only read-modify-write needs the lock).
+    """
 
     WINDOW = 256
+    FIELDS = ("recoveries",            # failover rounds relaunched
+              "chunks_replayed",       # requests re-equalized by failover
+              "engine_rebuilds",       # pool entries dropped + rebuilt
+              "deadline_timeouts",     # watchdog expirations
+              "corrupt_detected",      # sentinel rejections
+              "rollbacks",             # corrupt → prev_spec reinstalls
+              "sessions_poisoned",     # streams lost despite recovery
+              "device_losses",         # this worker's device declared lost
+              "sessions_migrated_out",  # sessions this worker lost to peers
+              "sessions_migrated_in")   # sessions adopted from dead peers
 
     def __init__(self):
-        self.recoveries = 0            # failover rounds relaunched
-        self.chunks_replayed = 0       # requests re-equalized by failover
-        self.engine_rebuilds = 0       # pool entries dropped + rebuilt
-        self.deadline_timeouts = 0     # watchdog expirations
-        self.corrupt_detected = 0      # sentinel rejections
-        self.rollbacks = 0             # corrupt → prev_spec reinstalls
-        self.sessions_poisoned = 0     # streams lost despite recovery
+        self._lock = threading.Lock()
+        for f in self.FIELDS:
+            setattr(self, f, 0)
         self.recovery_s: Deque[float] = deque(maxlen=self.WINDOW)
 
+    def bump(self, field: str, n: int = 1) -> None:
+        """Atomically increment one counter (must be a FIELDS name)."""
+        if field not in self.FIELDS:
+            raise AttributeError(f"unknown recovery counter {field!r}")
+        with self._lock:
+            setattr(self, field, getattr(self, field) + n)
+
     def record_recovery(self, dt: float) -> None:
-        self.recovery_s.append(dt)
+        with self._lock:
+            self.recovery_s.append(dt)
 
     def as_dict(self) -> Dict:
-        lat = sorted(self.recovery_s)
+        with self._lock:
+            lat = sorted(self.recovery_s)
+            out = {f: getattr(self, f) for f in self.FIELDS}
         q = lambda f: lat[int(f * (len(lat) - 1))] if lat else 0.0
-        return {"recoveries": self.recoveries,
-                "chunks_replayed": self.chunks_replayed,
-                "engine_rebuilds": self.engine_rebuilds,
-                "deadline_timeouts": self.deadline_timeouts,
-                "corrupt_detected": self.corrupt_detected,
-                "rollbacks": self.rollbacks,
-                "sessions_poisoned": self.sessions_poisoned,
-                "p50_recovery_s": q(0.5), "max_recovery_s": q(1.0)}
+        out["p50_recovery_s"] = q(0.5)
+        out["max_recovery_s"] = q(1.0)
+        return out
 
 
 # ---------------------------------------------------------------------------

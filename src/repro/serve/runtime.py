@@ -712,7 +712,7 @@ class AsyncServeRuntime:
                     except CorruptOutput as e:
                         # sentinel rejected the output BEFORE anything was
                         # emitted: batch state intact → quarantine + replay
-                        self.recovery_stats.corrupt_detected += 1
+                        self.recovery_stats.bump("corrupt_detected")
                         err = e
                     except Exception as e:  # noqa: BLE001 — launcher lives
                         # descatter failed MIDWAY: emission state ambiguous,
@@ -780,7 +780,7 @@ class AsyncServeRuntime:
                              daemon=True)
         t.start()
         if not done.wait(deadline):
-            self.recovery_stats.deadline_timeouts += 1
+            self.recovery_stats.bump("deadline_timeouts")
             raise LaunchTimeout(
                 f"launch exceeded deadline {deadline:g}s; "
                 f"hung device call abandoned")
@@ -852,8 +852,8 @@ class AsyncServeRuntime:
             # rebuilt engines have fresh ids → natural stacked-fn cache
             # miss → the replay binds the NEW engines' weights
             replay = self.batcher.assemble(batch.key, good)
-            self.recovery_stats.recoveries += 1
-            self.recovery_stats.chunks_replayed += len(good)
+            self.recovery_stats.bump("recoveries")
+            self.recovery_stats.bump("chunks_replayed", len(good))
         return replay
 
     def _poison_locked(self, reqs: List[Request],
@@ -865,7 +865,7 @@ class AsyncServeRuntime:
             return
         newly = {id(r.session) for r in reqs if r.session.failed is None}
         self.batcher.fail_requests(reqs, err)
-        self.recovery_stats.sessions_poisoned += len(newly)
+        self.recovery_stats.bump("sessions_poisoned", len(newly))
         for r in reqs:
             r.session.inflight -= 1
         self._inflight -= len(reqs)
@@ -889,8 +889,8 @@ class AsyncServeRuntime:
                     s.prev_spec, weight_epoch=s.spec.weight_epoch + 1)
                 s.install_spec(prev)   # replaces the pool entry itself
                 s.rolled_back = True
-                self.recovery_stats.rollbacks += 1
-                self.recovery_stats.engine_rebuilds += 1
+                self.recovery_stats.bump("rollbacks")
+                self.recovery_stats.bump("engine_rebuilds")
                 return None
             except Exception:  # noqa: BLE001 — fall back to plain rebuild
                 pass
@@ -902,7 +902,7 @@ class AsyncServeRuntime:
                                                    self._backoff_rng))
             try:
                 s.engine               # pool miss → spec.build_engine()
-                self.recovery_stats.engine_rebuilds += 1
+                self.recovery_stats.bump("engine_rebuilds")
                 return None
             except Exception as e:  # noqa: BLE001 — bounded retries
                 err = e

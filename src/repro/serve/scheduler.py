@@ -43,6 +43,7 @@ from __future__ import annotations
 
 import concurrent.futures
 import dataclasses
+import threading
 import time
 from collections import Counter, deque
 from typing import (Callable, Deque, Dict, List, Optional, Tuple)
@@ -147,37 +148,57 @@ class TrafficStats:
     (post width-bucket rounding, so the support is small). Bounded by
     construction — distinct (B, W) pairs are few because the bucketing
     quantizes widths.
+
+    Thread-safe: fleet worker launchers record launches concurrently with
+    the controller reading the histograms for placement/autotune (PR 6
+    assumed one launcher thread). Mutation and snapshotting go through an
+    internal lock; the derived statistics (`mode_occupancy`,
+    `median_width`, `as_dict`) compute from a locked snapshot so a racing
+    `record` can never half-update what they see.
     """
 
     def __init__(self):
+        self._lock = threading.Lock()
         self.launches = 0
         self.occupancy: Counter = Counter()
         self.widths: Counter = Counter()
 
     def record(self, batch_size: int, width_samples: int) -> None:
-        self.launches += 1
-        self.occupancy[int(batch_size)] += 1
-        self.widths[int(width_samples)] += 1
+        with self._lock:
+            self.launches += 1
+            self.occupancy[int(batch_size)] += 1
+            self.widths[int(width_samples)] += 1
+
+    def _snapshot(self) -> Tuple[int, Counter, Counter]:
+        with self._lock:
+            return self.launches, Counter(self.occupancy), \
+                Counter(self.widths)
 
     def mode_occupancy(self) -> int:
         """The most common stacked batch size (0 if no traffic yet)."""
-        if not self.occupancy:
+        _, occupancy, _ = self._snapshot()
+        if not occupancy:
             return 0
-        return max(sorted(self.occupancy), key=self.occupancy.get)
+        return max(sorted(occupancy), key=occupancy.get)
 
     def median_width(self) -> int:
         """Median padded launch width in samples (0 if no traffic yet)."""
-        if not self.widths:
+        _, _, widths = self._snapshot()
+        if not widths:
             return 0
-        flat = sorted(w for w, c in self.widths.items() for _ in range(c))
+        flat = sorted(w for w, c in widths.items() for _ in range(c))
         return flat[len(flat) // 2]
 
     def as_dict(self) -> Dict:
-        return {"launches": self.launches,
-                "occupancy": dict(sorted(self.occupancy.items())),
-                "widths": dict(sorted(self.widths.items())),
-                "mode_occupancy": self.mode_occupancy(),
-                "median_width": self.median_width()}
+        launches, occupancy, widths = self._snapshot()
+        flat = sorted(w for w, c in widths.items() for _ in range(c))
+        return {"launches": launches,
+                "occupancy": dict(sorted(occupancy.items())),
+                "widths": dict(sorted(widths.items())),
+                "mode_occupancy": (max(sorted(occupancy),
+                                       key=occupancy.get)
+                                   if occupancy else 0),
+                "median_width": flat[len(flat) // 2] if flat else 0}
 
 
 class MicroBatcher:
@@ -216,6 +237,12 @@ class MicroBatcher:
         self.fault_plan = None
         self.sentinel_limit: Optional[float] = None
         self.exec_seq = 0
+        # fleet identity (serve/fleet.py): set by FleetRuntime so device
+        # fault kinds (FaultPlan.on_worker) can target THIS worker by
+        # index; None outside a fleet. Because every fleet worker owns
+        # its own batcher, `exec_seq` doubles as the per-worker execute
+        # index the `Fault.after` schedule counts.
+        self.worker_index: Optional[int] = None
 
     # -- queueing ----------------------------------------------------------
 
@@ -296,6 +323,27 @@ class MicroBatcher:
         REVERSE take order so stream order per session is preserved."""
         self._groups.setdefault(batch.key, [])[:0] = batch.reqs
 
+    def adopt_requests(self, reqs: List[Request]) -> None:
+        """Admit EXISTING Request objects into this batcher's queues (the
+        fleet migration path: a dead worker's un-landed requests, plans
+        and futures intact, move to a surviving worker's batcher). The
+        caller must already have re-pointed each `Request.session` at a
+        session rebuilt against THIS worker's pool — the group key is
+        recomputed from that session's engine, so adopted requests stack
+        with the new worker's traffic. Input order is preserved, which is
+        what keeps per-session replay FIFO."""
+        for r in reqs:
+            key = r.session.engine.group_key()
+            self._groups.setdefault(key, []).append(r)
+
+    def evict_all(self) -> List[Request]:
+        """Pop EVERY pending request, preserving per-group enqueue order
+        (fleet worker death: never-assembled requests migrate too)."""
+        out: List[Request] = []
+        for key in list(self._groups):
+            out.extend(self._groups.pop(key))
+        return out
+
     def assemble(self, key: Tuple, reqs: List[Request]) -> LaunchBatch:
         """Host phase 1: pad the requests' plans to one width bucket, stack
         them into the (B, W) launch input, bind the memoized group fn."""
@@ -317,6 +365,8 @@ class MicroBatcher:
         replays consume FRESH indices, so an injected fault fires once)."""
         idx, self.exec_seq = self.exec_seq, self.exec_seq + 1
         if self.fault_plan is not None:
+            if self.worker_index is not None:
+                self.fault_plan.on_worker(self.worker_index, idx)
             self.fault_plan.on_execute(idx)
         t_launch = self.clock()
         y = batch.fn(jnp.asarray(batch.x))

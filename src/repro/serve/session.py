@@ -194,6 +194,45 @@ class Session:
         """Fetch (or rebuild after LRU eviction) this tenant's engine."""
         return self._pool.get(self.spec.tenant_id, self.spec.build_engine)
 
+    def rebuild_on(self, pool: EnginePool) -> "Session":
+        """Fleet migration primitive: reincarnate this mid-stream session
+        against ANOTHER worker's engine pool (`repro.serve.fleet`).
+
+        The replacement builds a fresh engine from the (frozen) spec —
+        deterministic, so it serves bitwise-identically — then reinstalls
+        the complete stream state: the chunker carry via
+        `snapshot()`/`restore()` (deep copies; the dead session is not
+        aliased) plus the output accumulator, recovery/adaptation
+        bookkeeping, and in-flight accounting. No `tile_tuner` is passed:
+        the spec's tile is already frozen (or "auto" resolves through the
+        deterministic autotune cache), and a re-tune mid-stream would
+        change the chunker geometry and void the bitwise contract. A
+        geometry mismatch between old and new engines means the spec does
+        NOT rebuild deterministically — that is corruption, so it raises
+        instead of silently emitting misaligned symbols."""
+        s = Session(self.spec, pool)
+        old_c, new_c = self.chunker, s.chunker
+        if ((new_c.halo, new_c.ts, new_c.tile_m)
+                != (old_c.halo, old_c.ts, old_c.tile_m)):
+            raise RuntimeError(
+                f"tenant {self.spec.tenant_id!r}: rebuilt engine changed "
+                f"chunker geometry "
+                f"{(old_c.halo, old_c.ts, old_c.tile_m)} -> "
+                f"{(new_c.halo, new_c.ts, new_c.tile_m)}; spec is not "
+                f"deterministic, refusing to migrate")
+        new_c.restore(old_c.snapshot())
+        s._out = list(self._out)
+        s.syms_emitted = self.syms_emitted
+        s.failed = self.failed
+        s.inflight = self.inflight
+        s.recoveries = self.recoveries
+        s.shed = self.shed
+        s.rolled_back = self.rolled_back
+        s.tap = self.tap
+        s.prev_spec = self.prev_spec
+        s.swap_log = list(self.swap_log)
+        return s
+
     @property
     def weight_epoch(self) -> int:
         return self.spec.weight_epoch

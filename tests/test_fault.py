@@ -21,6 +21,7 @@ surface.
 All tests carry the `chaos` marker (deselect with -m "not chaos").
 """
 import random
+import time
 
 import jax
 import numpy as np
@@ -30,9 +31,9 @@ from repro.core import equalizer as eq
 from repro.core.engine import EqualizerEngine
 from repro.runtime.straggler import StragglerConfig
 from repro.serve import (AsyncServeRuntime, BatchPolicy, CorruptOutput,
-                         Fault, FaultPlan, InjectedFault, MicroBatcher,
-                         RecoveryPolicy, ServeRuntime, TenantShedError,
-                         TenantSpec, chop)
+                         DeviceLost, Fault, FaultPlan, InjectedFault,
+                         MicroBatcher, RecoveryPolicy, ServeRuntime,
+                         TenantShedError, TenantSpec, chop)
 from repro.serve.recovery import output_ok
 
 pytestmark = pytest.mark.chaos
@@ -87,6 +88,41 @@ def test_fault_plan_validates_and_fires_once():
     assert fp.fired == [("launch_error", 1), ("build_error", 0)]
     assert fp.pending == 0
     assert fp.summary() == {"launch_error": 1, "build_error": 1}
+
+
+def test_fault_plan_device_kinds_validate_and_fire_once():
+    """`device_lost`/`device_slow` schedule per WORKER index: `at` names
+    the worker, `after` the first per-worker execute index eligible to
+    fire — and each fault still fires at most once."""
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        Fault("device_on_fire", 0)
+    with pytest.raises(ValueError, match="`after` only applies"):
+        Fault("launch_error", 0, after=2)
+
+    fp = FaultPlan([Fault("device_lost", at=0, after=2),
+                    Fault("device_slow", at=1, after=0, delay_s=0.01)])
+    assert fp.pending == 2
+    fp.on_worker(0, 0)                             # below `after`: no-op
+    fp.on_worker(0, 1)
+    fp.on_worker(1, 5)                             # wrong worker for lost
+    assert fp.fired == [("device_slow", 1)]        # slow fired above
+    with pytest.raises(DeviceLost, match="worker 0 at execute 2"):
+        fp.on_worker(0, 2)
+    fp.on_worker(0, 3)                             # fires at most ONCE
+    assert fp.fired == [("device_slow", 1), ("device_lost", 0)]
+    assert fp.pending == 0
+    assert fp.summary() == {"device_slow": 1, "device_lost": 1}
+
+
+def test_fault_plan_device_slow_injects_measurable_delay():
+    fp = FaultPlan([Fault("device_slow", at=3, after=1, delay_s=0.05)])
+    t0 = time.perf_counter()
+    fp.on_worker(3, 0)                             # below `after`
+    assert time.perf_counter() - t0 < 0.04
+    t0 = time.perf_counter()
+    fp.on_worker(3, 4)                             # at/after: sleeps once
+    assert time.perf_counter() - t0 >= 0.05
+    assert fp.pending == 0
 
 
 def test_fault_plan_corrupts_scheduled_rows_only():

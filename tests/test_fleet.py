@@ -1,0 +1,260 @@
+"""Fleet serving over a device mesh (repro.serve.fleet) — the ISSUE-7
+acceptance surface.
+
+  * device-set selection: `worker_devices` cycles real devices as
+    interpret-mode stand-ins; `best_mesh` (folded in from runtime/elastic,
+    which now delegates here) validates and shapes the (data, model) mesh;
+  * placement: tenants shard onto the least-loaded healthy worker with
+    group-key affinity as the tie-break;
+  * the chaos acceptance sweep: a `FaultPlan` kills one worker of a
+    2-worker fleet MID-STREAM — every in-flight stream migrates (rebuilt
+    from `TenantSpec` + carry snapshot, retained plans replayed FIFO) and
+    finishes BITWISE-equal to offline with every chunk emitted exactly
+    once, zero sessions poisoned, and the migration visible in the
+    per-worker `RecoveryStats` ledgers (contract #10);
+  * health: `device_slow` injection feeds the launch-latency heartbeat
+    without killing the worker; consecutive terminal launch failures
+    cross `RecoveryPolicy.device_lost_after` and declare the device lost;
+  * budgets: only sessions exhausting `max_session_recoveries` are
+    poisoned; a fleet with no surviving worker poisons and refuses opens.
+
+All tests carry the `chaos` marker (deselect with -m "not chaos").
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import equalizer as eq
+from repro.runtime import best_mesh as runtime_best_mesh
+from repro.serve import (BatchPolicy, Fault, FaultPlan, FleetRuntime,
+                         RecoveryPolicy, TenantSpec, best_mesh, chop,
+                         worker_devices)
+
+pytestmark = pytest.mark.chaos
+
+CFG = eq.CNNEqConfig()
+INT8_FMT = tuple((2, 5, 3, 4) for _ in range(CFG.layers))
+
+
+def _weights(seed, cfg=CFG):
+    params = eq.init(jax.random.PRNGKey(seed), cfg)
+    folded = eq.fold_bn(params, eq.init_bn_state(cfg), cfg)
+    return eq.folded_weights(folded)
+
+
+def _spec(tid, backend, seed, tile_m=32, priority=0):
+    return TenantSpec(
+        tid, CFG, weights=_weights(seed),
+        formats=INT8_FMT if backend == "fused_int8" else None,
+        backend=backend, tile_m=tile_m, priority=priority)
+
+
+def _offline(spec, wave):
+    import jax.numpy as jnp
+    return np.asarray(spec.build_engine()(jnp.asarray(wave[None])))[0]
+
+
+def _wave(seed, n_syms):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(n_syms * CFG.n_os).astype(np.float32)
+
+
+def _policy():
+    return BatchPolicy(max_batch=3, max_wait_s=1e9)
+
+
+# ---------------------------------------------------------------------------
+# device-set / mesh units (satellite: elastic.best_mesh folded into fleet)
+# ---------------------------------------------------------------------------
+
+def test_worker_devices_cycles_and_validates():
+    devs = jax.devices()
+    picked = worker_devices(3)
+    assert len(picked) == 3
+    assert picked == [devs[i % len(devs)] for i in range(3)]
+    assert worker_devices(devices=devs) == devs
+    with pytest.raises(ValueError, match="n_workers"):
+        worker_devices(0)
+    with pytest.raises(RuntimeError, match="no jax devices"):
+        worker_devices(2, devices=[])
+
+
+def test_best_mesh_shapes_and_runtime_reexport():
+    d = jax.devices()[0]
+    mesh = best_mesh(n_devices=4, model_parallel=4, devices=[d] * 4)
+    assert mesh.devices.shape == (1, 4)
+    assert mesh.axis_names == ("data", "model")
+    # model_parallel that doesn't divide halves until it does
+    mesh = best_mesh(n_devices=6, model_parallel=4, devices=[d] * 6)
+    assert mesh.devices.shape == (3, 2)
+    # the historical repro.runtime import path delegates here
+    via_runtime = runtime_best_mesh(n_devices=2, model_parallel=2,
+                                    devices=[d] * 2)
+    assert via_runtime.devices.shape == (1, 2)
+    with pytest.raises(ValueError, match="n_devices"):
+        best_mesh(n_devices=9, devices=[d] * 4)
+    with pytest.raises(RuntimeError, match="no jax devices"):
+        best_mesh(devices=[])
+
+
+# ---------------------------------------------------------------------------
+# the ISSUE-7 acceptance sweep: kill a worker mid-stream, stay bitwise
+# ---------------------------------------------------------------------------
+
+def test_fleet_chaos_device_loss_migrates_bitwise_zero_loss():
+    """Multi-tenant fp32+int8 sweep on a 2-worker fleet; the FaultPlan
+    kills worker 0 after its 2nd launch. Every in-flight stream must
+    complete bitwise-equal to offline (chunks exactly once, FIFO), zero
+    sessions poisoned, and stats() must show the migration in the
+    per-worker RecoveryStats ledgers."""
+    fp = FaultPlan([Fault("device_lost", at=0, after=2)])
+    specs = [_spec(f"t{i}", ("fused_fp32", "fused_int8")[i % 2],
+                   seed=200 + i, priority=i) for i in range(4)]
+    # streams must exceed one kernel tile — below that the offline
+    # reference legally shrinks its tile and the contract is ~1 ULP
+    waves = {s.tenant_id: _wave(300 + i, 280 + 16 * i)
+             for i, s in enumerate(specs)}
+    with FleetRuntime(n_workers=2, policy=_policy(), launch_retries=1,
+                      fault_plan=fp) as rt:
+        for s in specs:
+            rt.open(s)
+        # least-loaded + group-affinity placement shards the two
+        # group keys across the two workers
+        assert rt.stats()["placement"] == {"t0": 0, "t1": 1,
+                                           "t2": 0, "t3": 1}
+        streams = {t: iter(chop(w, 120 * CFG.n_os, seed=i, jitter=0.5))
+                   for i, (t, w) in enumerate(sorted(waves.items()))}
+        live = set(streams)
+        while live:
+            for t in sorted(live):
+                c = next(streams[t], None)
+                if c is None:
+                    live.discard(t)
+                    rt.finish(t)
+                else:
+                    rt.submit(t, c)
+        rt.drain()
+        outputs = {s.tenant_id: rt.output(s.tenant_id) for s in specs}
+        st = rt.stats()
+
+    for s in specs:
+        want = _offline(s, waves[s.tenant_id])
+        got = outputs[s.tenant_id]
+        assert got.shape == want.shape             # exactly-once emission
+        np.testing.assert_array_equal(got, want)   # bitwise == offline
+    assert fp.fired == [("device_lost", 0)]
+    assert st["migrations"] == 1
+    agg = st["recovery"]
+    assert agg["sessions_poisoned"] == 0
+    assert agg["device_losses"] == 1
+    w0, w1 = st["workers"]
+    assert not w0["alive"] and "DeviceLost" in w0["reason"]
+    assert w0["recovery"]["sessions_migrated_out"] == 2
+    assert w1["alive"]
+    assert w1["recovery"]["sessions_migrated_in"] == 2
+    assert w1["recovery"]["engine_rebuilds"] >= 2
+    # worker 0's tenants re-homed onto worker 1
+    assert st["placement"] == {"t0": 1, "t1": 1, "t2": 1, "t3": 1}
+
+
+def test_fleet_device_slow_fires_without_killing_worker():
+    """`device_slow` injects latency into one launch of worker 0 — the
+    latency feeds the health monitor but the worker survives and the
+    stream stays bitwise."""
+    fp = FaultPlan([Fault("device_slow", at=0, after=1, delay_s=0.05)])
+    spec = _spec("slowpoke", "fused_fp32", seed=11)
+    wave = _wave(13, 300)
+    with FleetRuntime(n_workers=2, policy=_policy(), fault_plan=fp) as rt:
+        rt.open(spec)
+        for c in chop(wave, 100 * CFG.n_os, seed=1):
+            rt.submit("slowpoke", c)
+        got = rt.close("slowpoke")
+        st = rt.stats()
+    np.testing.assert_array_equal(got, _offline(spec, wave))
+    assert fp.fired == [("device_slow", 0)]
+    assert st["workers"][0]["alive"]
+    assert st["recovery"]["device_losses"] == 0
+    assert st["recovery"]["sessions_poisoned"] == 0
+
+
+def test_fleet_consecutive_failures_declare_device_lost():
+    """No injected DeviceLost — a plain launch fault turns TERMINAL
+    (launch_retries=0) and crosses device_lost_after=1, so the fleet
+    itself declares the device gone and migrates; the stream still
+    finishes bitwise."""
+    fp = FaultPlan([Fault("launch_error", 0)])
+    pol = RecoveryPolicy(device_lost_after=1, backoff_base_s=1e-4,
+                         backoff_max_s=1e-3)
+    spec = _spec("flaky", "fused_fp32", seed=23)
+    wave = _wave(29, 300)
+    with FleetRuntime(n_workers=2, policy=_policy(), launch_retries=0,
+                      recovery=pol, fault_plan=fp) as rt:
+        rt.open(spec)
+        for c in chop(wave, 100 * CFG.n_os, seed=2):
+            rt.submit("flaky", c)
+        got = rt.close("flaky")
+        st = rt.stats()
+    np.testing.assert_array_equal(got, _offline(spec, wave))
+    w0 = st["workers"][0]
+    assert not w0["alive"] and "consecutive terminal" in w0["reason"]
+    assert st["migrations"] == 1
+    assert st["recovery"]["sessions_poisoned"] == 0
+    assert st["recovery"]["sessions_migrated_in"] == 1
+
+
+def test_fleet_budget_exhaustion_poisons_only_the_over_budget_stream():
+    """max_session_recoveries=0: the tenant on the dying worker has no
+    migration budget and is poisoned; the tenant on the surviving worker
+    is untouched."""
+    fp = FaultPlan([Fault("device_lost", at=0, after=0)])
+    pol = RecoveryPolicy(max_session_recoveries=0, backoff_base_s=1e-4,
+                         backoff_max_s=1e-3)
+    doomed = _spec("doomed", "fused_fp32", seed=31)
+    lucky = _spec("lucky", "fused_fp32", seed=37)
+    wave_d, wave_l = _wave(41, 300), _wave(43, 300)
+    with FleetRuntime(n_workers=2, policy=_policy(), launch_retries=0,
+                      recovery=pol, fault_plan=fp) as rt:
+        rt.open(doomed)                            # → worker 0
+        rt.open(lucky)                             # → worker 1
+        assert rt.stats()["placement"] == {"doomed": 0, "lucky": 1}
+        fut = rt.submit("doomed", wave_d)
+        rt.submit("lucky", wave_l)
+        rt.finish("doomed")
+        rt.finish("lucky")
+        rt.drain()
+        with pytest.raises(Exception):
+            fut.result(timeout=30)
+        with pytest.raises(RuntimeError, match="lost a chunk"):
+            rt.output("doomed")
+        got = rt.output("lucky")
+        st = rt.stats()
+    np.testing.assert_array_equal(got, _offline(lucky, wave_l))
+    assert st["workers"][0]["recovery"]["sessions_poisoned"] == 1
+    assert st["recovery"]["sessions_migrated_in"] == 0
+
+
+def test_fleet_no_survivors_poisons_and_rejects_opens():
+    """A 1-worker fleet losing its only device has nowhere to migrate:
+    the stream is poisoned, and admitting a new tenant raises."""
+    fp = FaultPlan([Fault("device_lost", at=0, after=0)])
+    with FleetRuntime(n_workers=1, policy=_policy(), launch_retries=0,
+                      fault_plan=fp) as rt:
+        rt.open(_spec("stranded", "fused_fp32", seed=47))
+        rt.submit("stranded", _wave(53, 300))
+        rt.finish("stranded")
+        rt.drain()
+        with pytest.raises(RuntimeError, match="lost a chunk"):
+            rt.output("stranded")
+        with pytest.raises(RuntimeError, match="no healthy workers"):
+            rt.open(_spec("latecomer", "fused_fp32", seed=59))
+        st = rt.stats()
+    assert st["recovery"]["sessions_poisoned"] == 1
+    assert st["recovery"]["device_losses"] == 1
+
+
+def test_fleet_shutdown_is_idempotent_and_rejects_after():
+    rt = FleetRuntime(n_workers=2, policy=_policy())
+    rt.shutdown()
+    rt.shutdown()
+    with pytest.raises(RuntimeError, match="shut down"):
+        rt.open(_spec("late", "fused_fp32", seed=61))

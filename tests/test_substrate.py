@@ -235,3 +235,55 @@ def test_roofline_terms_and_bottleneck():
     assert r.t_collective == pytest.approx(1e9 / rl.ICI_BW)
     assert r.bottleneck == "compute"
     assert r.mfu == pytest.approx(0.5)
+
+
+def test_straggler_warmup_never_flags_and_is_excluded_from_quantiles():
+    """Warmup steps carry compile/first-touch time: they must neither
+    flag (even when enormous) nor skew the summary quantiles."""
+    mon = StragglerMonitor(StragglerConfig(warmup_steps=4, patience=1,
+                                           sigma_factor=1.0))
+    flagged = [mon.observe(s, 50.0) for s in range(4)]   # huge warmups
+    assert not any(flagged) and not mon.flags and not mon.degraded
+    for s in range(4, 14):
+        mon.observe(s, 0.01)
+    sm = mon.summary()
+    assert sm["steps"] == 14 and sm["flagged"] == 0
+    assert sm["p50_s"] <= 0.011 and sm["p99_s"] <= 0.011  # no 50s leak
+
+
+def test_straggler_latch_edges_fire_callbacks_exactly_once():
+    """patience=2 edge walk: the first flag does nothing, the second
+    latches (on_straggler fires ONCE), further flags while degraded stay
+    silent, and exactly `patience` consecutive clean steps un-latch
+    (on_recovered fires once)."""
+    events = []
+    mon = StragglerMonitor(
+        StragglerConfig(warmup_steps=2, patience=2, sigma_factor=3.0),
+        on_straggler=lambda step, dt: events.append(("slow", step)),
+        on_recovered=lambda step: events.append(("ok", step)))
+    for s in range(8):                       # warmup + steady baseline
+        mon.observe(s, 0.01)
+    assert mon.observe(8, 1.0) and not mon.degraded      # flag 1 of 2
+    assert events == []
+    assert mon.observe(9, 1.0) and mon.degraded          # latch
+    assert events == [("slow", 9)]
+    assert mon.observe(10, 1.0) and mon.degraded         # no refire
+    assert events == [("slow", 9)]
+    mon.observe(11, 0.01)                    # clean 1 of 2: still latched
+    assert mon.degraded
+    mon.observe(12, 0.01)                    # clean 2: un-latch
+    assert not mon.degraded
+    assert events == [("slow", 9), ("ok", 12)]
+    assert mon.recommend_accum(8) == 8       # mitigation lifted
+
+
+def test_straggler_non_consecutive_flags_never_latch():
+    mon = StragglerMonitor(StragglerConfig(warmup_steps=2, patience=2,
+                                           sigma_factor=3.0))
+    for s in range(6):
+        mon.observe(s, 0.01)
+    for i in range(5):                       # flag/clean alternation
+        assert mon.observe(6 + 2 * i, 1.0)
+        assert not mon.degraded
+        assert not mon.observe(7 + 2 * i, 0.01)
+    assert not mon.degraded and len(mon.flags) == 5
