@@ -1,0 +1,213 @@
+"""Observability overhead — the tracing-tax benchmark and its hard gate.
+
+Serves an identical multi-tenant workload on the sync `ServeRuntime`
+twice per repetition — tracing OFF, then tracing ON (full chunk-lifecycle
+spans + metrics) — interleaved A/B so host-speed drift hits both arms
+equally, and records in `BENCH_obs.json` at the repo root:
+
+  * throughput — per-arm aggregate symbol rates (host-speed dependent,
+    trend-watching only; `--check` does NOT gate on absolute rates).
+  * criteria.overhead_ok — the HARD host-independent gate, three parts:
+      - overhead: the ON/OFF median-throughput ratio must stay above
+        `OVERHEAD_FLOOR` (observation must be nearly free — a tracing
+        pass that halves throughput is a bug, not a tax);
+      - bitwise: the tracing-ON streams must equal offline equalization
+        bit-for-bit (observation must never change numerics);
+      - trace_complete: every emitted chunk carries exactly one complete
+        sealed span whose `n_emit` positions account for the whole
+        stream (no orphan or duplicate spans).
+  * export — time to take a registry snapshot and render the Prometheus
+    and Chrome-trace exports at the end of the loaded run
+    (informational).
+
+The ratio gate is deliberately loose (0.5): interpret-mode hosts jitter
+±30% per arm, and the signal that matters — tracing accidentally adding
+device-path work — shows up as a 2× cliff, not a 10% drift.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import statistics
+import time
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.core import equalizer as eq
+from repro.obs import Observability
+from repro.serve import BatchPolicy, ServeRuntime, TenantSpec, chop
+
+from .common import Bench
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+OUT_PATH = REPO_ROOT / "BENCH_obs.json"
+
+CFG = eq.CNNEqConfig()
+TILE_M = 32
+INT8_FMT = tuple((2, 5, 3, 4) for _ in range(CFG.layers))
+N_TENANTS = 4
+N_SYMS = 480
+CHUNK_SYMS = 120
+REPS = 3
+OVERHEAD_FLOOR = 0.5
+
+
+def _weights(seed: int):
+    params = eq.init(jax.random.PRNGKey(seed), CFG)
+    folded = eq.fold_bn(params, eq.init_bn_state(CFG), CFG)
+    return eq.folded_weights(folded)
+
+
+def _spec(i: int) -> TenantSpec:
+    backend = ("fused_fp32", "fused_int8")[i % 2]
+    return TenantSpec(
+        f"t{i}", CFG, weights=_weights(400 + i),
+        formats=INT8_FMT if backend == "fused_int8" else None,
+        backend=backend, tile_m=TILE_M, priority=i)
+
+
+def _offline(spec: TenantSpec, wave: np.ndarray) -> np.ndarray:
+    import jax.numpy as jnp
+    return np.asarray(spec.build_engine()(jnp.asarray(wave[None])))[0]
+
+
+def _wave(seed: int, n_syms: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(n_syms * CFG.n_os).astype(np.float32)
+
+
+def _pass(specs, waves, tracing: bool):
+    """One full serve of every stream; returns (outputs, obs, seconds)."""
+    obs = Observability(tracing=tracing)
+    t0 = time.perf_counter()
+    rt = ServeRuntime(BatchPolicy(max_batch=N_TENANTS, max_wait_s=1e9),
+                      obs=obs)
+    for s in specs:
+        rt.open(s)
+    streams = {t: iter(chop(w, CHUNK_SYMS * CFG.n_os, seed=i, jitter=0.5))
+               for i, (t, w) in enumerate(sorted(waves.items()))}
+    live = set(streams)
+    while live:
+        for t in sorted(live):
+            c = next(streams[t], None)
+            if c is None:
+                live.discard(t)
+                rt.finish(t)
+            else:
+                rt.submit(t, c)
+    rt.drain()
+    outputs = {s.tenant_id: rt.output(s.tenant_id) for s in specs}
+    return outputs, obs, time.perf_counter() - t0
+
+
+def _trace_complete(obs: Observability, outputs) -> bool:
+    """Exactly-once span accounting: unique gapless (tenant, seq), every
+    span complete, n_emit positions summing to each stream's length."""
+    spans = obs.tracer.sealed_spans()
+    keys = [(s.tenant, s.seq) for s in spans]
+    if len(keys) != len(set(keys)):
+        return False
+    if obs.tracer.spans_started != obs.tracer.spans_sealed:
+        return False
+    by = {}
+    for s in spans:
+        by.setdefault(s.tenant, []).append(s)
+    if set(by) != set(outputs):
+        return False
+    for t, sp in by.items():
+        if sorted(s.seq for s in sp) != list(range(len(sp))):
+            return False
+        if not all(s.complete() and s.status == "ok" for s in sp):
+            return False
+        if sum(s.n_emit for s in sp) * CFG.v_parallel != outputs[t].shape[0]:
+            return False
+    return True
+
+
+def run(out_path: Optional[pathlib.Path] = OUT_PATH) -> dict:
+    bench = Bench("obs_overhead", "observability: tracing tax + integrity")
+    specs = [_spec(i) for i in range(N_TENANTS)]
+    waves = {s.tenant_id: _wave(500 + i, N_SYMS + 16 * i)
+             for i, s in enumerate(specs)}
+    offline = {s.tenant_id: _offline(s, waves[s.tenant_id]) for s in specs}
+    total_syms = sum(o.shape[0] for o in offline.values())
+
+    _pass(specs, waves, tracing=False)           # warm-up: compiles
+    off_rates, on_rates = [], []
+    outputs_on, obs_on = None, None
+    for _ in range(REPS):                        # interleaved A/B arms
+        _, _, dt_off = _pass(specs, waves, tracing=False)
+        off_rates.append(total_syms / dt_off)
+        outputs_on, obs_on, dt_on = _pass(specs, waves, tracing=True)
+        on_rates.append(total_syms / dt_on)
+
+    bitwise = all(bool(np.array_equal(outputs_on[t], offline[t]))
+                  for t in offline)
+    trace_complete = _trace_complete(obs_on, outputs_on)
+    overhead_x = statistics.median(on_rates) / statistics.median(off_rates)
+    criteria = {
+        "overhead_x": overhead_x,
+        "overhead_floor": OVERHEAD_FLOOR,
+        "bitwise": bool(bitwise),
+        "trace_complete": bool(trace_complete),
+        "overhead_ok": bool(overhead_x >= OVERHEAD_FLOOR and bitwise
+                            and trace_complete),
+    }
+
+    t0 = time.perf_counter()
+    snap = obs_on.snapshot()
+    snapshot_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    prom_lines = obs_on.to_prometheus().count("\n")
+    prometheus_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    trace_events = len(obs_on.chrome_trace()["traceEvents"])
+    chrome_s = time.perf_counter() - t0
+
+    print(f"[bench_obs] throughput off "
+          f"{statistics.median(off_rates):,.0f} sym/s vs on "
+          f"{statistics.median(on_rates):,.0f} sym/s "
+          f"({overhead_x:.2f}x, floor {OVERHEAD_FLOOR})")
+    print(f"[bench_obs] spans sealed {obs_on.tracer.spans_sealed}, "
+          f"bitwise={bitwise} trace_complete={trace_complete}")
+    print(f"[bench_obs] exports: snapshot {snapshot_s * 1e3:.1f}ms, "
+          f"prometheus {prom_lines} lines {prometheus_s * 1e3:.1f}ms, "
+          f"chrome {trace_events} events {chrome_s * 1e3:.1f}ms")
+    print(f"[bench_obs] overhead_ok={criteria['overhead_ok']}")
+
+    report = {
+        "backend_default": jax.default_backend(),
+        "scenario": {
+            "n_tenants": N_TENANTS,
+            "backends": ["fused_fp32", "fused_int8"],
+            "tile_m": TILE_M,
+            "chunk_syms": CHUNK_SYMS,
+            "stream_syms": {t: int(o.shape[0])
+                            for t, o in sorted(offline.items())},
+            "reps": REPS,
+        },
+        "throughput": {
+            "syms_per_s_off": off_rates,
+            "syms_per_s_on": on_rates,
+            "median_off": statistics.median(off_rates),
+            "median_on": statistics.median(on_rates),
+            "note": ("host-speed dependent; --check gates only on the "
+                     "ON/OFF ratio in criteria.overhead_ok"),
+        },
+        "trace": snap["trace"],
+        "export": {"snapshot_s": snapshot_s, "prometheus_s": prometheus_s,
+                   "prometheus_lines": prom_lines, "chrome_s": chrome_s,
+                   "chrome_events": trace_events},
+        "criteria": criteria,
+    }
+    if out_path is not None:
+        out_path.write_text(json.dumps(report, indent=2))
+        print(f"[bench_obs] wrote {out_path}")
+    bench.record("report", report)
+    return bench.finish()
+
+
+if __name__ == "__main__":
+    run()

@@ -14,6 +14,8 @@ One benchmark per paper table/figure (see DESIGN.md §6):
     bench_fault     robustness: chaos-gated failover → BENCH_fault.json
     bench_fleet     robustness: device-loss migration on a 2-worker fleet
                              → BENCH_fleet.json
+    bench_obs       observability: tracing tax + span integrity
+                             → BENCH_obs.json
     bench_timing    Fig. 12  timing model vs simulated measurement
     bench_platform  Fig. 13-15  CPU measured / TPU roofline-projected
     bench_roofline  Table 1 / §Roofline  aggregate the dry-run artifacts
@@ -30,19 +32,23 @@ the repo root — after normalizing out the
 uniform host-speed drift per gate group (geomean over shared keys), so
 only RELATIVE per-path regressions fire the gate (default tol: 10% on
 accelerators, 35% on interpret-mode CPU hosts — see `_default_tol`). The
-adapt, fault and fleet gates additionally enforce HARD, host-independent
-criteria: the drift-recovery claim (`criteria.recovery_ok` in
-`BENCH_adapt.json`), the chaos-recovery claim (`criteria.recovery_ok`
-in `BENCH_fault.json` — bitwise zero-loss failover under injected faults)
-and the device-loss-migration claim (`criteria.fleet_recovery_ok` in
-`BENCH_fleet.json` — a worker killed mid-stream, every stream migrated
-bitwise with zero loss and zero poisoning) are deterministic under their
-fixed seeds, so their failure is never noise. The fault and fleet gates
-carry no throughput rates at all — they are purely the hard criteria.
+adapt, fault, fleet and obs gates additionally enforce HARD,
+host-independent criteria: the drift-recovery claim
+(`criteria.recovery_ok` in `BENCH_adapt.json`), the chaos-recovery claim
+(`criteria.recovery_ok` in `BENCH_fault.json` — bitwise zero-loss
+failover under injected faults), the device-loss-migration claim
+(`criteria.fleet_recovery_ok` in `BENCH_fleet.json` — a worker killed
+mid-stream, every stream migrated bitwise with zero loss and zero
+poisoning), and the observability claim (`criteria.overhead_ok` in
+`BENCH_obs.json` — tracing ON keeps the ON/OFF throughput ratio above
+its floor, stays bitwise, and seals exactly one complete span per
+emitted chunk) are deterministic under their fixed seeds, so their
+failure is never noise. The fault, fleet and obs gates carry no
+throughput rates at all — they are purely the hard criteria.
 Compare like with like: the committed baseline must come from the same
 host class AND be recorded in the gate's in-process order
-(`--only engine serve adapt fault fleet`); CPU hosts run the kernels in
-interpret mode.
+(`--only engine serve adapt fault fleet obs`); CPU hosts run the kernels
+in interpret mode.
 """
 from __future__ import annotations
 
@@ -55,9 +61,9 @@ import time
 import traceback
 
 from . import (bench_adapt, bench_dop, bench_dse, bench_engine,
-               bench_fault, bench_fleet, bench_platform, bench_proakis,
-               bench_quant, bench_roofline, bench_serve, bench_stream,
-               bench_timing)
+               bench_fault, bench_fleet, bench_obs, bench_platform,
+               bench_proakis, bench_quant, bench_roofline, bench_serve,
+               bench_stream, bench_timing)
 from .common import REPORT_DIR
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
@@ -142,6 +148,28 @@ def _fleet_criteria(rep: dict):
             f"device_faults_fired={crit.get('device_faults_fired')})"]
 
 
+def _obs_rates(rep: dict) -> dict:
+    """The obs gate tracks NO absolute rates — the tracing tax is the
+    ON/OFF ratio inside the hard criterion below."""
+    return {}
+
+
+def _obs_criteria(rep: dict):
+    """Hard (host-independent) gate on the fresh obs report: tracing must
+    stay nearly free (ON/OFF throughput ratio above the floor), must not
+    change a single output bit, and every emitted chunk must carry exactly
+    one complete span. The ratio self-normalizes host speed; the bitwise
+    and span checks are deterministic under the fixed seeds."""
+    crit = rep.get("criteria", {})
+    if crit.get("overhead_ok", False):
+        return []
+    return [f"obs: observability criterion failed "
+            f"(overhead {crit.get('overhead_x', 0.0):.2f}x must be >= "
+            f"{crit.get('overhead_floor', 0.5)}, "
+            f"bitwise={crit.get('bitwise')} "
+            f"trace_complete={crit.get('trace_complete')})"]
+
+
 def _default_tol() -> float:
     """Host-class-aware gate width. Real accelerators get the tight 10%
     gate; interpret-mode CPU hosts run the kernels ~50× slower with
@@ -204,7 +232,10 @@ def check(tol: float | None = None) -> int:
          _fault_criteria),
         ("fleet", REPO_ROOT / "BENCH_fleet.json",
          lambda: bench_fleet.run(out_path=None), _fleet_rates,
-         _fleet_criteria))
+         _fleet_criteria),
+        ("obs", REPO_ROOT / "BENCH_obs.json",
+         lambda: bench_obs.run(out_path=None), _obs_rates,
+         _obs_criteria))
     # validate the configuration before burning minutes of re-measurement
     missing = [p.name for _, p, _, _, _ in gates if not p.exists()]
     if missing:
@@ -305,6 +336,7 @@ def main(argv=None) -> int:
         ("adapt", lambda: bench_adapt.run()),
         ("fault", lambda: bench_fault.run()),
         ("fleet", lambda: bench_fleet.run()),
+        ("obs", lambda: bench_obs.run()),
         ("stream", lambda: bench_stream.run()),
         ("dop", lambda: bench_dop.run()),
         ("roofline", lambda: bench_roofline.run()),

@@ -34,6 +34,7 @@ makes hot-swaps safe under concurrent traffic; pair it with the sync
 from __future__ import annotations
 
 import dataclasses
+import re
 import threading
 from collections import deque
 from typing import Deque, Dict, List, Optional
@@ -107,15 +108,32 @@ class OnlineAdapter:
         self._key = jax.random.PRNGKey(seed)
         self._states: Dict[str, _TenantState] = {}
         self.history: List[AdaptReport] = []
+        # observability rides the RUNTIME's hub (one snapshot tree per
+        # deployment) — older runtimes without one fall back to no-op
+        self.obs = getattr(runtime, "obs", None)
+        errors_max = (self.obs.retention.errors if self.obs is not None
+                      else self.ERRORS_MAX)
         # background-loop failures land here (mirrors
         # AsyncServeRuntime.errors) — a persistently failing adapter must
         # be distinguishable from a healthy idle one. The deque keeps the
         # RECENT failures; `errors_total` keeps the RATE observable after
         # the window wraps (errors_total - len(errors) = dropped).
-        self.errors: Deque[BaseException] = deque(maxlen=self.ERRORS_MAX)
+        self.errors: Deque[BaseException] = deque(maxlen=errors_max)
         self.errors_total = 0
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
+        self._m_actions: Dict[str, object] = {}
+        if self.obs is not None:
+            scope = self.obs.scope("adapt")
+            for action in ("idle", "rejected", "promoted", "rolled_back",
+                           "swap_refused"):
+                self._m_actions[action] = scope.counter(f"actions.{action}")
+            scope.callback("errors", lambda: {
+                "total": self.errors_total,
+                "window": len(self.errors),
+                "dropped": self.errors_total - len(self.errors)})
+            scope.callback("cycles", lambda: len(self.history))
+            scope.callback("tenants", lambda: len(self._states))
 
     # -- tenant lifecycle --------------------------------------------------
 
@@ -161,8 +179,36 @@ class OnlineAdapter:
         for tid in ids:
             rep = self._step_one(tid)
             self.history.append(rep)
+            self._record(rep)
             out.append(rep)
         return out
+
+    def _record(self, rep: AdaptReport) -> None:
+        """Publish one cycle's outcome into the runtime's obs hub: action
+        counters, per-tenant shadow-BER gauges, and trace instants for the
+        actions that change the live stream (promote / rollback)."""
+        if self.obs is None:
+            return
+        m = self._m_actions.get(rep.action)
+        if m is not None:
+            m.inc()
+        # tenant ids are user-chosen; keep only metric-name-safe chars
+        tid = re.sub(r"[^A-Za-z0-9_\-]", "_", rep.tenant_id) or "_"
+        scope = self.obs.scope("adapt")
+        scope.gauge(f"{tid}.weight_epoch").set(rep.weight_epoch)
+        if rep.shadow is not None:
+            sh = rep.shadow
+            if not np.isnan(sh.ber_active):
+                scope.gauge(f"{tid}.shadow.ber_active").set(sh.ber_active)
+            if not np.isnan(sh.ber_candidate):
+                scope.gauge(f"{tid}.shadow.ber_candidate").set(
+                    sh.ber_candidate)
+            scope.gauge(f"{tid}.shadow.eval_syms").set(sh.eval_syms)
+        if rep.action in ("promoted", "rolled_back"):
+            self.obs.tracer.instant(
+                f"adapt_{rep.action}", tenant=rep.tenant_id,
+                epoch=rep.weight_epoch,
+                reason=rep.shadow.reason if rep.shadow else "")
 
     def _step_one(self, tid: str) -> AdaptReport:
         st = self._states[tid]

@@ -1,0 +1,37 @@
+"""repro.obs — unified observability for the serving/fleet/adaptation stack.
+
+One instrumentation spine across every layer built in PRs 1-7:
+
+  * `metrics`  — Counter/Gauge/Histogram with bounded reservoirs behind a
+    `MetricsRegistry` of hierarchical dotted names (`serve.launch.latency_s`,
+    `fleet.worker0.recovery.replays`, `adapt.shadow.ber`), exported as one
+    nested `snapshot()` tree, JSON, or Prometheus text.
+  * `trace`    — per-chunk lifecycle spans (submit -> assemble -> launch ->
+    execute -> descatter -> emit) with retries/replays/migrations recorded
+    as child events, buffered in a bounded ring, exportable as Chrome
+    `trace_event` JSON (Perfetto-viewable).
+  * `hub`      — the `Observability` facade (registry + tracer + `Retention`
+    policy) that runtimes accept via their `obs=` parameter.
+  * `report`   — `python -m repro.obs.report` console summary from a live
+    runtime snapshot or an exported JSON file.
+
+Observation never changes launch order or numerics: spans piggyback on the
+existing `ChunkPlan` objects, all hot-path hooks are no-ops when tracing is
+off, and the chaos parity tests run bitwise-equal with tracing on.
+"""
+from .hub import Observability, Retention
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry, Scope
+from .trace import PHASES, ChunkSpan, Tracer
+
+__all__ = [
+    "Observability",
+    "Retention",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "Scope",
+    "PHASES",
+    "ChunkSpan",
+    "Tracer",
+]

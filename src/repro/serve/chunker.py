@@ -74,10 +74,15 @@ class ChunkPlan:
     data:    (W,) fp32 engine input — carry + new samples (+ flush padding).
     skip:    leading output positions to DROP (alignment/context recompute).
     n_emit:  output positions to emit after `skip` (V_p symbols each).
+    span:    optional `repro.obs.ChunkSpan` lifecycle trace attached at
+             enqueue when tracing is on (None otherwise). It rides the plan
+             through retries, failover replays, and fleet migrations so the
+             chunk's full recovery path lands in one span.
     """
     data: np.ndarray
     skip: int
     n_emit: int
+    span: Optional[object] = None
 
     @property
     def width(self) -> int:

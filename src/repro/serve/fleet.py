@@ -81,6 +81,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh
 
+from ..obs import Observability
 from ..runtime.straggler import StragglerConfig, StragglerMonitor
 from .pool import EnginePool
 from .recovery import (CorruptOutput, DeviceLost, FaultPlan, LaunchTimeout,
@@ -162,13 +163,32 @@ class FleetWorker:
         self._fleet = fleet
         self.pool = EnginePool(fleet.max_engines)
         self.pool.fault_plan = fleet.fault_plan
-        self.batcher = MicroBatcher(fleet.policy, clock=fleet.clock)
+        self.pool.clock = fleet.clock
+        # per-worker metrics scope: instruments land under
+        # fleet.worker<idx>.* in the shared registry (one hub fleet-wide,
+        # so chunk spans survive migration between workers)
+        self.batcher = MicroBatcher(fleet.policy, clock=fleet.clock,
+                                    obs=fleet.obs,
+                                    obs_scope=f"fleet.worker{idx}")
         self.batcher.fault_plan = fleet.fault_plan
         self.batcher.sentinel_limit = fleet.recovery.sentinel_limit
         self.batcher.worker_index = idx
         self.stats = RecoveryStats()           # per-worker failover ledger
         self.monitor = StragglerMonitor(fleet.straggler
                                         or StragglerConfig())
+        scope = fleet.obs.scope(f"fleet.worker{idx}")
+        h_build = scope.histogram("pool.build_s")
+
+        def _on_build(key, dt: float) -> None:
+            h_build.observe(dt)
+            fleet.obs.tracer.instant("engine_build", worker=idx,
+                                     tenant=str(key), build_s=dt)
+
+        self.pool.build_hook = _on_build
+        scope.callback("pool", self.pool.stats)
+        scope.callback("alive", lambda: self.device_lost is None)
+        scope.callback("recovery", self.stats.as_dict)
+        scope.callback("health", self.monitor.summary)
         self.tenants: set = set()
         self.groups: Counter = Counter()       # placement-key → residents
         self.q: "queue.Queue" = queue.Queue()  # unbounded (see module doc)
@@ -257,26 +277,37 @@ class FleetWorker:
         attempt's latency feeds this worker's health monitor. Returns
         (y, None) on success, (None, last error) when exhausted —
         `DeviceLost` short-circuits (retrying a dead device is pointless
-        and would delay migration)."""
+        and would delay migration). Latencies come from the fleet's
+        injectable `clock` (NOT wall time), so fleet latency tests can
+        freeze or script the timeline; failed attempts append a "retry"
+        child event to each affected chunk's span."""
         fleet = self._fleet
+        clk = fleet.clock
         err: Optional[BaseException] = None
         for attempt in range(fleet.launch_retries + 1):
             if attempt:
                 time.sleep(fleet.recovery.backoff_s(attempt - 1, self._rng))
-            t0 = time.perf_counter()
+            t0 = clk()
             try:
                 y = self._execute_deadline(batch)
             except DeviceLost as e:
-                self._observe(time.perf_counter() - t0)
+                self._observe(clk() - t0)
                 return None, e
             except Exception as e:  # noqa: BLE001 — retried/reported
                 err = e
                 dt = (fleet.launch_deadline_s
                       if isinstance(e, LaunchTimeout)
-                      else time.perf_counter() - t0)
+                      else clk() - t0)
                 self._observe(dt)
+                if self.batcher.tracer.enabled:
+                    t = clk()
+                    for r in batch.reqs:
+                        if r.plan.span is not None:
+                            r.plan.span.event("retry", t, worker=self.idx,
+                                              attempt=attempt,
+                                              error=repr(e))
                 continue
-            self._observe(time.perf_counter() - t0)
+            self._observe(clk() - t0)
             return y, None
         return None, err
 
@@ -359,6 +390,12 @@ class FleetWorker:
                 fleet._poison_locked(self, dead, build_err or err)
             if not good:
                 return None
+            if self.batcher.tracer.enabled:
+                t = fleet.clock()
+                for r in good:
+                    if r.plan.span is not None:
+                        r.plan.span.event("replay", t, worker=self.idx,
+                                          error=type(err).__name__)
             replay = self.batcher.assemble(batch.key, good)
             self.stats.bump("recoveries")
             self.stats.bump("chunks_replayed", len(good))
@@ -395,6 +432,8 @@ class FleetWorker:
                 self.died_at = self.batcher.clock()
                 self.stats.bump("device_losses")
                 fleet._record_error_locked(err)
+                fleet.obs.tracer.instant("device_lost", worker=self.idx,
+                                         error=repr(err))
             if batch is not None:
                 self.stranded.append(batch)
             fleet._done.notify_all()
@@ -438,13 +477,18 @@ class FleetRuntime:
     straggler:      `StragglerConfig` for the per-worker launch-latency
                     heartbeat monitors (default: stock config).
     devices:        explicit device list (default: `jax.devices()`).
+    obs:            optional `repro.obs.Observability` hub shared fleet-
+                    wide (per-worker metrics under `fleet.worker<i>.*`;
+                    chunk spans survive migration because every worker
+                    stamps into the same tracer). Default None = private
+                    hub, tracing off.
 
     Thread-safety: public methods may be called from any thread; per-
     tenant calls must not race each other (one producer per stream).
     Always `shutdown()` (or use as a context manager).
     """
 
-    ERRORS_MAX = 256
+    ERRORS_MAX = 256        # legacy default; Retention.errors governs now
 
     def __init__(self, n_workers: int = 2,
                  policy: Optional[BatchPolicy] = None,
@@ -455,10 +499,12 @@ class FleetRuntime:
                  recovery: Optional[RecoveryPolicy] = None,
                  fault_plan: Optional[FaultPlan] = None,
                  straggler: Optional[StragglerConfig] = None,
-                 devices: Optional[list] = None):
+                 devices: Optional[list] = None,
+                 obs: Optional[Observability] = None):
         self.policy = policy or BatchPolicy()
         self.max_engines = max_engines
         self.clock = clock
+        self.obs = obs if obs is not None else Observability(clock=clock)
         self.launch_retries = launch_retries
         self.launch_deadline_s = launch_deadline_s
         self.recovery = (recovery if recovery is not None
@@ -473,12 +519,26 @@ class FleetRuntime:
         self._placekeys: Dict[str, Tuple] = {}  # tid → key used at open
         self._inflight = 0
         self._migrations = 0                   # dead workers absorbed
-        self.errors: "Deque[BaseException]" = deque(maxlen=self.ERRORS_MAX)
+        self.errors: "Deque[BaseException]" = deque(
+            maxlen=self.obs.retention.errors)
         self.errors_total = 0
         self._stop = threading.Event()
         self.workers = [FleetWorker(i, d, self)
                         for i, d in enumerate(
                             worker_devices(n_workers, devices))]
+        scope = self.obs.scope("fleet")
+        scope.callback("tenants", lambda: len(self._sessions))
+        scope.callback("inflight", lambda: self._inflight)
+        scope.callback("migrations", lambda: self._migrations)
+        scope.callback("placement", lambda: {
+            tid: w.idx for tid, w in self._homes.items()})
+        scope.callback("errors", lambda: {
+            "total": self.errors_total,
+            "window": len(self.errors),
+            "dropped": self.errors_total - len(self.errors)})
+        scope.callback("recovery", lambda: {
+            f: sum(getattr(w.stats, f) for w in self.workers)
+            for f in RecoveryStats.FIELDS})
         self._hb = threading.Thread(target=self._heartbeat_loop,
                                     name="fleet-heartbeat", daemon=True)
         self._hb.start()
@@ -656,7 +716,13 @@ class FleetRuntime:
     def stats(self) -> Dict:
         """Fleet snapshot: a per-worker block (aliveness, tenants, the
         `RecoveryStats` migration/failover ledger, straggler health,
-        traffic, pool) plus fleet-wide placement and aggregate ledger."""
+        traffic, pool) plus fleet-wide placement and aggregate ledger.
+
+        Legacy wrapper — the registry snapshot (`self.obs.snapshot()`)
+        is the normalized superset; see docs/OBSERVABILITY.md for the
+        key map. `errors` counts every error ever recorded (lifetime
+        total, NOT the bounded deque length); `errors_total` is the
+        schema-normalized alias shared with `AsyncServeRuntime`."""
         with self._state:
             workers = []
             for w in self.workers:
@@ -683,7 +749,8 @@ class FleetRuntime:
                                   for tid, w in self._homes.items()},
                     "inflight": self._inflight,
                     "migrations": self._migrations,
-                    "errors": self.errors_total}
+                    "errors": self.errors_total,
+                    "errors_total": self.errors_total}
 
     # -- internals: dispatch -----------------------------------------------
 
@@ -861,6 +928,15 @@ class FleetRuntime:
                 replay = stranded + pending
                 for r in replay:
                     r.session = new_s
+                if self.obs.tracer.enabled:
+                    t = self.clock()
+                    for r in replay:
+                        span = getattr(r.plan, "span", None)
+                        if span is not None:
+                            span.event("migrate", t,
+                                       src=dead.idx, dst=target.idx)
+                    self.obs.tracer.instant("migrate_session", tenant=tid,
+                                            src=dead.idx, dst=target.idx)
                 if replay:
                     target.batcher.adopt_requests(replay)
                     # stranded requests kept their in-flight accounting

@@ -12,8 +12,9 @@ quantization are pure functions of the trained params).
 from __future__ import annotations
 
 import threading
+import time
 from collections import OrderedDict
-from typing import Any, Callable, Dict, Hashable
+from typing import Any, Callable, Dict, Hashable, Optional
 
 
 class EnginePool:
@@ -51,6 +52,12 @@ class EnginePool:
         # faults are scheduled against the miss/build counter, so they hit
         # both session opens AND failover rebuilds deterministically
         self.fault_plan = None
+        # optional observability hook (repro.obs): called as
+        # build_hook(key, build_seconds) after every successful miss-build,
+        # outside the pool lock — runtimes use it to record engine
+        # build/compile events as trace instants + a build-time histogram
+        self.build_hook: Optional[Callable[[Hashable, float], None]] = None
+        self.clock: Callable[[], float] = time.perf_counter
 
     def get(self, key: Hashable, build: Callable[[], Any]) -> Any:
         """Return the cached engine for `key`, building (and possibly
@@ -66,7 +73,10 @@ class EnginePool:
             self.misses += 1
         if self.fault_plan is not None:
             self.fault_plan.on_build(idx)
+        t0 = self.clock()
         engine = build()                   # slow: outside the lock
+        if self.build_hook is not None:
+            self.build_hook(key, self.clock() - t0)
         with self._lock:
             self._entries[key] = engine
             if len(self._entries) > self.max_engines:

@@ -99,6 +99,7 @@ import numpy as np
 
 from ..core import autotune as autotune_lib
 from ..core.engine import EqualizerEngine
+from ..obs import Observability
 from ..runtime.straggler import StragglerConfig
 from .pool import EnginePool
 from .recovery import (CorruptOutput, DegradationController, FaultPlan,
@@ -139,9 +140,13 @@ def _serve_tile(batcher: MicroBatcher,
         return None                    # effectively single-stream traffic
     probe_syms = max(_MIN_PROBE_SYMS,
                      stats.median_width() // engine.cfg.n_os)
-    return autotune_lib.best_tile_m(
+    tile = autotune_lib.best_tile_m(
         engine.cfg, engine.backend, engine._make_fn,
         probe_batch=occupancy, probe_syms=probe_syms)
+    batcher.tracer.instant(           # profiling hook: the serve-aware
+        "autotune", backend=engine.backend,       # retune DECISION itself
+        probe_batch=occupancy, probe_syms=probe_syms, tile_m=tile)
+    return tile
 
 
 def _swap_spec(session: Session, params, bn_state, weights) -> TenantSpec:
@@ -162,6 +167,35 @@ def _swap_spec(session: Session, params, bn_state, weights) -> TenantSpec:
         formats=engine.formats, backend=engine.backend,
         tile_m=engine.resolved_tile_m(),
         weight_epoch=session.spec.weight_epoch + 1)
+
+
+def _wire_runtime_obs(rt, obs: Observability) -> None:
+    """Register runtime-level telemetry under the "serve" scope (the
+    batcher registered its launch instruments there already): lazy
+    snapshot-time callbacks that REUSE the existing accounting (pool LRU
+    counters, per-session state) — no double counting, no hot-path cost —
+    plus the engine-pool build hook that records build/compile events as a
+    histogram + trace instants."""
+    scope = obs.scope("serve")
+    pool = rt.sessions.pool
+    pool.clock = obs.clock
+    h_build = scope.histogram("pool.build_s")
+
+    def _on_build(key, dt: float) -> None:
+        h_build.observe(dt)
+        obs.tracer.instant("engine_build", tenant=str(key), build_s=dt)
+
+    pool.build_hook = _on_build
+    scope.callback("pool", pool.stats)
+    scope.callback("tenants", lambda: len(rt.sessions))
+    scope.callback("sessions", lambda: {
+        tid: {"syms_emitted": s.syms_emitted,
+              "weight_epoch": s.weight_epoch,
+              "recoveries": s.recoveries,
+              "inflight": s.inflight,
+              "shed": s.shed,
+              "failed": s.failed is not None}
+        for tid, s in rt.sessions.sessions.items()})
 
 
 class ServeRuntime:
@@ -189,18 +223,30 @@ class ServeRuntime:
     sentinel_limit: output-sentinel bound (|y| ≤ limit, finite; default
                   None = disabled on the sync path). A rejected batch
                   raises `CorruptOutput` with its inputs unconsumed.
+    obs:          optional `repro.obs.Observability` hub (metrics registry
+                  + chunk tracer + `Retention` bounds). Default None builds
+                  a private hub with tracing OFF; pass
+                  `Observability(tracing=True)` for chunk-lifecycle spans.
+                  `rt.obs.snapshot()` is the normalized telemetry tree —
+                  `stats()` stays as a thin legacy wrapper (key map in
+                  docs/OBSERVABILITY.md).
     """
 
     def __init__(self, policy: Optional[BatchPolicy] = None,
                  max_engines: int = 32,
                  clock: Callable[[], float] = time.perf_counter,
                  fault_plan: Optional[FaultPlan] = None,
-                 sentinel_limit: Optional[float] = None):
-        self.sessions = SessionManager(max_engines=max_engines)
-        self.batcher = MicroBatcher(policy, clock=clock)
+                 sentinel_limit: Optional[float] = None,
+                 obs: Optional[Observability] = None):
+        self.obs = obs if obs is not None else Observability(clock=clock)
+        self.sessions = SessionManager(
+            max_engines=max_engines,
+            swap_log_max=self.obs.retention.swap_log)
+        self.batcher = MicroBatcher(policy, clock=clock, obs=self.obs)
         self.batcher.fault_plan = fault_plan
         self.batcher.sentinel_limit = sentinel_limit
         self.sessions.pool.fault_plan = fault_plan
+        _wire_runtime_obs(self, self.obs)
 
     # -- tenant lifecycle --------------------------------------------------
 
@@ -240,7 +286,9 @@ class ServeRuntime:
         weight epoch."""
         s = self.sessions.get(tenant_id)
         self.batcher.flush_session(s)
-        return s.install_spec(_swap_spec(s, params, bn_state, weights))
+        epoch = s.install_spec(_swap_spec(s, params, bn_state, weights))
+        self.obs.tracer.instant("hot_swap", tenant=tenant_id, epoch=epoch)
+        return epoch
 
     def rollback_weights(self, tenant_id: str) -> int:
         """Restore the spec active before the last swap — bit-identical
@@ -252,7 +300,9 @@ class ServeRuntime:
         prev = dataclasses.replace(s.prev_spec,
                                    weight_epoch=s.spec.weight_epoch + 1)
         self.batcher.flush_session(s)
-        return s.install_spec(prev)
+        epoch = s.install_spec(prev)
+        self.obs.tracer.instant("rollback", tenant=tenant_id, epoch=epoch)
+        return epoch
 
     # -- streaming ---------------------------------------------------------
 
@@ -292,8 +342,14 @@ class ServeRuntime:
         return self.sessions.pool
 
     def stats(self) -> Dict:
+        """Thin legacy wrapper over the obs registry's providers (key map
+        in docs/OBSERVABILITY.md); `self.obs.snapshot()` is the full
+        normalized tree. `errors_total` is always present (0 here — the
+        sync driver surfaces launch errors to the caller instead of
+        recording them), matching the async/fleet schema."""
         st = {"tenants": len(self.sessions),
               "pending": self.batcher.pending(),
+              "errors_total": 0,
               "pool": self.pool.stats(),
               "traffic": self.batcher.traffic_stats()}
         st.update(self.batcher.latency_stats())
@@ -361,11 +417,15 @@ class AsyncServeRuntime:
                  fault_plan: Optional[FaultPlan] = None,
                  straggler: Optional[StragglerConfig] = None,
                  degrade_on_slow: bool = False,
-                 shed_count: int = 1):
+                 shed_count: int = 1,
+                 obs: Optional[Observability] = None):
         if queue_depth < 1:
             raise ValueError("queue_depth must be ≥ 1")
-        self.sessions = SessionManager(max_engines=max_engines)
-        self.batcher = MicroBatcher(policy, clock=clock)
+        self.obs = obs if obs is not None else Observability(clock=clock)
+        self.sessions = SessionManager(
+            max_engines=max_engines,
+            swap_log_max=self.obs.retention.swap_log)
+        self.batcher = MicroBatcher(policy, clock=clock, obs=self.obs)
         self.launch_retries = launch_retries
         self.launch_deadline_s = launch_deadline_s
         self.recovery = recovery if recovery is not None else RecoveryPolicy()
@@ -382,9 +442,20 @@ class AsyncServeRuntime:
         self._launch_seq = 0           # launches observed by the monitor
         # bounded: a persistently failing stream must not grow host memory
         # without limit; `errors_total` keeps the failure RATE observable
-        # after the window wraps (same pattern as OnlineAdapter.errors)
-        self.errors: Deque[BaseException] = deque(maxlen=self.ERRORS_MAX)
+        # after the window wraps (same pattern as OnlineAdapter.errors).
+        # The bound comes from the retention policy (default == ERRORS_MAX)
+        self.errors: Deque[BaseException] = deque(
+            maxlen=self.obs.retention.errors)
         self.errors_total = 0
+        _wire_runtime_obs(self, self.obs)
+        scope = self.obs.scope("serve")
+        scope.callback("inflight", lambda: self._inflight)
+        scope.callback("errors", lambda: {
+            "total": self.errors_total,
+            "window": len(self.errors),
+            "dropped": self.errors_total - len(self.errors)})
+        scope.callback("recovery", self.recovery_stats.as_dict)
+        scope.callback("degradation", self.degradation.state)
         self._lock = threading.RLock()
         # serializes take→enqueue sequences: without it, thread A could
         # pop batch k under the lock, get preempted before the queue put,
@@ -461,7 +532,8 @@ class AsyncServeRuntime:
 
     # -- weight hot-swap ---------------------------------------------------
 
-    def _swap_barrier(self, tenant_id: str, make_spec) -> int:
+    def _swap_barrier(self, tenant_id: str, make_spec,
+                      marker: str = "hot_swap") -> int:
         """Shared swap machinery: build the candidate engine OUTSIDE the
         locks (BN fold + weight quantization take hundreds of ms on
         interpret-mode hosts — serving must not stall behind them), then
@@ -496,7 +568,10 @@ class AsyncServeRuntime:
                     raise RuntimeError(
                         f"stream {tenant_id!r} lost a chunk to a failed "
                         f"launch; refusing to swap weights") from s.failed
-                return s.install_spec(new_spec, prebuilt=candidate)
+                epoch = s.install_spec(new_spec, prebuilt=candidate)
+                self.obs.tracer.instant(marker, tenant=tenant_id,
+                                        epoch=epoch)
+                return epoch
 
     def swap_weights(self, tenant_id: str, params=None, bn_state=None,
                      weights=None) -> int:
@@ -517,7 +592,7 @@ class AsyncServeRuntime:
                     f"tenant {tenant_id!r}: no previous weights")
             return dataclasses.replace(
                 s.prev_spec, weight_epoch=s.spec.weight_epoch + 1)
-        return self._swap_barrier(tenant_id, mk)
+        return self._swap_barrier(tenant_id, mk, marker="rollback")
 
     # -- streaming ---------------------------------------------------------
 
@@ -607,12 +682,19 @@ class AsyncServeRuntime:
         return self.sessions.pool
 
     def stats(self) -> Dict:
+        """Thin legacy wrapper over the obs registry's providers (key map
+        in docs/OBSERVABILITY.md); `self.obs.snapshot()` is the full
+        normalized tree. `errors_total` (the canonical cross-runtime key)
+        and the historical `errors` int both report the lifetime count —
+        the drifted schema kept `errors` for callers that already read
+        it."""
         with self._lock:
             st = {"tenants": len(self.sessions),
                   "pending": self.batcher.pending(),
                   "inflight": self._inflight,
                   "queue_depth": self._launch_q.maxsize,
                   "errors": self.errors_total,
+                  "errors_total": self.errors_total,
                   "errors_dropped": self.errors_total - len(self.errors),
                   "pool": self.pool.stats(),
                   "traffic": self.batcher.traffic_stats(),
@@ -734,23 +816,34 @@ class AsyncServeRuntime:
         exponential backoff + jitter, each under the watchdog deadline.
         Returns (y, None) on success, (None, last error) when exhausted.
         Every attempt's latency feeds the straggler monitor (timeouts
-        count at the deadline — the watchdog saw at least that much)."""
+        count at the deadline — the watchdog saw at least that much).
+        Latencies come from the runtime's injectable clock (same source
+        as the batcher timestamps), so fake-clock tests see deterministic
+        values; failed attempts append a "retry" child event to each
+        affected chunk's span."""
+        clk = self.batcher.clock
         err: Optional[BaseException] = None
         for attempt in range(self.launch_retries + 1):
             if attempt:
                 time.sleep(self.recovery.backoff_s(attempt - 1,
                                                    self._backoff_rng))
-            t0 = time.perf_counter()
+            t0 = clk()
             try:
                 y = self._execute_deadline(batch)
             except Exception as e:  # noqa: BLE001 — retried/reported
                 err = e
                 dt = (self.launch_deadline_s
                       if isinstance(e, LaunchTimeout)
-                      else time.perf_counter() - t0)
+                      else clk() - t0)
                 self._observe_launch(dt)
+                if self.batcher.tracer.enabled:
+                    t = clk()
+                    for r in batch.reqs:
+                        if r.plan.span is not None:
+                            r.plan.span.event("retry", t, attempt=attempt,
+                                              error=repr(e))
                 continue
-            self._observe_launch(time.perf_counter() - t0)
+            self._observe_launch(clk() - t0)
             return y, None
         return None, err
 
@@ -851,6 +944,12 @@ class AsyncServeRuntime:
             # re-assembly under the lock (fn cache is not thread-safe);
             # rebuilt engines have fresh ids → natural stacked-fn cache
             # miss → the replay binds the NEW engines' weights
+            if self.batcher.tracer.enabled:
+                t = self.batcher.clock()
+                for r in good:
+                    if r.plan.span is not None:
+                        r.plan.span.event("replay", t,
+                                          error=type(err).__name__)
             replay = self.batcher.assemble(batch.key, good)
             self.recovery_stats.bump("recoveries")
             self.recovery_stats.bump("chunks_replayed", len(good))
@@ -891,6 +990,9 @@ class AsyncServeRuntime:
                 s.rolled_back = True
                 self.recovery_stats.bump("rollbacks")
                 self.recovery_stats.bump("engine_rebuilds")
+                self.obs.tracer.instant(
+                    "rollback", tenant=s.spec.tenant_id,
+                    epoch=prev.weight_epoch, reason="corrupt_quarantine")
                 return None
             except Exception:  # noqa: BLE001 — fall back to plain rebuild
                 pass

@@ -53,6 +53,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.engine import stacked_engine_fn
+from ..obs import Observability
 from .chunker import ChunkPlan
 from .recovery import CorruptOutput, output_ok
 from .session import Session
@@ -209,21 +210,43 @@ class MicroBatcher:
     # distinct (ordered) tenant sets; 64 covers many groups without
     # pinning unbounded weight stacks
     FN_CACHE_MAX = 64
-    # latency records kept for stats — a bounded window, not the full
-    # history (unbounded streams would otherwise leak one Request, with
-    # its symbols array, per chunk forever)
+    # default latency-window bound; the live bound comes from
+    # `Retention.latency_window` (same default) — a bounded window, not the
+    # full history (unbounded streams would otherwise leak one Request,
+    # with its symbols array, per chunk forever)
     COMPLETED_MAX = 8192
 
     def __init__(self, policy: Optional[BatchPolicy] = None,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 obs: Optional[Observability] = None,
+                 obs_scope: str = "serve"):
         self.policy = policy or BatchPolicy()
         self.clock = clock
+        # observability spine: runtimes pass their hub (fleet workers with
+        # per-worker scopes like "fleet.worker0"); a standalone batcher
+        # gets a private hub with tracing off, so every hook below is a
+        # cheap guarded no-op by default
+        self.obs = obs if obs is not None else Observability(clock=clock)
+        self.tracer = self.obs.tracer
+        window = self.obs.retention.latency_window
+        scope = self.obs.scope(obs_scope)
+        self._m_requests = scope.counter("requests_total")
+        self._m_launches = scope.counter("launches_total")
+        self._h_latency = scope.histogram("launch.latency_s", window)
+        self._h_wait = scope.histogram("launch.wait_s", window)
+        self._h_occupancy = scope.histogram("launch.occupancy", window)
+        self._h_width = scope.histogram("launch.width_samples", window)
+        self._h_device = scope.histogram("launch.device_s", window)
+        self._h_descatter = scope.histogram("launch.descatter_s", window)
+        scope.callback("pending", self.pending)
+        scope.callback("latency", self.latency_stats)
+        scope.callback("traffic", self.traffic_stats)
         self._groups: Dict[Tuple, List[Request]] = {}
         # (id(engine), …) → (engine refs, stacked fn). Holding the refs
         # keeps the ids valid; bounded FIFO so evicted engines can be GC'd.
         self._fn_cache: "Dict[Tuple, Tuple[list, Callable]]" = {}
-        self.completed: Deque[Request] = deque(maxlen=self.COMPLETED_MAX)
-        self.batch_sizes: Deque[int] = deque(maxlen=self.COMPLETED_MAX)
+        self.completed: Deque[Request] = deque(maxlen=window)
+        self.batch_sizes: Deque[int] = deque(maxlen=window)
         # tune_key (group_key minus tile) → live width/occupancy histograms
         self.traffic: Dict[Tuple, TrafficStats] = {}
         self.total_requests = 0
@@ -262,6 +285,10 @@ class MicroBatcher:
             return None
         session.chunker.commit(plan)
         req = Request(session=session, plan=plan, t_submit=self.clock())
+        span = self.tracer.begin(session.spec.tenant_id)
+        if span is not None:                       # tracing on: the span
+            span.stamp("submit", req.t_submit)     # rides the plan from
+            plan.span = span                       # here to emit/seal
         key = session.engine.group_key()
         self._groups.setdefault(key, []).append(req)
         return req
@@ -321,6 +348,11 @@ class MicroBatcher:
         group (launch failure; plans are self-contained input snapshots so
         this is always safe). When several batches failed, requeue them in
         REVERSE take order so stream order per session is preserved."""
+        if self.tracer.enabled:
+            t = self.clock()
+            for r in batch.reqs:
+                if r.plan.span is not None:
+                    r.plan.span.event("requeue", t)
         self._groups.setdefault(batch.key, [])[:0] = batch.reqs
 
     def adopt_requests(self, reqs: List[Request]) -> None:
@@ -347,6 +379,11 @@ class MicroBatcher:
     def assemble(self, key: Tuple, reqs: List[Request]) -> LaunchBatch:
         """Host phase 1: pad the requests' plans to one width bucket, stack
         them into the (B, W) launch input, bind the memoized group fn."""
+        if self.tracer.enabled:
+            t = self.clock()
+            for r in reqs:
+                if r.plan.span is not None:
+                    r.plan.span.stamp("assemble", t)
         engines = [r.session.engine for r in reqs]
         fn = self._group_fn(engines)
         width = self._bucket_width(reqs)
@@ -369,10 +406,20 @@ class MicroBatcher:
                 self.fault_plan.on_worker(self.worker_index, idx)
             self.fault_plan.on_execute(idx)
         t_launch = self.clock()
+        if self.tracer.enabled:          # stamp AFTER the fault hooks so a
+            for r in batch.reqs:         # raised injection never stamps —
+                if r.plan.span is not None:   # the retry's stamps describe
+                    r.plan.span.stamp("launch", t_launch)  # the real launch
         y = batch.fn(jnp.asarray(batch.x))
         y = np.asarray(jax.block_until_ready(y))
         if self.fault_plan is not None:
             y = self.fault_plan.on_output(idx, y)
+        t_landed = self.clock()
+        self._h_device.observe(t_landed - t_launch)
+        if self.tracer.enabled:
+            for r in batch.reqs:
+                if r.plan.span is not None:
+                    r.plan.span.stamp("execute", t_landed)
         for r in batch.reqs:
             r.t_launch = t_launch
         return y
@@ -408,6 +455,11 @@ class MicroBatcher:
                 ts = r.session.chunker.ts
                 lo = r.plan.skip * ts
                 r.session.tap(r.plan.data[lo:lo + r.plan.n_emit * ts], syms)
+            span = r.plan.span
+            if span is not None:
+                span.stamp("descatter", t_done)
+                span.n_emit = r.plan.n_emit
+                span.width = r.plan.width
             r.plan.data = _CONSUMED        # release the input buffer; the
             self.completed.append(r)       # record keeps only timing+syms
             # a caller may legally cancel() a pending chunk future; the
@@ -416,12 +468,22 @@ class MicroBatcher:
             # future would raise and poison the whole batch
             if r.future is not None and not r.future.done():
                 r.future.set_result(syms)
+            if span is not None:           # emitted ⇒ sealed exactly once
+                span.stamp("emit", self.clock())
+                self.tracer.seal(span)
+            self._h_latency.observe(r.latency_s)
+            self._h_wait.observe(r.wait_s)
         skey = reqs[0].session.engine.tune_key()
         self.traffic.setdefault(skey, TrafficStats()).record(
             len(reqs), batch.x.shape[1])
         self.total_requests += len(reqs)
         self.batch_sizes.append(len(reqs))
         self.launches += 1
+        self._m_requests.inc(len(reqs))
+        self._m_launches.inc()
+        self._h_occupancy.observe(len(reqs))
+        self._h_width.observe(batch.x.shape[1])
+        self._h_descatter.observe(self.clock() - t_done)
 
     def fail(self, batch: LaunchBatch, exc: BaseException) -> None:
         """Terminal launch failure (async path, after retries): fail every
@@ -435,10 +497,16 @@ class MicroBatcher:
         """Poison a SUBSET of a failed batch's requests (the failover path
         partitions a batch into replayable and over-budget requests — only
         the latter die). Same semantics as `fail`, per request."""
+        t = self.clock() if self.tracer.enabled else 0.0
         for r in reqs:
             r.session.failed = exc
             if r.future is not None and not r.future.done():
                 r.future.set_exception(exc)
+            span = r.plan.span
+            if span is not None:           # poisoned chunks seal "failed":
+                span.event("poisoned", t, error=repr(exc))   # never counted
+                self.tracer.seal(span, status="failed")      # as emitted
+
 
     # -- synchronous drivers ----------------------------------------------
 
@@ -511,8 +579,9 @@ class MicroBatcher:
         return out
 
     def latency_stats(self) -> Dict[str, float]:
-        """Percentiles over the last COMPLETED_MAX requests (full history
-        for any run shorter than the window, e.g. the benches)."""
+        """Percentiles over the last `Retention.latency_window` requests
+        (full history for any run shorter than the window, e.g. the
+        benches)."""
         if not self.completed:
             return {"requests": 0}
         lat = np.array([r.latency_s for r in self.completed])

@@ -140,11 +140,17 @@ class Session:
     weights the stream opened with. `install_spec` appends on every
     successful hot-swap/rollback; `prev_spec` holds the previous spec so a
     bad promotion can be rolled back bit-identically (specs rebuild their
-    engines deterministically).
+    engines deterministically). The log stays a plain list (callers slice
+    it) but is BOUNDED: `swap_log_max` (from `repro.obs.Retention.swap_log`
+    when opened through a runtime) trims the oldest entries, so a
+    long-running adaptive stream holds steady memory.
     """
 
+    SWAP_LOG_MAX = 256                 # default bound (Retention.swap_log)
+
     def __init__(self, spec: TenantSpec, pool: EnginePool,
-                 tile_tuner: Optional[TileTuner] = None):
+                 tile_tuner: Optional[TileTuner] = None,
+                 swap_log_max: Optional[int] = None):
         self._pool = pool
         # a NEW stream must never inherit a pool entry built (or tile-
         # mutated) for an earlier session under the same tenant_id — the
@@ -188,6 +194,8 @@ class Session:
         self.tap: Optional[Callable[[np.ndarray, np.ndarray], None]] = None
         self.prev_spec: Optional[TenantSpec] = None
         self.swap_log: List[tuple] = [(spec.weight_epoch, 0)]
+        self.swap_log_max = (self.SWAP_LOG_MAX if swap_log_max is None
+                             else max(1, int(swap_log_max)))
 
     @property
     def engine(self) -> EqualizerEngine:
@@ -210,7 +218,7 @@ class Session:
         geometry mismatch between old and new engines means the spec does
         NOT rebuild deterministically — that is corruption, so it raises
         instead of silently emitting misaligned symbols."""
-        s = Session(self.spec, pool)
+        s = Session(self.spec, pool, swap_log_max=self.swap_log_max)
         old_c, new_c = self.chunker, s.chunker
         if ((new_c.halo, new_c.ts, new_c.tile_m)
                 != (old_c.halo, old_c.ts, old_c.tile_m)):
@@ -274,6 +282,9 @@ class Session:
         self._pool.get(new_spec.tenant_id, lambda: candidate)
         self.swap_log.append((new_spec.weight_epoch,
                               self.chunker.emitted_positions))
+        if len(self.swap_log) > self.swap_log_max:   # retention bound —
+            del self.swap_log[:len(self.swap_log)    # oldest epochs out,
+                              - self.swap_log_max]   # list semantics kept
         return new_spec.weight_epoch
 
     def append_output(self, syms: np.ndarray) -> None:
@@ -297,15 +308,18 @@ class SessionManager:
     """tenant_id → Session registry over a shared LRU engine pool."""
 
     def __init__(self, pool: Optional[EnginePool] = None,
-                 max_engines: int = 32):
+                 max_engines: int = 32,
+                 swap_log_max: Optional[int] = None):
         self.pool = pool if pool is not None else EnginePool(max_engines)
+        self.swap_log_max = swap_log_max
         self._sessions: Dict[str, Session] = {}
 
     def open(self, spec: TenantSpec,
              tile_tuner: Optional[TileTuner] = None) -> Session:
         if spec.tenant_id in self._sessions:
             raise ValueError(f"tenant {spec.tenant_id!r} already open")
-        s = Session(spec, self.pool, tile_tuner=tile_tuner)
+        s = Session(spec, self.pool, tile_tuner=tile_tuner,
+                    swap_log_max=self.swap_log_max)
         self._sessions[spec.tenant_id] = s
         return s
 
