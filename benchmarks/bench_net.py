@@ -1,0 +1,179 @@
+"""Wire parity — the packetized data/control plane bench and hard gate.
+
+Serves an fp32 tenant and an int8 tenant through the FULL network path —
+control-plane OPEN over the wire, sample DATA frames through `NetIngress`
+→ `ServeRuntime` → `NetEgress`, symbol frames reassembled client-side —
+over a deterministic seeded loopback transport that reorders AND
+duplicates datagrams in both directions, then records in
+`BENCH_net.json` at the repo root:
+
+  * throughput — end-to-end framed syms/s and frames/s (host-speed
+    dependent, trend-watching only; `--check` does NOT gate on rates).
+  * criteria.net_ok — the HARD host-independent gate, four parts:
+      - bitwise: every tenant's wire-delivered symbol stream equals
+        offline full-stream equalization bit-for-bit (the int8 tenant
+        rides an int8 wire on its layer-0 requant grid — requantization
+        idempotence makes the lossy wire bitwise-transparent);
+      - exactly_once: received symbol counts match offline exactly (no
+        loss, no duplication) and no tenant surfaced a wire error;
+      - impairments_fired: the wire really reordered and duplicated
+        datagrams this run (a vacuous pass on a clean wire proves
+        nothing);
+      - control_ok: both tenants were opened AND closed via control
+        frames with success acks, and a deliberately malformed command
+        drew an error ack.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.core import equalizer as eq
+from repro.net import (ControlAckError, NetClient, NetGateway, WireSchedule,
+                       loopback_pair)
+from repro.serve import BatchPolicy, ServeRuntime, chop, replay_wire
+from repro.serve.session import TenantSpec
+
+from .common import Bench
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+OUT_PATH = REPO_ROOT / "BENCH_net.json"
+
+CFG = eq.CNNEqConfig()
+TILE_M = 32
+INT8_FMT = tuple((2, 5, 3, 4) for _ in range(CFG.layers))
+N_SYMS = 480
+CHUNK_SYMS = 60
+REORDER_WINDOW = 6
+DUP_PROB = 0.2
+BURST = 4
+
+
+def _weights(seed: int):
+    params = eq.init(jax.random.PRNGKey(seed), CFG)
+    folded = eq.fold_bn(params, eq.init_bn_state(CFG), CFG)
+    return eq.folded_weights(folded)
+
+
+def _offline(spec: TenantSpec, wave: np.ndarray) -> np.ndarray:
+    import jax.numpy as jnp
+    return np.asarray(spec.build_engine()(jnp.asarray(wave[None])))[0]
+
+
+def run(out_path: Optional[pathlib.Path] = OUT_PATH) -> dict:
+    bench = Bench("net_wire", "packetized data+control plane: wire parity")
+    tenants = {"t0": ("fused_fp32", None), "t1": ("fused_int8", INT8_FMT)}
+    w = {t: _weights(600 + i) for i, t in enumerate(sorted(tenants))}
+    rng = np.random.default_rng(42)
+    waves = {t: rng.standard_normal(N_SYMS * CFG.n_os).astype(np.float32)
+             for t in sorted(tenants)}
+    offline = {t: _offline(TenantSpec(t, CFG, weights=w[t],
+                                      formats=tenants[t][1],
+                                      backend=tenants[t][0], tile_m=TILE_M),
+                           waves[t])
+               for t in tenants}
+
+    cli_t, srv_t = loopback_pair(
+        WireSchedule(seed=11, reorder_window=REORDER_WINDOW,
+                     dup_prob=DUP_PROB),
+        WireSchedule(seed=12, reorder_window=REORDER_WINDOW,
+                     dup_prob=DUP_PROB))
+    rt = ServeRuntime(BatchPolicy(max_batch=len(tenants), max_wait_s=1e9))
+    gw = NetGateway(rt, srv_t)
+    client = NetClient(cli_t)
+
+    # control plane: OPEN both tenants over the wire
+    opened = {}
+    for t in sorted(tenants):
+        backend, formats = tenants[t]
+        opened[t] = client.open(t, CFG, w[t], formats=formats,
+                                backend=backend, tile_m=TILE_M,
+                                pump=gw.step)
+    # a malformed command must draw an error ack, not damage the server
+    try:
+        client.command("t0", {"reg": 999}, pump=gw.step)
+        bad_cmd_rejected = False
+    except ControlAckError:
+        bad_cmd_rejected = True
+
+    streams = {t: chop(waves[t], CHUNK_SYMS * CFG.n_os, seed=i, jitter=0.5)
+               for i, t in enumerate(sorted(waves))}
+    t0 = time.perf_counter()
+    acct = replay_wire(gw, client, streams, burst=BURST)
+    elapsed = time.perf_counter() - t0
+
+    received = {t: client.symbols(t) for t in tenants}
+    bitwise = all(bool(np.array_equal(received[t], offline[t]))
+                  for t in tenants)
+    exactly_once = (not acct["errors"]
+                    and all(received[t].shape == offline[t].shape
+                            for t in tenants))
+    closed_ok = True
+    for t in sorted(tenants):
+        try:
+            client.close(t, pump=gw.step)
+        except (ControlAckError, TimeoutError):
+            closed_ok = False
+
+    net = rt.obs.snapshot()["net"]
+    saw_reorder = net["reordered"] > 0
+    saw_dup = net["duplicates"] > 0
+    wire_stats = {"client_tx": cli_t.stats, "server_tx": srv_t.stats}
+    impairments_fired = bool(
+        saw_reorder and saw_dup
+        and wire_stats["client_tx"]["duplicated"] > 0
+        and wire_stats["server_tx"]["duplicated"] > 0)
+    control_ok = bool(all(a.get("ok") for a in opened.values())
+                      and bad_cmd_rejected and closed_ok)
+    criteria = {
+        "bitwise": bool(bitwise),
+        "exactly_once": bool(exactly_once),
+        "impairments_fired": impairments_fired,
+        "control_ok": control_ok,
+        "net_ok": bool(bitwise and exactly_once and impairments_fired
+                       and control_ok),
+    }
+
+    total_syms = int(sum(o.shape[0] for o in offline.values()))
+    frames = int(net["frames_in"] + net["frames_out"])
+    print(f"[bench_net] {total_syms} syms over {frames} frames in "
+          f"{elapsed:.2f}s ({total_syms / elapsed:,.0f} sym/s)")
+    print(f"[bench_net] wire: reordered={net['reordered']} "
+          f"duplicates={net['duplicates']} gaps={net['gaps']} "
+          f"crc_errors={net['crc_errors']}")
+    print(f"[bench_net] bitwise={bitwise} exactly_once={exactly_once} "
+          f"impairments_fired={impairments_fired} control_ok={control_ok}")
+    print(f"[bench_net] net_ok={criteria['net_ok']}")
+
+    report = {
+        "backend_default": jax.default_backend(),
+        "scenario": {
+            "tenants": {t: tenants[t][0] for t in sorted(tenants)},
+            "tile_m": TILE_M, "n_syms": N_SYMS, "chunk_syms": CHUNK_SYMS,
+            "reorder_window": REORDER_WINDOW, "dup_prob": DUP_PROB,
+            "burst": BURST,
+        },
+        "throughput": {
+            "syms_per_s": total_syms / elapsed if elapsed else 0.0,
+            "frames_per_s": frames / elapsed if elapsed else 0.0,
+            "note": ("host-speed dependent; --check gates only on "
+                     "criteria.net_ok"),
+        },
+        "wire": {**wire_stats, "net_counters": {
+            k: v for k, v in net.items() if isinstance(v, (int, float))}},
+        "criteria": criteria,
+    }
+    if out_path is not None:
+        out_path.write_text(json.dumps(report, indent=2))
+        print(f"[bench_net] wrote {out_path}")
+    bench.record("report", report)
+    return bench.finish()
+
+
+if __name__ == "__main__":
+    run()

@@ -16,6 +16,8 @@ One benchmark per paper table/figure (see DESIGN.md §6):
                              → BENCH_fleet.json
     bench_obs       observability: tracing tax + span integrity
                              → BENCH_obs.json
+    bench_net       wire parity: packetized data+control plane
+                             → BENCH_net.json
     bench_timing    Fig. 12  timing model vs simulated measurement
     bench_platform  Fig. 13-15  CPU measured / TPU roofline-projected
     bench_roofline  Table 1 / §Roofline  aggregate the dry-run artifacts
@@ -42,13 +44,17 @@ mid-stream, every stream migrated bitwise with zero loss and zero
 poisoning), and the observability claim (`criteria.overhead_ok` in
 `BENCH_obs.json` — tracing ON keeps the ON/OFF throughput ratio above
 its floor, stays bitwise, and seals exactly one complete span per
-emitted chunk) are deterministic under their fixed seeds, so their
-failure is never noise. The fault, fleet and obs gates carry no
+emitted chunk), and the wire-parity claim (`criteria.net_ok` in
+`BENCH_net.json` — symbols served through the packetized
+NetIngress→runtime→NetEgress path over a reordering+duplicating
+loopback wire stay bitwise vs offline, exactly-once, with the control
+plane acking) are deterministic under their fixed seeds, so their
+failure is never noise. The fault, fleet, obs and net gates carry no
 throughput rates at all — they are purely the hard criteria.
 Compare like with like: the committed baseline must come from the same
 host class AND be recorded in the gate's in-process order
-(`--only engine serve adapt fault fleet obs`); CPU hosts run the kernels
-in interpret mode.
+(`--only engine serve adapt fault fleet obs net`); CPU hosts run the
+kernels in interpret mode.
 """
 from __future__ import annotations
 
@@ -61,9 +67,9 @@ import time
 import traceback
 
 from . import (bench_adapt, bench_dop, bench_dse, bench_engine,
-               bench_fault, bench_fleet, bench_obs, bench_platform,
-               bench_proakis, bench_quant, bench_roofline, bench_serve,
-               bench_stream, bench_timing)
+               bench_fault, bench_fleet, bench_net, bench_obs,
+               bench_platform, bench_proakis, bench_quant, bench_roofline,
+               bench_serve, bench_stream, bench_timing)
 from .common import REPORT_DIR
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
@@ -170,6 +176,30 @@ def _obs_criteria(rep: dict):
             f"trace_complete={crit.get('trace_complete')})"]
 
 
+def _net_rates(rep: dict) -> dict:
+    """The net gate tracks NO throughput rates — framed syms/s is
+    host-speed dependent; the whole gate is the hard criterion below."""
+    return {}
+
+
+def _net_criteria(rep: dict):
+    """Hard (host-independent) gate on the fresh net report: symbols
+    served through the packetized wire (control-plane open, DATA frames
+    in, symbol frames out) over a seeded reordering+duplicating loopback
+    must stay bitwise vs offline and exactly-once, with the impairments
+    verifiably fired and every control command acked. Deterministic
+    under its fixed seeds — a failure is a code regression, never
+    noise."""
+    crit = rep.get("criteria", {})
+    if crit.get("net_ok", False):
+        return []
+    return [f"net: wire-parity criterion failed "
+            f"(bitwise={crit.get('bitwise')} "
+            f"exactly_once={crit.get('exactly_once')} "
+            f"impairments_fired={crit.get('impairments_fired')} "
+            f"control_ok={crit.get('control_ok')})"]
+
+
 def _default_tol() -> float:
     """Host-class-aware gate width. Real accelerators get the tight 10%
     gate; interpret-mode CPU hosts run the kernels ~50× slower with
@@ -235,7 +265,10 @@ def check(tol: float | None = None) -> int:
          _fleet_criteria),
         ("obs", REPO_ROOT / "BENCH_obs.json",
          lambda: bench_obs.run(out_path=None), _obs_rates,
-         _obs_criteria))
+         _obs_criteria),
+        ("net", REPO_ROOT / "BENCH_net.json",
+         lambda: bench_net.run(out_path=None), _net_rates,
+         _net_criteria))
     # validate the configuration before burning minutes of re-measurement
     missing = [p.name for _, p, _, _, _ in gates if not p.exists()]
     if missing:
@@ -337,6 +370,7 @@ def main(argv=None) -> int:
         ("fault", lambda: bench_fault.run()),
         ("fleet", lambda: bench_fleet.run()),
         ("obs", lambda: bench_obs.run()),
+        ("net", lambda: bench_net.run()),
         ("stream", lambda: bench_stream.run()),
         ("dop", lambda: bench_dop.run()),
         ("roofline", lambda: bench_roofline.run()),

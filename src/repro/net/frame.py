@@ -1,0 +1,247 @@
+"""Versioned binary frame codec — the serving stack's wire format.
+
+The paper's FPGA equalizer is a receiver FRONT-END: samples arrive on a
+wire, not from an in-process generator. The real-time demonstrator
+companion work feeds its ANN core from UDP payloads over 1G/10G Ethernet;
+this module is the TPU-serving analogue — one datagram = one frame:
+
+    offset  size  field
+    0       2     magic       b"EQ"
+    2       1     version     WIRE_VERSION (1)
+    3       1     ftype       FrameType (DATA/EOS/CREDIT/NACK/CTRL/ACK)
+    4       1     dtype       payload sample dtype (NONE/INT8/BF16/FP32)
+    5       1     a_int       int8 payload quant grid, integer bits
+    6       1     a_frac      int8 payload quant grid, fraction bits
+    7       1     tid_len     tenant-id length (1..MAX_TENANT_ID bytes)
+    8       4     seq         u32 per-tenant stream sequence number
+    12      4     payload_len u32 payload byte length
+    16      ...   tenant id   UTF-8
+    ...     ...   payload
+    ...     4     crc32       CRC-32 over every preceding byte
+
+All integers little-endian. Every decode failure raises a typed
+`FrameError` subclass — never a bare crash, and a corrupted frame can
+never decode to a silently-wrong payload (CRC-32 detects all single-bit
+flips; structural damage fails the length/field validation first).
+
+Payload sample codecs (`encode_samples` / `decode_samples`):
+
+  * INT8 — samples requantized to the tenant engine's LAYER-0 activation
+    grid Q(a_int).(a_frac), exactly the int8 halo-exchange codec
+    (`repro.parallel.halo`): q = clip(round(x·2^a_frac)) as int8 bytes,
+    4× less wire traffic than fp32. The int8 kernel requantizes its
+    inputs to the same grid on entry and requantization is IDEMPOTENT,
+    so int8-backend tenants fed from an int8 wire produce symbols
+    bitwise-equal to feeding the original fp32 waveform.
+  * BF16 — raw little-endian bfloat16 (round-to-nearest-even from fp32).
+  * FP32 — raw little-endian float32 (lossless).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import struct
+import zlib
+
+import numpy as np
+
+try:                                   # jax always ships ml_dtypes
+    import ml_dtypes
+    _BF16 = np.dtype(ml_dtypes.bfloat16)
+except ModuleNotFoundError:            # pragma: no cover — jax guarantees it
+    _BF16 = None
+
+MAGIC = b"EQ"
+WIRE_VERSION = 1
+MAX_TENANT_ID = 64
+# fits a single unfragmented UDP datagram (65507 max) with header slack
+MAX_PAYLOAD = 60_000
+
+_HEADER = struct.Struct("<2sBBBBBBII")          # 16 bytes
+_CRC = struct.Struct("<I")
+MIN_FRAME = _HEADER.size + 1 + _CRC.size        # 1-byte tenant id, no payload
+
+
+class FrameType(enum.IntEnum):
+    """On-wire frame types. DATA/EOS ride the per-tenant data seq space;
+    CREDIT/NACK flow back on the egress path; CTRL/ACK carry the control
+    plane's register commands and their per-command acknowledgements."""
+    DATA = 1
+    EOS = 2
+    CREDIT = 3
+    NACK = 4
+    CTRL = 5
+    ACK = 6
+
+
+class WireDtype(enum.IntEnum):
+    NONE = 0
+    INT8 = 1
+    BF16 = 2
+    FP32 = 3
+
+
+# -- typed decode errors ------------------------------------------------------
+
+class FrameError(ValueError):
+    """Base for every frame decode failure (typed, never a crash)."""
+
+
+class BadMagic(FrameError):
+    """First two bytes are not the EQ magic."""
+
+
+class BadVersion(FrameError):
+    """Unknown wire version."""
+
+
+class BadLength(FrameError):
+    """Truncated datagram, or lengths inconsistent with the buffer."""
+
+
+class BadCRC(FrameError):
+    """CRC-32 trailer mismatch (bit corruption in header or payload)."""
+
+
+class BadField(FrameError):
+    """Structurally intact frame with an invalid field value."""
+
+
+# -- frame object -------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Frame:
+    """One decoded wire frame (see module docstring for the layout)."""
+    ftype: FrameType
+    tenant: str
+    seq: int
+    payload: bytes = b""
+    dtype: WireDtype = WireDtype.NONE
+    a_int: int = 0
+    a_frac: int = 0
+
+    def samples(self) -> np.ndarray:
+        """Decode the payload as fp32 samples on this frame's dtype/grid."""
+        return decode_samples(self.payload, self.dtype,
+                              self.a_int, self.a_frac)
+
+
+# -- encode / decode ----------------------------------------------------------
+
+def encode_frame(ftype: FrameType, tenant: str, seq: int,
+                 payload: bytes = b"",
+                 dtype: WireDtype = WireDtype.NONE,
+                 a_int: int = 0, a_frac: int = 0) -> bytes:
+    """Serialize one frame. Raises ValueError (not FrameError — encode
+    bugs are the caller's) on out-of-range fields."""
+    tid = tenant.encode("utf-8")
+    if not 1 <= len(tid) <= MAX_TENANT_ID:
+        raise ValueError(f"tenant id must encode to 1..{MAX_TENANT_ID} "
+                         f"bytes, got {len(tid)}")
+    if len(payload) > MAX_PAYLOAD:
+        raise ValueError(f"payload {len(payload)} bytes exceeds "
+                         f"MAX_PAYLOAD={MAX_PAYLOAD}")
+    if not 0 <= seq <= 0xFFFFFFFF:
+        raise ValueError(f"seq {seq} out of u32 range")
+    if not (0 <= a_int <= 255 and 0 <= a_frac <= 255):
+        raise ValueError(f"quant grid ({a_int},{a_frac}) out of u8 range")
+    head = _HEADER.pack(MAGIC, WIRE_VERSION, int(ftype), int(dtype),
+                        a_int, a_frac, len(tid), seq, len(payload))
+    body = head + tid + payload
+    return body + _CRC.pack(zlib.crc32(body) & 0xFFFFFFFF)
+
+
+def decode_frame(data: bytes) -> Frame:
+    """Parse one datagram into a `Frame`. Every failure raises a
+    `FrameError` subclass (see module docstring for the taxonomy)."""
+    if len(data) < MIN_FRAME:
+        raise BadLength(f"datagram {len(data)} bytes < minimum {MIN_FRAME}")
+    (magic, version, ftype, dtype, a_int, a_frac, tid_len, seq,
+     payload_len) = _HEADER.unpack_from(data, 0)
+    if magic != MAGIC:
+        raise BadMagic(f"bad magic {magic!r}")
+    if version != WIRE_VERSION:
+        raise BadVersion(f"wire version {version} != {WIRE_VERSION}")
+    total = _HEADER.size + tid_len + payload_len + _CRC.size
+    if len(data) != total:
+        raise BadLength(f"datagram {len(data)} bytes, header promises "
+                        f"{total}")
+    (crc,) = _CRC.unpack_from(data, total - _CRC.size)
+    if zlib.crc32(data[:total - _CRC.size]) & 0xFFFFFFFF != crc:
+        raise BadCRC("CRC-32 mismatch")
+    if tid_len < 1:
+        raise BadField("empty tenant id")
+    try:
+        ftype_e = FrameType(ftype)
+        dtype_e = WireDtype(dtype)
+    except ValueError as e:
+        raise BadField(str(e)) from None
+    try:
+        tenant = data[_HEADER.size:_HEADER.size + tid_len].decode("utf-8")
+    except UnicodeDecodeError as e:
+        raise BadField(f"tenant id not UTF-8: {e}") from None
+    payload = bytes(data[_HEADER.size + tid_len:
+                         _HEADER.size + tid_len + payload_len])
+    if dtype_e == WireDtype.BF16 and payload_len % 2:
+        raise BadField(f"bf16 payload length {payload_len} is odd")
+    if dtype_e == WireDtype.FP32 and payload_len % 4:
+        raise BadField(f"fp32 payload length {payload_len} not a "
+                       f"multiple of 4")
+    return Frame(ftype=ftype_e, tenant=tenant, seq=seq, payload=payload,
+                 dtype=dtype_e, a_int=a_int, a_frac=a_frac)
+
+
+# -- payload sample codecs ----------------------------------------------------
+
+def encode_samples(x: np.ndarray, dtype: WireDtype,
+                   a_int: int = 0, a_frac: int = 0) -> bytes:
+    """fp32 samples → payload bytes on the given wire dtype/grid.
+
+    INT8 matches `repro.kernels.cnn_eq.cnn_eq.requant_int8` bit-for-bit:
+    the multiply runs in float32 and np.round is round-half-to-even, the
+    same arithmetic the kernel's entry requant performs — so the decoded
+    (dequantized) samples requantize back to identical int8 codes."""
+    x = np.asarray(x, np.float32).reshape(-1)
+    if dtype == WireDtype.FP32:
+        return x.astype("<f4").tobytes()
+    if dtype == WireDtype.BF16:
+        return x.astype(_BF16).tobytes()
+    if dtype == WireDtype.INT8:
+        hi = float(2 ** (a_int + a_frac)) - 1.0
+        lo = -float(2 ** (a_int + a_frac))
+        q = np.clip(np.round(x * np.float32(2.0 ** a_frac)), lo, hi)
+        return q.astype(np.int8).tobytes()
+    raise ValueError(f"cannot encode samples as {dtype!r}")
+
+
+def decode_samples(payload: bytes, dtype: WireDtype,
+                   a_int: int = 0, a_frac: int = 0) -> np.ndarray:
+    """Payload bytes → fp32 samples (inverse of `encode_samples`; int8
+    dequantizes on the frame's Q(a_int).(a_frac) grid — exact, the scale
+    is a power of two)."""
+    if dtype == WireDtype.FP32:
+        return np.frombuffer(payload, dtype="<f4").astype(np.float32)
+    if dtype == WireDtype.BF16:
+        return np.frombuffer(payload, dtype=_BF16).astype(np.float32)
+    if dtype == WireDtype.INT8:
+        q = np.frombuffer(payload, dtype=np.int8)
+        return q.astype(np.float32) * np.float32(2.0 ** -a_frac)
+    raise ValueError(f"cannot decode samples from {dtype!r}")
+
+
+def samples_per_frame(dtype: WireDtype,
+                      max_payload: int = MAX_PAYLOAD) -> int:
+    """How many samples fit one frame at this wire dtype."""
+    width = {WireDtype.INT8: 1, WireDtype.BF16: 2, WireDtype.FP32: 4}[dtype]
+    return max_payload // width
+
+
+def wire_grid(engine) -> tuple:
+    """(a_int, a_frac) of an engine's FIRST layer activation format — the
+    int8 on-wire quant grid (same extraction as the int8 halo exchange,
+    `repro.parallel.halo`). (0, 0) when the engine carries no formats."""
+    formats = getattr(engine, "formats", None)
+    if not formats:
+        return (0, 0)
+    _, _, a_int, a_frac = formats[0]
+    return (int(a_int), int(a_frac))

@@ -27,7 +27,7 @@ Layers:
 from .chunker import CarrySnapshot, ChunkPlan, StreamChunker
 from .fleet import FleetRuntime, FleetWorker, best_mesh, worker_devices
 from .loadgen import (chop, drift_streams, random_waveforms, replay,
-                      replay_adaptive)
+                      replay_adaptive, replay_wire)
 from .pool import EnginePool
 from .recovery import (CorruptOutput, DegradationController, DeviceLost,
                        Fault, FaultPlan, InjectedFault, LaunchTimeout,
@@ -45,4 +45,5 @@ __all__ = ["AsyncServeRuntime", "BatchPolicy", "CarrySnapshot", "ChunkPlan",
            "Session", "SessionManager", "StreamChunker", "TenantShedError",
            "TenantSpec", "TrafficStats", "best_mesh", "chop",
            "drift_streams", "random_waveforms", "replay", "replay_adaptive",
+           "replay_wire",
            "worker_devices"]

@@ -161,3 +161,67 @@ def replay(runtime: Union[ServeRuntime, AsyncServeRuntime],
                      if t in runtime.sessions)
     return {"elapsed_s": elapsed, "total_syms": total_syms,
             "agg_syms_per_s": total_syms / elapsed if elapsed else 0.0}
+
+
+def replay_wire(gateway, client, streams: Dict[str, Sequence[np.ndarray]],
+                burst: int = 1, max_rounds: int = 100_000
+                ) -> Dict[str, object]:
+    """Round-robin replay THROUGH THE WIRE (the frame-emitting mode).
+
+    Like `replay`, but every chunk crosses a transport as a DATA frame:
+    `client` is a `repro.net.NetClient` whose tenants are attached (or
+    wire-opened), `gateway` the `repro.net.NetGateway` serving the
+    runtime on the other end. Single-threaded cooperative driving —
+    client sends ride the credit window, the gateway polls/pumps/emits,
+    and a stalled round (client credit-blocked while launches wait on
+    policy) forces a `settle()` so progress is deadlock-free. Tenants
+    whose wire errors (NACK / ingress `stream_gap`) surface stop being
+    waited on — the error is in the returned `errors` map, never a hang.
+
+    `burst` chunks per tenant go out between polls (burst>1 keeps several
+    datagrams in flight so an impaired wire actually gets to reorder).
+
+    Returns wall-clock accounting plus per-tenant received symbol counts
+    and surfaced wire errors."""
+    ids = list(streams)
+    iters = {t: iter(streams[t]) for t in ids}
+    live = list(ids)          # ordered: send order must be deterministic
+    waiting = list(ids)       # (impairment schedules index datagrams)
+    errors: Dict[str, str] = {}
+    t0 = time.perf_counter()
+    rounds = 0
+    while waiting:
+        rounds += 1
+        if rounds > max_rounds:
+            raise RuntimeError(f"replay_wire stalled: {sorted(waiting)} "
+                               f"never finished")
+        activity = 0
+        for t in list(live):
+            for _ in range(max(1, burst)):   # burst>1: frames actually
+                chunk = next(iters[t], None)  # share the wire and reorder
+                if chunk is None:
+                    live.remove(t)
+                    client.finish(t)
+                    break
+                client.send_samples(t, chunk)
+            activity += 1
+        activity += gateway.step(max_datagrams=256)
+        activity += client.poll(max_datagrams=256)
+        for t in list(waiting):
+            err = (client.errors(t) or [None])[0] or gateway.ingress.error(t)
+            if err:
+                errors[t] = str(err)
+                waiting.remove(t)
+            elif client.done(t):
+                waiting.remove(t)
+        if not activity and waiting:
+            gateway.settle()
+            if not client.poll(max_datagrams=256):
+                gateway.ingress.flush_gaps()
+    elapsed = time.perf_counter() - t0
+    received = {t: int(client.symbols(t).shape[0]) for t in ids
+                if t in client.streams}
+    total_syms = sum(received.values())
+    return {"elapsed_s": elapsed, "total_syms": total_syms,
+            "agg_syms_per_s": total_syms / elapsed if elapsed else 0.0,
+            "rounds": rounds, "received": received, "errors": errors}

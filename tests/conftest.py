@@ -13,6 +13,37 @@ def repo_src():
     return os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
 
 
+@pytest.fixture
+def loopback_wire():
+    """Factory for deterministic impaired loopback transport pairs — the
+    shared wire every packetized-subsystem test drives (tests/test_net.py
+    today; multi-host fleet RPC is the ROADMAP follow-on).
+
+    make(seed=0, reorder_window=0, dup_prob=0.0, drop_idx=(),
+         impair_both=True) -> (client_end, server_end): the client→server
+    direction runs the seeded `WireSchedule`; with impair_both the
+    server→client direction runs it too under seed+1. Endpoints are
+    closed at teardown."""
+    from repro.net.transport import WireSchedule, loopback_pair
+    made = []
+
+    def make(seed: int = 0, reorder_window: int = 0, dup_prob: float = 0.0,
+             drop_idx=(), drop_prob: float = 0.0, impair_both: bool = True):
+        fwd = WireSchedule(seed=seed, reorder_window=reorder_window,
+                           dup_prob=dup_prob, drop_idx=drop_idx,
+                           drop_prob=drop_prob)
+        back = (WireSchedule(seed=seed + 1, reorder_window=reorder_window,
+                             dup_prob=dup_prob)
+                if impair_both else None)
+        client_end, server_end = loopback_pair(fwd, back)
+        made.extend((client_end, server_end))
+        return client_end, server_end
+
+    yield make
+    for t in made:
+        t.close()
+
+
 def run_subprocess_devices(code: str, n_devices: int, repo_src: str,
                            timeout: int = 600) -> str:
     """Run `code` in a fresh python with n_devices host CPU devices."""
