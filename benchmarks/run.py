@@ -18,6 +18,8 @@ One benchmark per paper table/figure (see DESIGN.md §6):
                              → BENCH_obs.json
     bench_net       wire parity: packetized data+control plane
                              → BENCH_net.json
+    bench_link      signal health: link estimators + SLO closed loop
+                             → BENCH_link.json
     bench_timing    Fig. 12  timing model vs simulated measurement
     bench_platform  Fig. 13-15  CPU measured / TPU roofline-projected
     bench_roofline  Table 1 / §Roofline  aggregate the dry-run artifacts
@@ -48,13 +50,19 @@ emitted chunk), and the wire-parity claim (`criteria.net_ok` in
 `BENCH_net.json` — symbols served through the packetized
 NetIngress→runtime→NetEgress path over a reordering+duplicating
 loopback wire stay bitwise vs offline, exactly-once, with the control
-plane acking) are deterministic under their fixed seeds, so their
-failure is never noise. The fault, fleet, obs and net gates carry no
-throughput rates at all — they are purely the hard criteria.
+plane acking), and the signal-health claim (`criteria.link_ok` in
+`BENCH_link.json` — the decision-directed SNR estimate tracks a true
+channel SNR ramp, an SLO breach latches during quality degradation and
+triggers an event-driven fine-tune whose promotion retires the alert,
+and serving with link estimation + SLOs + tracing ON stays bitwise vs
+offline on every fused backend) are deterministic under their fixed
+seeds, so their failure is never noise. The fault, fleet, obs, net and
+link gates carry no throughput rates at all — they are purely the hard
+criteria.
 Compare like with like: the committed baseline must come from the same
 host class AND be recorded in the gate's in-process order
-(`--only engine serve adapt fault fleet obs net`); CPU hosts run the
-kernels in interpret mode.
+(`--only engine serve adapt fault fleet obs net link`); CPU hosts run
+the kernels in interpret mode.
 """
 from __future__ import annotations
 
@@ -67,9 +75,9 @@ import time
 import traceback
 
 from . import (bench_adapt, bench_dop, bench_dse, bench_engine,
-               bench_fault, bench_fleet, bench_net, bench_obs,
-               bench_platform, bench_proakis, bench_quant, bench_roofline,
-               bench_serve, bench_stream, bench_timing)
+               bench_fault, bench_fleet, bench_link, bench_net,
+               bench_obs, bench_platform, bench_proakis, bench_quant,
+               bench_roofline, bench_serve, bench_stream, bench_timing)
 from .common import REPORT_DIR
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
@@ -200,6 +208,33 @@ def _net_criteria(rep: dict):
             f"control_ok={crit.get('control_ok')})"]
 
 
+def _link_rates(rep: dict) -> dict:
+    """The link gate tracks NO throughput rates — estimation is host-side
+    numpy; the whole gate is the hard criterion below."""
+    return {}
+
+
+def _link_criteria(rep: dict):
+    """Hard (host-independent) gate on the fresh link report: the
+    decision-directed SNR estimate must track the true channel SNR ramp,
+    the SLO breach must latch during the degradation and trigger the
+    event-driven fine-tune, the promotion must retire the alert, and
+    serving with link + SLO + tracing ON must stay bitwise vs offline on
+    every fused backend. Deterministic under its fixed seeds — a failure
+    is a code regression, never noise."""
+    crit = rep.get("criteria", {})
+    if crit.get("link_ok", False):
+        return []
+    return [f"link: signal-health criterion failed "
+            f"(snr_corr={crit.get('snr_corr', 0.0):.2f} "
+            f"drop={crit.get('snr_est_drop_db', 0.0):.2f}dB "
+            f"breach_fired={crit.get('breach_fired')} "
+            f"promoted={crit.get('promoted')} "
+            f"resolved={crit.get('resolved')} "
+            f"final_clear={crit.get('final_clear')} "
+            f"bitwise={crit.get('bitwise')})"]
+
+
 def _default_tol() -> float:
     """Host-class-aware gate width. Real accelerators get the tight 10%
     gate; interpret-mode CPU hosts run the kernels ~50× slower with
@@ -268,7 +303,10 @@ def check(tol: float | None = None) -> int:
          _obs_criteria),
         ("net", REPO_ROOT / "BENCH_net.json",
          lambda: bench_net.run(out_path=None), _net_rates,
-         _net_criteria))
+         _net_criteria),
+        ("link", REPO_ROOT / "BENCH_link.json",
+         lambda: bench_link.run(out_path=None), _link_rates,
+         _link_criteria))
     # validate the configuration before burning minutes of re-measurement
     missing = [p.name for _, p, _, _, _ in gates if not p.exists()]
     if missing:
@@ -371,6 +409,7 @@ def main(argv=None) -> int:
         ("fleet", lambda: bench_fleet.run()),
         ("obs", lambda: bench_obs.run()),
         ("net", lambda: bench_net.run()),
+        ("link", lambda: bench_link.run()),
         ("stream", lambda: bench_stream.run()),
         ("dop", lambda: bench_dop.run()),
         ("roofline", lambda: bench_roofline.run()),

@@ -34,14 +34,14 @@ makes hot-swaps safe under concurrent traffic; pair it with the sync
 from __future__ import annotations
 
 import dataclasses
-import re
 import threading
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional
 
 import jax
 import numpy as np
 
+from ..obs.metrics import safe_segment
 from ..serve.session import Session, TenantSpec
 from .collector import SampleCollector
 from .shadow import PromotionPolicy, ShadowReport, shadow_evaluate
@@ -91,6 +91,8 @@ class _TenantState:
     key: jax.Array
     last_adapt_syms: int = 0
     check_rollback: bool = False     # set after a promotion
+    requested: bool = False          # event-driven bypass of the cadence
+                                     # guard (request_adapt / SLO breach)
 
 
 class OnlineAdapter:
@@ -120,6 +122,10 @@ class OnlineAdapter:
         # the window wraps (errors_total - len(errors) = dropped).
         self.errors: Deque[BaseException] = deque(maxlen=errors_max)
         self.errors_total = 0
+        # closed-loop seam (repro.obs.slo): called with the tenant id after
+        # every promotion — an SloEngine resolves the tenant's latched
+        # breaches here, completing breach → request_adapt → promote → clear
+        self.on_promoted: Optional[Callable[[str], None]] = None
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
         self._m_actions: Dict[str, object] = {}
@@ -151,9 +157,16 @@ class OnlineAdapter:
         col = SampleCollector(n_os=spec.cfg.n_os, levels=spec.cfg.levels,
                               capacity_syms=self.policy.eval_capacity,
                               eval_every=self.policy.eval_every)
-        session.tap = col.on_segment
+        session.add_tap(col.on_segment)
         self._states[spec.tenant_id] = _TenantState(collector=col, key=sub)
         return session
+
+    def request_adapt(self, tenant_id: str) -> None:
+        """Ask for a fine-tune on the NEXT step regardless of cadence — the
+        event-driven entry point (SLO breach handlers call this). The data
+        sufficiency guard still applies: a request cannot conjure training
+        symbols, only skip the adapt_every_syms wait."""
+        self._states[tenant_id].requested = True
 
     def feed_pilots(self, tenant_id: str, syms: np.ndarray) -> None:
         """Queue true tx symbols (stream order) as labels for the tenant's
@@ -187,13 +200,15 @@ class OnlineAdapter:
         """Publish one cycle's outcome into the runtime's obs hub: action
         counters, per-tenant shadow-BER gauges, and trace instants for the
         actions that change the live stream (promote / rollback)."""
+        if rep.action == "promoted" and self.on_promoted is not None:
+            self.on_promoted(rep.tenant_id)
         if self.obs is None:
             return
         m = self._m_actions.get(rep.action)
         if m is not None:
             m.inc()
         # tenant ids are user-chosen; keep only metric-name-safe chars
-        tid = re.sub(r"[^A-Za-z0-9_\-]", "_", rep.tenant_id) or "_"
+        tid = safe_segment(rep.tenant_id)
         scope = self.obs.scope("adapt")
         scope.gauge(f"{tid}.weight_epoch").set(rep.weight_epoch)
         if rep.shadow is not None:
@@ -230,13 +245,15 @@ class OnlineAdapter:
             if not np.isnan(rb.ber_active):
                 st.check_rollback = False      # verdict reached: it holds
 
-        # 2. cadence + data sufficiency
+        # 2. cadence + data sufficiency — an explicit request (SLO breach)
+        # waives the cadence wait but never the data floor
         train_rx, train_syms, _, _ = st.collector.training_view()
         fresh = st.collector.total_syms - st.last_adapt_syms
-        if (fresh < pol.adapt_every_syms
+        if ((fresh < pol.adapt_every_syms and not st.requested)
                 or train_syms.shape[0] < max(pol.min_train_syms,
                                              self.fine_tune.seq_syms + 1)):
             return AdaptReport(tid, "idle", session.weight_epoch)
+        st.requested = False
 
         # 3. fine-tune from the ACTIVE params (weight-only, frozen formats)
         st.key, ktrain = jax.random.split(st.key)

@@ -108,8 +108,13 @@ class DriftingProakis:
     """Proakis-B magnetic-recording channel under tap rotation + SNR ramp.
 
     cfg:          the stationary `ProakisConfig` (t=0 state).
-    taps_to:      impulse response at t=1 (default: Proakis-B rotated one
-                  position — the channel's energy migrates to the
+    taps_from:    impulse response at t=0 (default: Proakis-B). Passing
+                  e.g. (1, 0, 0) with taps_to equal gives an AWGN-only
+                  channel where ONLY the SNR ramp drifts — the
+                  noise-dominated operating point the link-estimator
+                  calibration (bench_link) needs.
+    taps_to:      impulse response at t=1 (default: the base taps rotated
+                  one position — the channel's energy migrates to the
                   postcursor, a shape a frozen equalizer was never
                   trained on). Blends linearly with the base taps and is
                   renormalized to unit energy at every t, so only the ISI
@@ -119,9 +124,11 @@ class DriftingProakis:
 
     def __init__(self, cfg: ProakisConfig = ProakisConfig(),
                  taps_to: Tuple[float, ...] = None,
-                 snr_delta_db: float = -4.0):
+                 snr_delta_db: float = -4.0,
+                 taps_from: Tuple[float, ...] = None):
         self.cfg = cfg
-        h0 = np.asarray(PROAKIS_B, np.float32)
+        h0 = (np.asarray(taps_from, np.float32) if taps_from is not None
+              else np.asarray(PROAKIS_B, np.float32))
         h1 = (np.asarray(taps_to, np.float32) if taps_to is not None
               else np.roll(h0, 1))
         self._h0 = h0 / np.linalg.norm(h0)

@@ -211,7 +211,14 @@ def _fused_call(kernel_body, x, weights, strides, tile_m, interpret,
     n_pos = width // total_stride                  # final-layer positions
     n_syms = n_pos * v_parallel
 
-    tile_m = min(tile_m, max(1, n_pos))
+    # Always tile at the REQUESTED tile_m — even for a stream shorter than
+    # one tile. Shrinking the tile to n_pos would change the conv dot shapes
+    # (and with them the fp32 accumulation splits) relative to a streaming
+    # launch that buckets at full tile_m, costing 1-2 ULP in end-padding
+    # window positions and breaking chunked==offline bitwise equality
+    # (contract #4). Short streams just compute a few extra padded positions
+    # that the final n_syms slice drops.
+    tile_m = max(1, tile_m)
     n_tiles = pl.cdiv(n_pos, tile_m)
     halo = receptive_halo(kernels, strides)
     in_tile = _layer_spans(tile_m, kernels, strides)[0]

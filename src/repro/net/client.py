@@ -23,8 +23,9 @@ a rejected command.
 """
 from __future__ import annotations
 
+import time
 from collections import deque
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
@@ -55,13 +56,22 @@ class _ClientStream:
 
 class NetClient:
     def __init__(self, transport, reorder_window: int =
-                 DEFAULT_REORDER_WINDOW):
+                 DEFAULT_REORDER_WINDOW, tracing: bool = False,
+                 clock: Callable[[], float] = time.perf_counter):
         self.transport = transport
         self.window = int(reorder_window)
         self.streams: Dict[str, _ClientStream] = {}
         self._acks: Dict[int, dict] = {}
         self._cmd_seq = 0
         self.decode_errors = 0
+        # cross-wire trace propagation: with tracing on, every DATA frame
+        # goes out as wire version 2 carrying (trace_id, clock()) so the
+        # server's chunk spans can start at the CLIENT's send instant.
+        # The clock must share the server tracer's base for the Chrome
+        # lane to line up (both default to time.perf_counter in-process).
+        self.tracing = bool(tracing)
+        self.clock = clock
+        self._trace_seq = 0
 
     # -- tenant attach / data path -------------------------------------------
 
@@ -83,9 +93,16 @@ class NetClient:
         a_int, a_frac = s.grid
         payload = encode_samples(np.asarray(samples, np.float32),
                                  s.wire_dtype, a_int, a_frac)
+        trace_id = None
+        t_client = 0.0
+        if self.tracing:
+            self._trace_seq += 1
+            trace_id = self._trace_seq
+            t_client = self.clock()
         s.backlog.append(encode_frame(FrameType.DATA, tenant, s.tx_seq,
                                       payload, dtype=s.wire_dtype,
-                                      a_int=a_int, a_frac=a_frac))
+                                      a_int=a_int, a_frac=a_frac,
+                                      trace_id=trace_id, t_client=t_client))
         s.tx_seq += 1
         self._flush(tenant, s)
 

@@ -7,7 +7,7 @@ this module is the TPU-serving analogue — one datagram = one frame:
 
     offset  size  field
     0       2     magic       b"EQ"
-    2       1     version     WIRE_VERSION (1)
+    2       1     version     1, or 2 when the trace extension is present
     3       1     ftype       FrameType (DATA/EOS/CREDIT/NACK/CTRL/ACK)
     4       1     dtype       payload sample dtype (NONE/INT8/BF16/FP32)
     5       1     a_int       int8 payload quant grid, integer bits
@@ -16,6 +16,8 @@ this module is the TPU-serving analogue — one datagram = one frame:
     8       4     seq         u32 per-tenant stream sequence number
     12      4     payload_len u32 payload byte length
     16      ...   tenant id   UTF-8
+    ...     16    trace ext   version 2 only: u64 trace id + f64 client
+                              send timestamp (cross-wire span propagation)
     ...     ...   payload
     ...     4     crc32       CRC-32 over every preceding byte
 
@@ -23,6 +25,11 @@ All integers little-endian. Every decode failure raises a typed
 `FrameError` subclass — never a bare crash, and a corrupted frame can
 never decode to a silently-wrong payload (CRC-32 detects all single-bit
 flips; structural damage fails the length/field validation first).
+
+Version 2 is version 1 plus a fixed 16-byte trace extension between the
+tenant id and the payload; a version-1-only decoder (`decode_frame(...,
+versions=(1,))`) rejects v2 frames LOUDLY with `BadVersion` — per the
+total-decode contract it can never misread the extension as payload.
 
 Payload sample codecs (`encode_samples` / `decode_samples`):
 
@@ -42,6 +49,7 @@ import dataclasses
 import enum
 import struct
 import zlib
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -53,11 +61,14 @@ except ModuleNotFoundError:            # pragma: no cover — jax guarantees it
 
 MAGIC = b"EQ"
 WIRE_VERSION = 1
+WIRE_VERSION_TRACE = 2            # v1 + 16-byte trace extension
+WIRE_VERSIONS = (WIRE_VERSION, WIRE_VERSION_TRACE)
 MAX_TENANT_ID = 64
 # fits a single unfragmented UDP datagram (65507 max) with header slack
 MAX_PAYLOAD = 60_000
 
 _HEADER = struct.Struct("<2sBBBBBBII")          # 16 bytes
+_TRACE_EXT = struct.Struct("<Qd")               # 16 bytes (v2 frames only)
 _CRC = struct.Struct("<I")
 MIN_FRAME = _HEADER.size + 1 + _CRC.size        # 1-byte tenant id, no payload
 
@@ -119,6 +130,9 @@ class Frame:
     dtype: WireDtype = WireDtype.NONE
     a_int: int = 0
     a_frac: int = 0
+    # version-2 trace extension: present ⟺ trace_id is not None
+    trace_id: Optional[int] = None
+    t_client: float = 0.0
 
     def samples(self) -> np.ndarray:
         """Decode the payload as fp32 samples on this frame's dtype/grid."""
@@ -131,9 +145,12 @@ class Frame:
 def encode_frame(ftype: FrameType, tenant: str, seq: int,
                  payload: bytes = b"",
                  dtype: WireDtype = WireDtype.NONE,
-                 a_int: int = 0, a_frac: int = 0) -> bytes:
+                 a_int: int = 0, a_frac: int = 0,
+                 trace_id: Optional[int] = None,
+                 t_client: float = 0.0) -> bytes:
     """Serialize one frame. Raises ValueError (not FrameError — encode
-    bugs are the caller's) on out-of-range fields."""
+    bugs are the caller's) on out-of-range fields. Passing a `trace_id`
+    emits a version-2 frame carrying the 16-byte trace extension."""
     tid = tenant.encode("utf-8")
     if not 1 <= len(tid) <= MAX_TENANT_ID:
         raise ValueError(f"tenant id must encode to 1..{MAX_TENANT_ID} "
@@ -145,24 +162,37 @@ def encode_frame(ftype: FrameType, tenant: str, seq: int,
         raise ValueError(f"seq {seq} out of u32 range")
     if not (0 <= a_int <= 255 and 0 <= a_frac <= 255):
         raise ValueError(f"quant grid ({a_int},{a_frac}) out of u8 range")
-    head = _HEADER.pack(MAGIC, WIRE_VERSION, int(ftype), int(dtype),
+    ext = b""
+    version = WIRE_VERSION
+    if trace_id is not None:
+        if not 0 <= trace_id <= 0xFFFFFFFFFFFFFFFF:
+            raise ValueError(f"trace id {trace_id} out of u64 range")
+        ext = _TRACE_EXT.pack(trace_id, float(t_client))
+        version = WIRE_VERSION_TRACE
+    head = _HEADER.pack(MAGIC, version, int(ftype), int(dtype),
                         a_int, a_frac, len(tid), seq, len(payload))
-    body = head + tid + payload
+    body = head + tid + ext + payload
     return body + _CRC.pack(zlib.crc32(body) & 0xFFFFFFFF)
 
 
-def decode_frame(data: bytes) -> Frame:
+def decode_frame(data: bytes,
+                 versions: Tuple[int, ...] = WIRE_VERSIONS) -> Frame:
     """Parse one datagram into a `Frame`. Every failure raises a
-    `FrameError` subclass (see module docstring for the taxonomy)."""
+    `FrameError` subclass (see module docstring for the taxonomy).
+
+    `versions` narrows what this decoder accepts — a pre-trace deployment
+    is `decode_frame(data, versions=(1,))` and rejects v2 frames with
+    `BadVersion` instead of misparsing the extension as payload."""
     if len(data) < MIN_FRAME:
         raise BadLength(f"datagram {len(data)} bytes < minimum {MIN_FRAME}")
     (magic, version, ftype, dtype, a_int, a_frac, tid_len, seq,
      payload_len) = _HEADER.unpack_from(data, 0)
     if magic != MAGIC:
         raise BadMagic(f"bad magic {magic!r}")
-    if version != WIRE_VERSION:
-        raise BadVersion(f"wire version {version} != {WIRE_VERSION}")
-    total = _HEADER.size + tid_len + payload_len + _CRC.size
+    if version not in WIRE_VERSIONS or version not in versions:
+        raise BadVersion(f"wire version {version} not in {versions}")
+    ext_len = _TRACE_EXT.size if version == WIRE_VERSION_TRACE else 0
+    total = _HEADER.size + tid_len + ext_len + payload_len + _CRC.size
     if len(data) != total:
         raise BadLength(f"datagram {len(data)} bytes, header promises "
                         f"{total}")
@@ -180,15 +210,21 @@ def decode_frame(data: bytes) -> Frame:
         tenant = data[_HEADER.size:_HEADER.size + tid_len].decode("utf-8")
     except UnicodeDecodeError as e:
         raise BadField(f"tenant id not UTF-8: {e}") from None
-    payload = bytes(data[_HEADER.size + tid_len:
-                         _HEADER.size + tid_len + payload_len])
+    trace_id: Optional[int] = None
+    t_client = 0.0
+    if ext_len:
+        trace_id, t_client = _TRACE_EXT.unpack_from(
+            data, _HEADER.size + tid_len)
+    off = _HEADER.size + tid_len + ext_len
+    payload = bytes(data[off:off + payload_len])
     if dtype_e == WireDtype.BF16 and payload_len % 2:
         raise BadField(f"bf16 payload length {payload_len} is odd")
     if dtype_e == WireDtype.FP32 and payload_len % 4:
         raise BadField(f"fp32 payload length {payload_len} not a "
                        f"multiple of 4")
     return Frame(ftype=ftype_e, tenant=tenant, seq=seq, payload=payload,
-                 dtype=dtype_e, a_int=a_int, a_frac=a_frac)
+                 dtype=dtype_e, a_int=a_int, a_frac=a_frac,
+                 trace_id=trace_id, t_client=t_client)
 
 
 # -- payload sample codecs ----------------------------------------------------

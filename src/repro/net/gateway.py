@@ -244,6 +244,19 @@ class NetIngress:
         if state.t_oldest is None:
             state.t_oldest = self._clock()
         state.consumed += 1
+        if frame.trace_id is not None and self._tracer.enabled:
+            # v2 trace extension → session context, BEFORE submit so the
+            # chunk span this submit opens picks it up at enqueue. With
+            # tracing off nothing is queued (the deque would never drain)
+            sessions = getattr(self.runtime, "sessions", None)
+            try:
+                sess = (sessions.get(tenant)
+                        if sessions is not None else None)
+            except KeyError:           # raced a close; context just drops
+                sess = None
+            if sess is not None:
+                sess.trace_ctx.append(
+                    (frame.trace_id, frame.t_client, self._clock()))
         handle = self.runtime.submit(tenant, samples)
         if handle is not None:
             self.egress.track(tenant, handle, 1, state.t_oldest)

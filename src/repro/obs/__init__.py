@@ -12,6 +12,13 @@ One instrumentation spine across every layer built in PRs 1-7:
     `trace_event` JSON (Perfetto-viewable).
   * `hub`      — the `Observability` facade (registry + tracer + `Retention`
     policy) that runtimes accept via their `obs=` parameter.
+  * `link`     — streaming per-tenant link-quality estimators (decision-
+    directed EVM / SNR / symbol-error proxy / confidence histograms) fed
+    from the `Session.tap` seam, published as `link.<tenant>.*`.
+  * `slo`      — declarative per-tenant `SloRule`s evaluated against the
+    registry with hysteresis-latched breach/clear edges, a bounded alert
+    ledger in `snapshot()`, and closed-loop hooks (SLO breach → on-demand
+    adaptation; promotion resolves the alert).
   * `report`   — `python -m repro.obs.report` console summary from a live
     runtime snapshot or an exported JSON file.
 
@@ -20,7 +27,10 @@ existing `ChunkPlan` objects, all hot-path hooks are no-ops when tracing is
 off, and the chaos parity tests run bitwise-equal with tracing on.
 """
 from .hub import Observability, Retention
-from .metrics import Counter, Gauge, Histogram, MetricsRegistry, Scope
+from .link import LinkEstimate, LinkMonitor
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry, Scope,
+                      safe_segment)
+from .slo import SloEngine, SloRule
 from .trace import PHASES, ChunkSpan, Tracer
 
 __all__ = [
@@ -31,6 +41,11 @@ __all__ = [
     "Histogram",
     "MetricsRegistry",
     "Scope",
+    "safe_segment",
+    "LinkEstimate",
+    "LinkMonitor",
+    "SloEngine",
+    "SloRule",
     "PHASES",
     "ChunkSpan",
     "Tracer",

@@ -39,6 +39,14 @@ def _check_name(name: str) -> str:
     return name
 
 
+def safe_segment(raw: str) -> str:
+    """Map an arbitrary string (tenant ids are user-chosen) to one valid
+    metric-name segment — the one sanitization every layer that keys
+    metrics by tenant must share (`adapt`, `link`, `slo`), or their
+    subtrees land under different names for the same tenant."""
+    return re.sub(r"[^A-Za-z0-9_\-]", "_", raw) or "_"
+
+
 class Counter:
     """Monotonic counter. `inc` only; negative increments are rejected."""
 
@@ -111,10 +119,36 @@ class Histogram:
             if v > self._max:
                 self._max = v
 
+    def observe_many(self, vs) -> None:
+        """Record a batch of observations under ONE lock acquisition — the
+        shape hot callers like the link-quality tap need (one served chunk
+        is hundreds of per-symbol confidences)."""
+        xs = [float(v) for v in vs]
+        if not xs:
+            return
+        with self._lock:
+            self._window.extend(xs)
+            self._count += len(xs)
+            self._sum += sum(xs)
+            mn, mx = min(xs), max(xs)
+            if mn < self._min:
+                self._min = mn
+            if mx > self._max:
+                self._max = mx
+
     @property
     def count(self) -> int:
         with self._lock:
             return self._count
+
+    def window_mean(self) -> float:
+        """Mean over the current window (NaN when empty) — the value SLO
+        rules evaluate for histogram-valued metrics (`summary()`'s mean is
+        lifetime, which would never recover after a long degradation)."""
+        with self._lock:
+            if not self._window:
+                return math.nan
+            return sum(self._window) / len(self._window)
 
     def quantile(self, q: float) -> float:
         """Linear-interpolated quantile over the current window (NaN when
@@ -206,6 +240,14 @@ class MetricsRegistry:
                 raise ValueError(
                     f"metric {name!r} already registered as an instrument")
             self._callbacks[name] = fn
+
+    def instrument(self, name: str) -> Optional[Any]:
+        """The live instrument registered under `name`, or None — the
+        read-only lookup SLO rule evaluation uses (callbacks are not
+        instruments and resolve to None: a rule cannot breach on a lazy
+        provider whose evaluation might itself throw)."""
+        with self._lock:
+            return self._metrics.get(name)
 
     def scope(self, prefix: str) -> "Scope":
         return Scope(self, _check_name(prefix))

@@ -194,6 +194,82 @@ def _adapt_section(adapt: Dict[str, Any]) -> List[str]:
     return out
 
 
+def _net_section(net: Dict[str, Any]) -> List[str]:
+    out = ["[net]"]
+    frames = []
+    for k in ("frames_in", "frames_out", "frames_dropped", "frames_parked"):
+        if k in net:
+            frames.append(f"{k.split('_', 1)[1]}={_fmt(net[k])}")
+    if frames:
+        out.append("  frames: " + "  ".join(frames))
+    wire = []
+    for k in ("crc_errors", "duplicates", "reordered", "gaps",
+              "nacks_sent", "credits_granted"):
+        if k in net:
+            wire.append(f"{k}={_fmt(net[k])}")
+    if wire:
+        out.append("  wire:   " + "  ".join(wire))
+    line = _hist_line("ingress_to_emit_s", net.get("ingress_to_emit_s"))
+    if line:
+        out.append(line)
+    return out
+
+
+def _link_section(link: Dict[str, Any]) -> List[str]:
+    out = ["[link]"]
+    for tid, node in sorted(link.items()):
+        if not isinstance(node, dict):
+            continue
+        parts = []
+        for k in ("snr_db", "evm", "ser_proxy"):
+            if k in node:
+                parts.append(f"{k}={_fmt(node[k])}")
+        for k in ("syms", "segments"):
+            if k in node:
+                parts.append(f"{k}={_fmt(node[k])}")
+        out.append(f"    {tid:<12} " + "  ".join(parts))
+        life = node.get("lifetime")
+        if isinstance(life, dict):
+            out.append("    " + " " * 13 + "lifetime: " + "  ".join(
+                f"{k}={_fmt(v)}" for k, v in sorted(life.items())))
+        line = _hist_line("confidence", node.get("confidence"))
+        if line:
+            out.append("  " + line)
+    return out
+
+
+def _slo_section(slo: Dict[str, Any]) -> List[str]:
+    out = ["[slo]"]
+    head = []
+    for k in ("rules", "watched", "breached"):
+        if k in slo and not isinstance(slo[k], dict):
+            head.append(f"{k}={_fmt(slo[k])}")
+    if head:
+        out.append("  " + "  ".join(head))
+    state = slo.get("state")
+    if isinstance(state, dict):
+        out.append(f"  alerts: total={_fmt(state.get('alerts_total', 0))}"
+                   f"  dropped={_fmt(state.get('alerts_dropped', 0))}")
+        latches = state.get("latches")
+        if isinstance(latches, dict):
+            for name, l in sorted(latches.items()):
+                if isinstance(l, dict) and l.get("breached"):
+                    out.append(f"    BREACHED {name}  "
+                               f"value={_fmt(l.get('value'))}")
+    alerts = slo.get("alerts")
+    if isinstance(alerts, list) and alerts:
+        out.append("  ledger (recent):")
+        for a in alerts[-5:]:
+            if isinstance(a, dict):
+                out.append(f"    {a.get('state', '?'):<9}"
+                           f" {a.get('rule', '?')}"
+                           f" [{a.get('tenant') or '-'}]"
+                           f"  {a.get('metric', '')}"
+                           f"  value={_fmt(a.get('value'))}"
+                           f" vs {_fmt(a.get('threshold'))}")
+    return out
+
+
 def _trace_section(trace: Dict[str, Any]) -> List[str]:
     out = ["[trace]"]
     out.append("  " + "  ".join(
@@ -220,6 +296,12 @@ def render(snapshot: Dict[str, Any]) -> str:
         lines += _fleet_section(snapshot[k])
     if isinstance(snapshot.get("adapt"), dict):
         lines += _adapt_section(snapshot["adapt"])
+    if isinstance(snapshot.get("net"), dict):
+        lines += _net_section(snapshot["net"])
+    if isinstance(snapshot.get("link"), dict):
+        lines += _link_section(snapshot["link"])
+    if isinstance(snapshot.get("slo"), dict):
+        lines += _slo_section(snapshot["slo"])
     if isinstance(snapshot.get("trace"), dict):
         lines += _trace_section(snapshot["trace"])
     if not lines:

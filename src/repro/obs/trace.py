@@ -178,6 +178,10 @@ class Tracer:
         metadata name record; every sealed span renders as a top-level "X"
         complete event (submit->emit) stacked over per-phase "X" children,
         span child events and runtime instants render as "i" instants.
+        A span carrying cross-wire context (`client_send` events from the
+        v2 frame extension) additionally renders a "wire" slice from the
+        earliest client send to submit, so the lane reads
+        client -> ingress -> launch -> emit end to end.
         Timestamps are microseconds relative to tracer construction.
         """
         spans = self.sealed_spans(tenant)
@@ -211,6 +215,15 @@ class Tracer:
                              "width": s.width,
                              "attempts": dict(s.attempts)},
                 })
+                sends = [t for name, t, _ in s.events
+                         if name == "client_send"]
+                if sends and min(sends) < start:
+                    events.append({
+                        "name": "wire", "ph": "X", "pid": 0, "tid": tid,
+                        "ts": us(min(sends)),
+                        "dur": max(0.0, (start - min(sends)) * 1e6),
+                        "args": {"frames": len(sends)},
+                    })
                 for a, b in zip(PHASES[:-1], PHASES[1:]):
                     events.append({
                         "name": a, "ph": "X", "pid": 0, "tid": tid,

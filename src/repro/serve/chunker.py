@@ -34,11 +34,14 @@ engine. It hands out `ChunkPlan`s: (engine input row, positions to skip,
 positions to emit); the micro-batcher pads plans from many tenants to a
 common width bucket and runs them as ONE stacked fused launch.
 
-One boundary: the bitwise contract is against an offline call that
-actually tiles at `tile_m` — for a TOTAL stream shorter than one tile the
-offline kernel shrinks its tile to the stream (`tile_m = min(tile_m,
-n_pos)` in `_fused_call`) while serve launches keep full-tile buckets, so
-such micro-streams agree to ~1 ULP instead (int8 stays exact either way).
+The contract is UNCONDITIONAL on stream length: `_fused_call` never
+shrinks the requested `tile_m` (a stream shorter than one tile pads the
+tile out exactly like serve's full-tile buckets do), so the offline call
+tiles identically to the serve launches even for micro-streams — it once
+clamped `tile_m` to the stream's positions, which changed the tile-column
+op shapes and cost micro-streams 1–2 ULP vs serve
+(`tests/test_net.py::test_wire_micro_stream_lengths_bitwise` regresses
+the fix).
 """
 from __future__ import annotations
 

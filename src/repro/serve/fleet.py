@@ -482,6 +482,10 @@ class FleetRuntime:
                     chunk spans survive migration because every worker
                     stamps into the same tracer). Default None = private
                     hub, tracing off.
+    link:           optional `repro.obs.LinkMonitor` — every tenant opened
+                    on the fleet is auto-attached for streaming EVM/SNR/SER
+                    estimation; pair with `attach_slo` to fold quality
+                    breaches into worker health.
 
     Thread-safety: public methods may be called from any thread; per-
     tenant calls must not race each other (one producer per stream).
@@ -500,11 +504,14 @@ class FleetRuntime:
                  fault_plan: Optional[FaultPlan] = None,
                  straggler: Optional[StragglerConfig] = None,
                  devices: Optional[list] = None,
-                 obs: Optional[Observability] = None):
+                 obs: Optional[Observability] = None,
+                 link=None):
         self.policy = policy or BatchPolicy()
         self.max_engines = max_engines
         self.clock = clock
         self.obs = obs if obs is not None else Observability(clock=clock)
+        self.link = link
+        self._slo = None               # SloEngine, via attach_slo()
         self.launch_retries = launch_retries
         self.launch_deadline_s = launch_deadline_s
         self.recovery = (recovery if recovery is not None
@@ -590,6 +597,8 @@ class FleetRuntime:
                 self._placekeys[spec.tenant_id] = key
                 w.tenants.add(spec.tenant_id)
                 w.groups[key] += 1
+            if self.link is not None:
+                self.link.attach(s)
             return s
 
     def close(self, tenant_id: str) -> np.ndarray:
@@ -711,6 +720,26 @@ class FleetRuntime:
         with self._state:
             return self._sessions[tenant_id].output()
 
+    @property
+    def sessions(self) -> Dict[str, Session]:
+        """Live sessions by tenant id (snapshot) — the same lookup shape
+        `ServeRuntime.sessions` offers, so layers that need a session
+        (the net ingress trace push, adapters) work against a fleet too."""
+        with self._state:
+            return dict(self._sessions)
+
+    def attach_slo(self, slo) -> None:
+        """Fold an `SloEngine`'s per-tenant quality verdicts into fleet
+        health: `stats()` workers gain a `slo_breached` tenant list (next
+        to the launch-latency straggler verdict) and the registry a
+        `fleet.slo_breached` placement callback, so a worker serving
+        quality-degraded tenants is visible fleet-wide."""
+        self._slo = slo
+        self.obs.scope("fleet").callback(
+            "slo_breached", lambda: {
+                tid: w.idx for tid, w in self._homes.items()
+                if tid in set(self._slo.breached_tenants())})
+
     # -- accounting --------------------------------------------------------
 
     def stats(self) -> Dict:
@@ -722,7 +751,12 @@ class FleetRuntime:
         is the normalized superset; see docs/OBSERVABILITY.md for the
         key map. `errors` counts every error ever recorded (lifetime
         total, NOT the bounded deque length); `errors_total` is the
-        schema-normalized alias shared with `AsyncServeRuntime`."""
+        schema-normalized alias shared with `AsyncServeRuntime`.
+        With an `attach_slo`'d engine, each worker also lists its
+        resident tenants holding a latched SLO breach (`slo_breached`) —
+        quality degradation sits next to the straggler verdict."""
+        breached = (set(self._slo.breached_tenants())
+                    if self._slo is not None else set())
         with self._state:
             workers = []
             for w in self.workers:
@@ -736,6 +770,7 @@ class FleetRuntime:
                     "consecutive_failures": w.consecutive_failures,
                     "recovery": w.stats.as_dict(),
                     "health": w.monitor.summary(),
+                    "slo_breached": sorted(w.tenants & breached),
                     "traffic": w.batcher.traffic_stats(),
                     "pool": w.pool.stats(),
                     "pending": w.batcher.pending(),

@@ -230,6 +230,9 @@ class ServeRuntime:
                   `rt.obs.snapshot()` is the normalized telemetry tree —
                   `stats()` stays as a thin legacy wrapper (key map in
                   docs/OBSERVABILITY.md).
+    link:         optional `repro.obs.LinkMonitor` — every tenant opened on
+                  this runtime is auto-attached for streaming EVM/SNR/SER
+                  estimation (``link.<tenant>.*`` in the obs registry).
     """
 
     def __init__(self, policy: Optional[BatchPolicy] = None,
@@ -237,8 +240,10 @@ class ServeRuntime:
                  clock: Callable[[], float] = time.perf_counter,
                  fault_plan: Optional[FaultPlan] = None,
                  sentinel_limit: Optional[float] = None,
-                 obs: Optional[Observability] = None):
+                 obs: Optional[Observability] = None,
+                 link=None):
         self.obs = obs if obs is not None else Observability(clock=clock)
+        self.link = link
         self.sessions = SessionManager(
             max_engines=max_engines,
             swap_log_max=self.obs.retention.swap_log)
@@ -254,8 +259,11 @@ class ServeRuntime:
         """Admit a tenant: build (or pool-hit) its engine, start a stream.
         Raises ValueError if the tenant_id is already open. Specs with
         tile_m="auto" may receive a serve-aware tile (see `_serve_tile`)."""
-        return self.sessions.open(
+        session = self.sessions.open(
             spec, tile_tuner=lambda e: _serve_tile(self.batcher, e))
+        if self.link is not None:
+            self.link.attach(session)
+        return session
 
     def close(self, tenant_id: str) -> np.ndarray:
         """End a tenant's stream: flush the receptive-field tail, launch
@@ -418,10 +426,15 @@ class AsyncServeRuntime:
                  straggler: Optional[StragglerConfig] = None,
                  degrade_on_slow: bool = False,
                  shed_count: int = 1,
-                 obs: Optional[Observability] = None):
+                 obs: Optional[Observability] = None,
+                 link=None):
         if queue_depth < 1:
             raise ValueError("queue_depth must be ≥ 1")
         self.obs = obs if obs is not None else Observability(clock=clock)
+        # optional LinkMonitor — tenants auto-attach at open (see
+        # ServeRuntime); the tap runs in descatter under _lock, and
+        # LinkMonitor.observe is itself locked, so it is thread-safe here
+        self.link = link
         self.sessions = SessionManager(
             max_engines=max_engines,
             swap_log_max=self.obs.retention.swap_log)
@@ -505,8 +518,11 @@ class AsyncServeRuntime:
         host-side progress for the sweep duration."""
         with self._lock:
             self._check_running()
-            return self.sessions.open(
+            session = self.sessions.open(
                 spec, tile_tuner=lambda e: _serve_tile(self.batcher, e))
+            if self.link is not None:
+                self.link.attach(session)
+            return session
 
     def close(self, tenant_id: str) -> np.ndarray:
         """End a tenant's stream: flush the tail, launch ONLY this tenant's

@@ -289,6 +289,13 @@ class MicroBatcher:
         if span is not None:                       # tracing on: the span
             span.stamp("submit", req.t_submit)     # rides the plan from
             plan.span = span                       # here to emit/seal
+            # cross-wire propagation: contexts the net ingress queued for
+            # this tenant (v2 DATA frames) become span events, so the
+            # Chrome lane starts at the client's send timestamp
+            while session.trace_ctx:
+                tid_, t_client, t_ingress = session.trace_ctx.popleft()
+                span.event("client_send", t_client, trace_id=tid_)
+                span.event("net_ingress", t_ingress, trace_id=tid_)
         key = session.engine.group_key()
         self._groups.setdefault(key, []).append(req)
         return req

@@ -19,7 +19,8 @@ lifetime.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional
+from collections import deque
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -32,6 +33,26 @@ from .pool import EnginePool
 # a tile_tuner maps a freshly built engine to a tile width (or None to keep
 # the engine's own single-stream autotune choice)
 TileTuner = Callable[[EqualizerEngine], Optional[int]]
+
+
+class TapChain:
+    """Fan-out for the `Session.tap` seam: several consumers (adaptation
+    collector, link-quality monitor, tests) observe the SAME descatter
+    callback, in registration order. A plain callable, so every existing
+    `session.tap(...)` call site works unchanged; exceptions propagate
+    (a broken tap must be loud, exactly like a broken single tap)."""
+
+    __slots__ = ("taps",)
+
+    def __init__(self, taps: Optional[List[Callable]] = None) -> None:
+        self.taps: List[Callable] = list(taps or [])
+
+    def __call__(self, rx: np.ndarray, soft_syms: np.ndarray) -> None:
+        for fn in self.taps:
+            fn(rx, soft_syms)
+
+    def __len__(self) -> int:
+        return len(self.taps)
 
 
 @dataclasses.dataclass
@@ -192,6 +213,12 @@ class Session:
         self.rolled_back = False
         # online-adaptation hooks (see class docstring)
         self.tap: Optional[Callable[[np.ndarray, np.ndarray], None]] = None
+        # cross-wire trace context: (trace_id, t_client, t_ingress) tuples
+        # pushed by the net ingress when a DATA frame carried the v2 trace
+        # extension, drained into the next chunk span at enqueue. Bounded:
+        # with tracing off nothing drains, so a rude flood must not grow
+        # host memory (oldest context drops — ids are best-effort hints)
+        self.trace_ctx: Deque[Tuple[int, float, float]] = deque(maxlen=256)
         self.prev_spec: Optional[TenantSpec] = None
         self.swap_log: List[tuple] = [(spec.weight_epoch, 0)]
         self.swap_log_max = (self.SWAP_LOG_MAX if swap_log_max is None
@@ -237,9 +264,21 @@ class Session:
         s.shed = self.shed
         s.rolled_back = self.rolled_back
         s.tap = self.tap
+        s.trace_ctx = deque(self.trace_ctx, maxlen=self.trace_ctx.maxlen)
         s.prev_spec = self.prev_spec
         s.swap_log = list(self.swap_log)
         return s
+
+    def add_tap(self, fn: Callable[[np.ndarray, np.ndarray], None]) -> None:
+        """Register an additional descatter tap, composing with whatever is
+        already installed (the adaptation collector claims the slot first
+        when both are wired; taps run in registration order)."""
+        if self.tap is None:
+            self.tap = fn
+        elif isinstance(self.tap, TapChain):
+            self.tap.taps.append(fn)
+        else:
+            self.tap = TapChain([self.tap, fn])
 
     @property
     def weight_epoch(self) -> int:

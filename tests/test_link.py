@@ -1,0 +1,268 @@
+"""Link-quality estimators + SLO engine (repro.obs.link / repro.obs.slo).
+
+  * estimator correctness: decision-directed EVM/SNR/SER on synthetic
+    M-PAM constellations at KNOWN SNR (tight at high SNR where decisions
+    are near-perfect, loose at low SNR where DD bias appears), windowed
+    vs lifetime views, the confidence histogram's boundary sensitivity;
+  * SLO hysteresis units: breach latch only after `patience` consecutive
+    breaching evaluations, clear edge symmetric, the min-samples guard
+    freezing cold streams, NO alert thrash on a metric oscillating
+    around the threshold, `resolve()` retiring latches out-of-band;
+  * the closed loop in miniature: breach edge → `on_breach` hook →
+    resolve, with the ledger recording every edge;
+  * tap fan-out: `LinkMonitor.attach` composes with an
+    `OnlineAdapter` collector on the same session tap, and serving with
+    both attached stays bitwise-equal to offline;
+  * the `repro.obs.report` CLI rendering `link`/`slo`/`net` subtrees
+    from a written snapshot.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.adapt import AdaptPolicy, FineTuneConfig, OnlineAdapter
+from repro.core import equalizer as eq
+from repro.obs import LinkMonitor, Observability, SloEngine, SloRule
+from repro.obs.link import pam_amplitudes, pam_ser
+from repro.obs.report import main as report_main
+from repro.serve import BatchPolicy, ServeRuntime, TenantSpec
+
+pytestmark = pytest.mark.link
+
+CFG = eq.CNNEqConfig()
+
+
+def _pam_stream(levels, snr_db, n, seed=0):
+    """Unit-power M-PAM symbols in AWGN at exactly the requested SNR."""
+    rng = np.random.default_rng(seed)
+    amps = pam_amplitudes(levels)
+    tx = amps[rng.integers(0, levels, n)]
+    sigma = 10.0 ** (-snr_db / 20.0)        # Es = 1 by construction
+    return tx + rng.normal(0.0, sigma, n), tx
+
+
+# ---------------------------------------------------------------------------
+# estimators
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("levels,snr_db,tol_db", [
+    (4, 20.0, 0.3),     # decisions near-perfect: estimate ~unbiased
+    (2, 14.0, 0.3),
+    (2, 10.0, 0.6),     # mild DD bias allowed
+])
+def test_dd_snr_estimate_matches_truth(levels, snr_db, tol_db):
+    obs = Observability()
+    link = LinkMonitor(obs)
+    link.watch("t", levels)
+    y, _ = _pam_stream(levels, snr_db, 20_000)
+    link.observe("t", y)
+    est = link.estimate("t")
+    assert abs(est.snr_db_lifetime - snr_db) < tol_db
+    # EVM is the same ratio in amplitude units
+    assert abs(est.evm_lifetime - 10.0 ** (-est.snr_db_lifetime / 20.0)) < 1e-9
+    # the SER proxy agrees with the analytic M-PAM curve at the
+    # estimated SNR (measured sigma vs the SNR-ratio form differ only by
+    # the finite-sample decided-power factor, which the Q-tail amplifies)
+    ser_ref = pam_ser(10.0 ** (est.snr_db_lifetime / 10.0), levels)
+    assert est.ser_proxy_lifetime == pytest.approx(ser_ref, rel=0.1)
+    # gauges mirror the readout
+    assert obs.registry.instrument("link.t.snr_db").value == est.snr_db
+
+
+def test_windowed_vs_lifetime_views():
+    obs = Observability()
+    link = LinkMonitor(obs, window=4096)
+    link.watch("t", 2)
+    hi, _ = _pam_stream(2, 20.0, 8192, seed=1)
+    lo, _ = _pam_stream(2, 8.0, 4096, seed=2)
+    link.observe("t", hi)
+    link.observe("t", lo)
+    est = link.estimate("t")
+    # the window now holds only the degraded tail; lifetime blends both
+    assert abs(est.snr_db - 8.0) < 1.0
+    assert est.snr_db < est.snr_db_lifetime < 20.0
+    assert est.syms == 8192 + 4096
+
+
+def test_confidence_histogram_sees_boundary_symbols():
+    obs = Observability()
+    link = LinkMonitor(obs)
+    link.watch("t", 2)
+    amps = pam_amplitudes(2)
+    link.observe("t", np.repeat(amps, 64))            # on-grid: margin 1
+    clean = obs.registry.instrument("link.t.confidence").window_mean()
+    assert clean == pytest.approx(1.0)
+    link.observe("t", np.zeros(128))                  # boundary: margin 0
+    mixed = obs.registry.instrument("link.t.confidence").window_mean()
+    assert mixed == pytest.approx(0.5, abs=0.05)
+
+
+def test_observe_unwatched_tenant_raises():
+    link = LinkMonitor(Observability())
+    with pytest.raises(KeyError):
+        link.observe("ghost", np.ones(4))
+    with pytest.raises(ValueError):
+        link.watch("t", levels=1)
+
+
+# ---------------------------------------------------------------------------
+# SLO hysteresis
+# ---------------------------------------------------------------------------
+
+def _engine_with_gauge(patience=3, threshold=10.0, **rule_kw):
+    obs = Observability()
+    g = obs.registry.gauge("q.value")
+    slo = SloEngine(obs, rules=(SloRule(
+        "floor", "q.value", threshold=threshold, direction="below",
+        patience=patience, **rule_kw),))
+    return obs, g, slo
+
+
+def test_breach_latches_only_after_patience():
+    _, g, slo = _engine_with_gauge(patience=3)
+    g.set(5.0)
+    assert slo.step() == [] and slo.step() == []
+    edges = slo.step()                       # third consecutive breach
+    assert [e["state"] for e in edges] == ["breach"]
+    assert slo.breached() == ["floor"]
+    assert slo.step() == []                  # latched: no repeat edges
+
+
+def test_clear_edge_after_patience_clean():
+    _, g, slo = _engine_with_gauge(patience=2)
+    g.set(5.0)
+    slo.step(), slo.step()
+    assert slo.breached() == ["floor"]
+    g.set(15.0)
+    assert slo.step() == []
+    edges = slo.step()
+    assert [e["state"] for e in edges] == ["clear"]
+    assert slo.breached() == []
+    states = [a["state"] for a in slo.alerts]
+    assert states == ["breach", "clear"]
+
+
+def test_oscillating_metric_never_thrashes():
+    _, g, slo = _engine_with_gauge(patience=2)
+    for v in (5.0, 15.0) * 8:                # flips every evaluation
+        g.set(v)
+        assert slo.step() == []
+    assert slo.breached() == [] and len(slo.alerts) == 0
+
+
+def test_min_samples_guard_freezes_cold_streams():
+    obs = Observability()
+    g = obs.registry.gauge("q.value")
+    n = obs.registry.counter("q.n")
+    slo = SloEngine(obs, rules=(SloRule(
+        "floor", "q.value", threshold=10.0, patience=1,
+        min_samples=100, samples="q.n"),))
+    g.set(5.0)
+    assert slo.step() == [] and slo.breached() == []   # cold: not judged
+    n.inc(100)
+    assert [e["state"] for e in slo.step()] == ["breach"]
+
+
+def test_rule_validation():
+    with pytest.raises(ValueError):
+        SloRule("r", "m", 1.0, direction="sideways")
+    with pytest.raises(ValueError):
+        SloRule("r", "m", 1.0, patience=0)
+    obs = Observability()
+    slo = SloEngine(obs, rules=(SloRule("r", "m", 1.0),))
+    with pytest.raises(ValueError):
+        slo.add_rule(SloRule("r", "m2", 2.0))          # duplicate name
+
+
+def test_tenant_rule_breach_hook_and_resolve():
+    obs = Observability(tracing=True)
+    slo = SloEngine(obs)
+    requests = []
+    slo.on_breach = lambda tenant, rule, value: requests.append(tenant)
+    slo.add_rule(SloRule("snr_floor", "link.{tenant}.snr_db",
+                         threshold=12.0, patience=2))
+    link = LinkMonitor(obs, slo=slo)         # steps the engine per segment
+    link.watch("a", 2)
+    good, _ = _pam_stream(2, 20.0, 2048, seed=3)
+    bad, _ = _pam_stream(2, 6.0, 2048, seed=4)
+    link.observe("a", good)
+    link.observe("a", good)
+    assert slo.breached("a") == [] and requests == []
+    link.observe("a", bad)                   # window still mostly clean
+    link.observe("a", bad)
+    link.observe("a", bad)
+    assert slo.breached("a") == ["snr_floor"]
+    assert requests == ["a"]                 # the closed-loop seam fired
+    # promotion path: resolve retires the latch without patience waiting
+    assert slo.resolve("a", reason="promoted") == 1
+    assert slo.breached("a") == []
+    states = [a["state"] for a in slo.alerts]
+    assert states == ["breach", "resolved"]
+    assert slo.alerts[-1]["reason"] == "promoted"
+    # and the snapshot carries the ledger + latch states
+    snap = obs.snapshot()
+    assert snap["slo"]["state"]["alerts_total"] == 2
+    assert snap["slo"]["state"]["latches"]["snr_floor[a]"]["breached"] \
+        is False
+
+
+# ---------------------------------------------------------------------------
+# tap fan-out on a live session
+# ---------------------------------------------------------------------------
+
+def test_link_and_collector_share_the_tap_bitwise():
+    params = eq.init(jax.random.PRNGKey(0), CFG)
+    bn = eq.init_bn_state(CFG)
+    spec = TenantSpec("t", CFG, params=params, bn_state=bn,
+                      backend="fused_fp32", tile_m=16)
+    rng = np.random.default_rng(9)
+    wave = rng.standard_normal(240 * CFG.n_os).astype(np.float32)
+
+    import jax.numpy as jnp
+    offline = np.asarray(spec.build_engine()(jnp.asarray(wave[None])))[0]
+
+    obs = Observability(tracing=True)
+    link = LinkMonitor(obs)
+    rt = ServeRuntime(BatchPolicy(max_batch=1, max_wait_s=1e9),
+                      obs=obs, link=link)
+    adapter = OnlineAdapter(rt, AdaptPolicy(), FineTuneConfig())
+    adapter.attach(spec)                     # collector tap + link tap
+    rt.submit("t", wave)
+    out = rt.close("t")
+    # both consumers observed the stream, and observation changed nothing
+    assert link.estimate("t").syms == out.shape[0]
+    assert adapter.collector("t").total_syms == out.shape[0]
+    assert np.array_equal(out, offline)
+
+
+# ---------------------------------------------------------------------------
+# report CLI over link / slo / net subtrees
+# ---------------------------------------------------------------------------
+
+def test_report_renders_link_slo_net(tmp_path, capsys):
+    obs = Observability()
+    slo = SloEngine(obs, rules=(SloRule(
+        "snr_floor", "link.{tenant}.snr_db", threshold=12.0, patience=1),))
+    link = LinkMonitor(obs, slo=slo)
+    link.watch("a", 2)
+    bad, _ = _pam_stream(2, 6.0, 1024, seed=5)
+    link.observe("a", bad)                   # breaches immediately
+    net = obs.scope("net")
+    net.counter("frames_in").inc(7)
+    net.counter("frames_out").inc(6)
+    net.counter("nacks_sent").inc(2)
+    net.histogram("ingress_to_emit_s").observe(0.01)
+
+    path = tmp_path / "snap.json"
+    obs.write_snapshot(str(path))
+    assert report_main([str(path)]) == 0
+    text = capsys.readouterr().out
+    assert "[net]" in text and "nacks_sent=2" in text
+    assert "ingress_to_emit_s" in text
+    assert "[link]" in text and "snr_db=" in text and "lifetime:" in text
+    assert "[slo]" in text and "BREACHED snr_floor[a]" in text
+    assert "ledger (recent):" in text and "breach" in text
+    # the snapshot round-trips as plain JSON (exportability contract)
+    json.loads(path.read_text())

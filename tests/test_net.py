@@ -71,12 +71,6 @@ def _offline(spec: TenantSpec, wave: np.ndarray) -> np.ndarray:
 
 
 def _wave(seed: int, n_syms: int = 480) -> np.ndarray:
-    # NOTE 480 (= 15 tiles at tile_m=32), matching bench_net: the serve
-    # chunker's bitwise-vs-offline contract has a known shape nuance on
-    # some final-partial-tile stream lengths (1-2 ULP in the last tile's
-    # end-padding positions, pre-existing, engine-level, tracked in
-    # ROADMAP) — the wire layer must be tested on lengths where the
-    # underlying chunked==offline equality actually holds.
     rng = np.random.default_rng(seed)
     return rng.standard_normal(n_syms * CFG.n_os).astype(np.float32)
 
@@ -281,6 +275,65 @@ def test_wire_bitwise_exactly_once_reorder_dup(loopback_wire):
         got = client.symbols(s.tenant_id)
         np.testing.assert_array_equal(got, _offline(s, waves[s.tenant_id]))
     assert net["gaps"] == 0 and net["crc_errors"] == 0
+
+
+def test_wire_micro_stream_lengths_bitwise(loopback_wire):
+    """Stream lengths around (and under) one tile_m=32 tile — including
+    240 syms = 30 positions, historically 1-2 ULP off offline until the
+    offline path stopped shrinking its tile below the requested tile_m.
+    The wire contract (#12) is now unconditional in stream length."""
+    for i, n_syms in enumerate((240, 250, 264, 320)):
+        cli_t, srv_t = loopback_wire(seed=40 + i, reorder_window=2,
+                                     dup_prob=0.2)
+        specs = [_spec("f32", 100), _spec("i8", 101, "fused_int8")]
+        waves = {s.tenant_id: _wave(360 + i, n_syms=n_syms) for s in specs}
+        rt = ServeRuntime(BatchPolicy(max_batch=2, max_wait_s=1e9))
+        gw, client, acct = _run_wire(rt, cli_t, srv_t, specs, waves)
+        assert not acct["errors"]
+        for s in specs:
+            np.testing.assert_array_equal(
+                client.symbols(s.tenant_id),
+                _offline(s, waves[s.tenant_id]),
+                err_msg=f"n_syms={n_syms} backend={s.backend}")
+
+
+def test_wire_trace_propagation_client_to_emit(loopback_wire):
+    """v2 DATA frames carry (trace_id, t_client); the ingress queues the
+    context on the session and the next chunk span starts at the client:
+    every sealed span shows client_send/net_ingress events, the Chrome
+    export gains a "wire" slice, and a version-1-only decoder rejects the
+    extended frames loudly (total-decode contract)."""
+    from repro.obs import Observability
+    cli_t, srv_t = loopback_wire(seed=45, impair_both=False)
+    spec = _spec("tr", 107)
+    wave = _wave(370, n_syms=480)
+    obs = Observability(tracing=True)
+    rt = ServeRuntime(BatchPolicy(max_batch=1, max_wait_s=1e9), obs=obs)
+    gw = NetGateway(rt, srv_t)
+    client = NetClient(cli_t, tracing=True, clock=obs.clock)
+    _attach(rt, gw, client, spec)
+    acct = replay_wire(gw, client, {"tr": chop(wave, CHUNK, seed=0)},
+                       burst=4)
+    assert not acct["errors"]
+    np.testing.assert_array_equal(client.symbols("tr"),
+                                  _offline(spec, wave))
+    spans = obs.tracer.sealed_spans("tr")
+    assert spans, "tracing on but no sealed spans"
+    names = [n for s in spans for n, _, _ in s.events]
+    assert "client_send" in names and "net_ingress" in names
+    # every client frame's context landed on exactly one span
+    n_ctx = sum(1 for n in names if n == "client_send")
+    assert n_ctx == client.streams["tr"].tx_seq - 1   # DATA frames only
+    # each context's send precedes its span's submit → a "wire" slice
+    chrome = obs.tracer.export_chrome("tr")["traceEvents"]
+    assert any(e["name"] == "wire" and e["ph"] == "X" for e in chrome)
+    # an old (v1-only) decoder must reject the extended frames LOUDLY
+    data = encode_frame(FrameType.DATA, "tr", 0, b"abcd",
+                        dtype=WireDtype.FP32, trace_id=9, t_client=0.5)
+    with pytest.raises(BadVersion):
+        decode_frame(data, versions=(1,))
+    f = decode_frame(data)                  # current decoder: fine
+    assert f.trace_id == 9 and f.t_client == 0.5
 
 
 def test_wire_bf16_tenant_parity(loopback_wire):
